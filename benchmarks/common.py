@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: the paper's six kernels as workload specs.
+
+Each kernel gets (a) a runnable jnp/ops implementation for measured-on-CPU
+mechanism checks, and (b) an analytic KernelCost at PRODUCTION size for the
+v5e performance model (this container has one CPU core — wall-clock cannot
+express fabric scaling; see repro.core.perfmodel docstring).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import KernelCost
+
+# production-size analytic costs (global FLOPs / HBM bytes per invocation);
+# sized so one invocation runs ~5-30 ms on a 256-chip pod — large enough that
+# the 30 µs dispatch / 100 µs barrier constants are the paper-like few-%
+# effect, not the dominant term.
+PAPER_KERNELS: dict[str, KernelCost] = {
+    # C = A@B: (8·32k) × 32k × 32k bf16
+    "fmatmul": KernelCost(
+        "fmatmul", flops=2 * 8 * 32768**3, hbm_bytes=(2 * 8 + 1) * 32768**2 * 2
+    ),
+    # conv2d: 2048×512×512×256 -> 256 out ch, 3x3
+    "fconv2d": KernelCost(
+        "fconv2d",
+        flops=2 * 2048 * 510 * 510 * 256 * 256 * 9,
+        hbm_bytes=2 * (2048 * 512 * 512 * 256 + 2048 * 510 * 510 * 256),
+    ),
+    # batched FFT: 2^19 rows of 16k points (5 N log2 N real flops per row)
+    "fft": KernelCost(
+        "fft",
+        flops=2**19 * 5 * 16384 * 14,
+        hbm_bytes=2 * 2**19 * 16384 * 8,
+    ),
+    # dotp over 2^37 elements
+    "dotp": KernelCost("dotp", flops=2 * 2**37, hbm_bytes=2 * 2**37 * 4),
+    # axpy over 2^36 elements
+    "axpy": KernelCost("axpy", flops=2 * 2**36, hbm_bytes=3 * 2**36 * 4),
+    # softmax over 2^25 rows × 4k cols
+    "softmax": KernelCost(
+        "softmax", flops=5 * 2**25 * 4096, hbm_bytes=2 * 2**25 * 4096 * 2
+    ),
+}
+
+
+def measured_kernels(scale: int = 256) -> dict[str, Callable[[], None]]:
+    """Tiny runnable versions (CPU mechanism checks). Each returns a thunk
+    that executes one jitted invocation and blocks."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((scale, scale)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((scale, scale)), jnp.float32)
+    img = jnp.asarray(rng.standard_normal((2, 32, 32, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 16, 16)), jnp.float32)
+    vec = jnp.asarray(rng.standard_normal(scale * scale), jnp.float32)
+    re = jnp.asarray(rng.standard_normal((64, 512)), jnp.float32)
+    im = jnp.zeros((64, 512), jnp.float32)
+    sm = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+
+    from repro.kernels import ref
+
+    fns = {
+        "fmatmul": jax.jit(lambda: ref.matmul(a, b)),
+        "fconv2d": jax.jit(lambda: ref.conv2d(img, w)),
+        "fft": jax.jit(lambda: ref.fft(re, im)),
+        "dotp": jax.jit(lambda: ref.dotp(vec, vec)),
+        "axpy": jax.jit(lambda: ref.axpy(2.0, vec, vec)),
+        "softmax": jax.jit(lambda: ref.softmax(sm)),
+    }
+    return {k: (lambda f=f: jax.block_until_ready(f())) for k, f in fns.items()}
+
+
+def time_thunk(thunk: Callable[[], None], repeats: int = 5) -> float:
+    thunk()  # warmup
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        thunk()
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,108 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+benchmarks/results/dryrun.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load() -> list[dict]:
+    with open(RESULTS) as f:
+        return [json.loads(line) for line in f]
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compile (s) | peak GB/dev | TPU-adj GB | HLO collectives (per-dev MB) | strategy |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — | {r.get('error','')[:60]} | — |"
+            )
+            continue
+        colls = ", ".join(
+            f"{k.split('-')[1] if '-' in k else k}:{v/2**20:.0f}"
+            for k, v in sorted(r["collectives_raw"].items())
+        ) or "none"
+        strat = r.get("strategy", "tp")
+        if r.get("fsdp") and strat == "tp":
+            strat = "tp+fsdp"
+        if r.get("grad_accum", 1) > 1:
+            strat += f",acc{r['grad_accum']}"
+        if "float8" in r.get("kv_cache_dtype", ""):
+            strat += ",kv-f8"
+        adj = r["mem"].get("tpu_adjusted_peak_bytes", r["mem"]["peak_bytes"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{fmt_bytes(r['mem']['peak_bytes'])} | {fmt_bytes(adj)} | {colls} | {strat} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    out = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound | step (ms) | useful | MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or r["mesh"] != mesh:
+            continue
+        a = r["analytic"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {a['t_compute']*1e3:.2f} | "
+            f"{a['t_memory']*1e3:.2f} | {a['t_collective']*1e3:.2f} | "
+            f"**{a['bottleneck']}** | {a['step_time']*1e3:.2f} | "
+            f"{a['usefulness']:.2f} | {a['mfu']*100:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+def summary(recs: list[dict]) -> str:
+    ok = [r for r in recs if r.get("ok")]
+    lines = [f"- cells compiled OK: **{len(ok)}/{len(recs)}**"]
+    over = [
+        f"{r['arch']}/{r['shape']}/{r['mesh']} ({fmt_bytes(r['mem']['peak_bytes'])} GB)"
+        for r in ok
+        if r["mem"]["peak_bytes"] > 16e9
+    ]
+    lines.append(
+        f"- cells above the 16 GB v5e HBM budget: {len(over)}"
+        + (": " + "; ".join(over) if over else "")
+    )
+    trains = [r for r in ok if r["kind"] == "train" and r["mesh"] == "16x16"]
+    if trains:
+        mfus = [r["analytic"]["mfu"] for r in trains]
+        lines.append(
+            f"- single-pod train-cell MFU: mean {100*sum(mfus)/len(mfus):.1f}%, "
+            f"min {100*min(mfus):.1f}%, max {100*max(mfus):.1f}%"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = load()
+    print("### Dry-run summary\n")
+    print(summary(recs))
+    print("\n### §Dry-run table (all cells, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n### §Roofline table (single-pod 16×16 baseline)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n### §Roofline table (multi-pod 2×16×16)\n")
+    print(roofline_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

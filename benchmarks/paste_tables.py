@@ -1,0 +1,39 @@
+"""Paste the generated dry-run/roofline tables into EXPERIMENTS.md at the
+<!-- DRYRUN_TABLES --> and <!-- ROOFLINE_TABLES --> markers."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.make_experiments_tables import (
+    dryrun_table,
+    load,
+    roofline_table,
+    summary,
+)
+
+EXP = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "EXPERIMENTS.md")
+
+
+def main() -> None:
+    recs = load()
+    dry = (
+        summary(recs)
+        + "\n\n**All cells (both meshes):**\n\n"
+        + dryrun_table(recs)
+    )
+    roof = (
+        "**Single-pod (16×16) baseline — the §Roofline table:**\n\n"
+        + roofline_table(recs, "16x16")
+        + "\n\n**Multi-pod (2×16×16):**\n\n"
+        + roofline_table(recs, "2x16x16")
+    )
+    text = open(EXP).read()
+    text = text.replace("<!-- DRYRUN_TABLES -->", dry)
+    text = text.replace("<!-- ROOFLINE_TABLES -->", roof)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md updated,", len(recs), "records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Roofline table: per (arch × shape) terms from the dry-run JSONL.
+
+Reads benchmarks/results/dryrun.jsonl (produced by repro.launch.dryrun) and
+prints the single-pod baseline table + multi-pod summary. If the JSONL is
+missing, recomputes the ANALYTIC terms directly (no compile) so the bench
+always runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import all_cells, get_arch, get_shape
+from repro.roofline.analysis import RooflineTerms
+from repro.roofline.flops import count_cell
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def _terms_from_record(r: dict) -> RooflineTerms:
+    a = r["analytic"]
+    return RooflineTerms(
+        name=f"{r['arch']}/{r['shape']}",
+        chips=r["chips"],
+        flops=a["flops"],
+        hbm_bytes=a["hbm_bytes"],
+        coll_bytes=a["coll_bytes"],
+        model_flops=a["model_flops"],
+    )
+
+
+def _analytic_terms(arch: str, shape: str, multi: bool) -> RooflineTerms:
+    cfg, shp = get_arch(arch), get_shape(shape)
+    dp, tp = (32, 16) if multi else (16, 16)
+    c = count_cell(cfg, shp, dp=dp, tp=tp)
+    return RooflineTerms(
+        name=f"{arch}/{shape}",
+        chips=dp * tp,
+        flops=c.flops,
+        hbm_bytes=c.hbm_bytes,
+        coll_bytes=c.coll_bytes,
+        model_flops=c.model_flops,
+    )
+
+
+def load_terms() -> tuple[list[RooflineTerms], list[RooflineTerms], bool]:
+    single, multi = [], []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            for line in f:
+                r = json.loads(line)
+                if not r.get("ok"):
+                    continue
+                t = _terms_from_record(r)
+                (single if r["mesh"] == "16x16" else multi).append(t)
+        if single:
+            return single, multi, True
+    for arch, shape in all_cells():
+        single.append(_analytic_terms(arch, shape, False))
+        multi.append(_analytic_terms(arch, shape, True))
+    return single, multi, False
+
+
+def run(csv: bool = True) -> list[tuple[str, float, str]]:
+    single, multi, from_dryrun = load_terms()
+    rows = []
+    print(f"# roofline source: {'compiled dry-run' if from_dryrun else 'analytic only'}")
+    print("#", RooflineTerms.header())
+    for t in single:
+        print("#", t.row())
+        rows.append(
+            (
+                f"roofline_{t.name.replace('/', '_')}_step_ms",
+                t.step_time * 1e3,
+                f"bound={t.bottleneck} MFU={t.mfu*100:.1f}% useful={t.usefulness:.2f}",
+            )
+        )
+    # aggregate scores
+    trains = [t for t in single if "train" in t.name]
+    if trains:
+        avg_mfu = sum(t.mfu for t in trains) / len(trains)
+        rows.append(("roofline_avg_train_MFU", avg_mfu, f"{len(trains)} train cells, single-pod"))
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

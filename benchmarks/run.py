@@ -1,0 +1,48 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (values are in the unit named in
+each row key; timings in ms/us as suffixed).
+
+  §1 kernels_modes   — Fig. 2 left: six kernels, baseline/SM/MM + energy
+  §2 mixed_workload  — Fig. 2 right: CoreMark ∥ vector kernels, MM speedup
+  §3 reconfig_cost   — PPA analogue: switch latency, indirection, programs
+  §4 roofline_bench  — §Roofline: per-cell terms from the dry-run artifact
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["kernels", "mixed", "reconfig", "roofline", "serving"]
+    print("name,value,derived")
+    if "kernels" in sections:
+        print("# --- Fig2-left: kernels under baseline/SM/MM (modeled v5e) ---")
+        from benchmarks.kernels_modes import run as k_run
+
+        k_run()
+    if "mixed" in sections:
+        print("# --- Fig2-right: mixed scalar-vector workload ---")
+        from benchmarks.mixed_workload import run as m_run
+
+        m_run()
+    if "reconfig" in sections:
+        print("# --- PPA analogue: reconfigurability cost ---")
+        from benchmarks.reconfig_cost import run as r_run
+
+        r_run()
+    if "roofline" in sections:
+        print("# --- Roofline per (arch x shape), single-pod baseline ---")
+        from benchmarks.roofline_bench import run as rf_run
+
+        rf_run()
+    if "serving" in sections:
+        print("# --- Serving: measured engine + modeled production decode ---")
+        from benchmarks.serving_bench import run as sv_run
+
+        sv_run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fault tolerance demo: train, kill a pod mid-run, shrink, restore, finish.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import Checkpointer
+from repro.core import SpatzformerCluster
+from repro.ft import run_elastic
+
+
+def main() -> None:
+    n = len(jax.devices())
+    pods = 2 if n >= 2 and n % 2 == 0 else 1
+    cluster = SpatzformerCluster(n_pods=pods)
+    print(f"starting fabric: {cluster}")
+
+    def make_state(info):
+        return {"w": jnp.zeros((64,)), "steps": jnp.int32(0)}
+
+    def step_factory(info):
+        print(f"  (re)compiling step for {info.n_devices} devices")
+
+        @jax.jit
+        def step(state, batch, _):
+            return {"w": state["w"] + batch["x"], "steps": state["steps"] + 1}
+
+        return lambda s, b, i: step(s, b, i)
+
+    batches = lambda i: {"x": jnp.full((64,), float(i))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = Checkpointer(d, keep=3)
+        fail_at = {12: 1} if pods == 2 else {}
+        state, report = run_elastic(
+            cluster, make_state, step_factory, batches, ckpt,
+            total_steps=25, ckpt_every=5, fail_at=fail_at,
+        )
+    print(f"finished: steps={report.steps_done} failures={report.failures} "
+          f"final_devices={report.final_devices} restarts={report.restarts}")
+    print(f"state check: steps counter={int(state['steps'])} "
+          f"(restored step replays from last checkpoint)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end training driver (deliverable b): data pipeline → sharded
+train loop → async checkpointing → restart, on a real (small) LM.
+
+Defaults are CPU-sized (~1.3M params, 120 steps, loss visibly drops on the
+structured synthetic corpus). ``--preset 100m`` selects a ~100M-param config
+(96 steps/ckpt interval etc. unchanged) for real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --resume
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import Checkpointer
+from repro.configs import TrainConfig, get_arch
+from repro.data import DataConfig, PrefetchLoader, SyntheticCorpus
+from repro.models import LM
+from repro.train import adamw_init, make_train_step
+
+
+def build_cfg(preset: str):
+    base = get_arch("codeqwen1.5-7b")
+    if preset == "tiny":
+        return base.reduced()
+    # ~100M: 12L × 768, the classic small-LM shape
+    return dataclasses.replace(
+        base.reduced(),
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_head=64,
+        d_ff=3072,
+        vocab_size=32768,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    model = LM(cfg)
+    print(f"training {cfg.name} ({cfg.num_params():,} params) "
+          f"for {args.steps} steps @ batch={args.batch} seq={args.seq}")
+
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 3),
+                       total_steps=args.steps)
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        (params, opt), start = ckpt.restore(jax.eval_shape(lambda: (params, opt)))
+        print(f"resumed at step {start}")
+
+    corpus = SyntheticCorpus(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
+    loader = PrefetchLoader(corpus, start_step=start)
+
+    t0 = time.time()
+    first_loss = None
+    for i in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, next(loader))
+        params, opt, m = step(params, opt, batch)
+        if first_loss is None:
+            first_loss = float(m["loss"])
+        if (i + 1) % 10 == 0:
+            rate = args.batch * args.seq * (i + 1 - start) / (time.time() - t0)
+            print(f"step {i+1:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} tok/s={rate:,.0f}", flush=True)
+        if (i + 1) % 40 == 0:
+            ckpt.save(i + 1, (params, opt))  # async
+    ckpt.save(args.steps, (params, opt), blocking=True)
+    final = float(m["loss"])
+    print(f"loss {first_loss:.3f} -> {final:.3f} "
+          f"({'DECREASED' if final < first_loss else 'no progress'}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import Checkpointer, SaveHandle
+
+__all__ = ["Checkpointer", "SaveHandle"]

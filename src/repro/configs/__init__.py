@@ -1,0 +1,50 @@
+"""Architecture/shape registry. Importing this package registers all archs."""
+
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+    all_cells,
+    applicable,
+    get_arch,
+    get_shape,
+    register_arch,
+)
+
+# Import every arch module for registration side effects.
+from repro.configs import (  # noqa: F401
+    chameleon_34b,
+    codeqwen15_7b,
+    deepseek_v2_lite_16b,
+    falcon_mamba_7b,
+    llama4_scout_17b,
+    minicpm3_4b,
+    mistral_large_123b,
+    musicgen_large,
+    qwen3_32b,
+    zamba2_2p7b,
+)
+
+ARCH_NAMES = tuple(sorted(ARCHS))
+
+__all__ = [
+    "ARCHS",
+    "ARCH_NAMES",
+    "SHAPES",
+    "ArchConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "all_cells",
+    "applicable",
+    "get_arch",
+    "get_shape",
+    "register_arch",
+]

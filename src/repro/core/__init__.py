@@ -1,0 +1,38 @@
+"""The paper's contribution: runtime-reconfigurable split/merge fabric."""
+
+from repro.core.cluster import SpatzformerCluster
+from repro.core.coremark import CoreMarkResult, coremark
+from repro.core.modes import Mode
+from repro.core.reconfigure import SwitchReport, reshard, switch_mode
+from repro.core.scheduler import (
+    MixedScheduler,
+    ScalarTask,
+    ScheduleReport,
+    VectorTask,
+)
+from repro.core.sync import (
+    TwoPhaseKernel,
+    fft2d_kernel,
+    matmul_chain_kernel,
+    run_merged,
+    run_split_staged,
+)
+
+__all__ = [
+    "SpatzformerCluster",
+    "Mode",
+    "MixedScheduler",
+    "VectorTask",
+    "ScalarTask",
+    "ScheduleReport",
+    "SwitchReport",
+    "reshard",
+    "switch_mode",
+    "coremark",
+    "CoreMarkResult",
+    "TwoPhaseKernel",
+    "fft2d_kernel",
+    "matmul_chain_kernel",
+    "run_merged",
+    "run_split_staged",
+]

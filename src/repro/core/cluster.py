@@ -1,0 +1,110 @@
+"""SpatzformerCluster: the reconfigurable device fabric.
+
+Owns the full ``(pod, data, model)`` mesh and exposes per-mode views:
+
+* :meth:`merge_info`  — one :class:`MeshInfo` over the fused mesh, with the
+  ``pod`` axis folded into the batch axes (``batch_axes=('pod', 'data')``).
+  This is the paper's merge mode: one controller, doubled vector length.
+* :meth:`split_infos` — one :class:`MeshInfo` per pod, each a standalone
+  ``(data, model)`` mesh over that pod's devices. This is split mode: every
+  pod is an independent vector unit with its own controller.
+
+The same object also models the *degraded* fabric for fault tolerance: losing
+a pod is exactly "SPLIT with one tenant" (``split_infos()[survivor]``), which
+is how :mod:`repro.ft.elastic` re-homes a job after a pod failure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.modes import Mode
+from repro.dist.sharding import MeshInfo
+
+
+def _auto_pod_shape(n: int) -> tuple[int, int]:
+    """Factor a pod's device count into (data, model) as square as possible."""
+    best = (n, 1)
+    for m in range(1, int(n**0.5) + 1):
+        if n % m == 0:
+            best = (n // m, m)
+    return best
+
+
+@dataclass
+class SpatzformerCluster:
+    """Reconfigurable multi-pod fabric.
+
+    Args:
+        n_pods: number of independent "vector units" (pods).
+        pod_shape: per-pod (data, model) mesh shape; inferred if None.
+        devices: explicit device list; defaults to ``jax.devices()``.
+    """
+
+    n_pods: int = 2
+    pod_shape: Optional[tuple[int, int]] = None
+    devices: Optional[Sequence] = None
+
+    def __post_init__(self) -> None:
+        devs = list(self.devices if self.devices is not None else jax.devices())
+        if len(devs) % self.n_pods:
+            raise ValueError(f"{len(devs)} devices not divisible into {self.n_pods} pods")
+        per_pod = len(devs) // self.n_pods
+        if self.pod_shape is None:
+            self.pod_shape = _auto_pod_shape(per_pod)
+        d, m = self.pod_shape
+        if d * m != per_pod:
+            raise ValueError(f"pod_shape {self.pod_shape} != {per_pod} devices/pod")
+        self._dev_grid = np.array(devs).reshape(self.n_pods, d, m)
+        self._merged_mesh = Mesh(self._dev_grid, ("pod", "data", "model"))
+        self._pod_meshes = [
+            Mesh(self._dev_grid[i], ("data", "model")) for i in range(self.n_pods)
+        ]
+        self.mode: Mode = Mode.SPLIT
+
+    # ------------------------------------------------------------------ views
+
+    @property
+    def n_devices(self) -> int:
+        return self._dev_grid.size
+
+    @property
+    def merged_mesh(self) -> Mesh:
+        return self._merged_mesh
+
+    def merge_info(self) -> MeshInfo:
+        return MeshInfo(self._merged_mesh, batch_axes=("pod", "data"))
+
+    def split_infos(self) -> list[MeshInfo]:
+        return [MeshInfo(m, batch_axes=("data",)) for m in self._pod_meshes]
+
+    def pod_info(self, pod: int) -> MeshInfo:
+        return self.split_infos()[pod]
+
+    def info_for(self, mode: Mode, pod: int = 0) -> MeshInfo:
+        return self.merge_info() if mode is Mode.MERGE else self.pod_info(pod)
+
+    # ------------------------------------------------------------------ mode
+
+    def set_mode(self, mode: Mode) -> None:
+        self.mode = mode
+
+    def surviving_cluster(self, dead_pod: int) -> "SpatzformerCluster":
+        """Elastic shrink: rebuild the fabric without one pod's devices."""
+        keep = [i for i in range(self.n_pods) if i != dead_pod]
+        devs = self._dev_grid[keep].reshape(-1).tolist()
+        return SpatzformerCluster(
+            n_pods=len(keep), pod_shape=self.pod_shape, devices=devs
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        d, m = self.pod_shape
+        return (
+            f"SpatzformerCluster(pods={self.n_pods}, pod=({d}x{m}), "
+            f"devices={self.n_devices}, mode={self.mode})"
+        )

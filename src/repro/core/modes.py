@@ -1,0 +1,24 @@
+"""Operational modes of the reconfigurable cluster (paper §II).
+
+* ``SPLIT``  — the fabric is partitioned on the ``pod`` axis into independent
+  sub-meshes ("vector units"), each driven by its own controller thread
+  ("scalar core"). Two vectorizable workloads proceed concurrently.
+* ``MERGE``  — one controller drives the fused fabric (the ``pod`` axis folds
+  into the data axes: doubled effective vector length); the freed controller
+  threads execute scalar/control tasks that overlap with device compute.
+
+The mode is a runtime property (paper: "the operational mode can also change
+at runtime") — see :mod:`repro.core.reconfigure` for the live-state reshard.
+"""
+
+from __future__ import annotations
+
+import enum
+
+
+class Mode(str, enum.Enum):
+    SPLIT = "split"
+    MERGE = "merge"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value

@@ -1,0 +1,225 @@
+"""Discrete-event performance model of the fabric (TPU v5e constants).
+
+Why this exists: the container running this reproduction has ONE physical
+CPU core, so wall-clock split-vs-merge comparisons cannot express fabric
+scaling (all XLA host devices time-slice the same core — "half the fabric"
+still gets the whole core). The paper's performance claims are therefore
+validated through a discrete-event model whose every input is either
+
+* a documented hardware constant (v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+  ~50 GB/s/link ICI, measured-order dispatch/barrier/PCIe constants), or
+* measured on this host (scalar-task seconds, exchange byte counts, program
+  launch counts taken from the real scheduler/sync code paths).
+
+The model executes the SAME schedules the real scheduler produces; only
+device-time is virtual. Benchmarks report both the modeled v5e numbers (the
+claim check) and the raw measured mechanism overheads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip and system constants (TPU v5e defaults)."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link (per chip, one direction)
+    launch_overhead: float = 30e-6  # host->device program dispatch
+    barrier_overhead: float = 100e-6  # host-mediated multi-controller barrier
+    pcie_bw: float = 16e9  # B/s host<->device staging (split-mode exchange)
+    # energy constants (used for the paper's energy-efficiency analogue)
+    pj_per_flop: float = 0.35  # ~0.35 pJ/bf16 FLOP at 12nm-class node
+    pj_per_hbm_byte: float = 60.0
+    pj_per_ici_byte: float = 30.0
+    j_per_launch: float = 5e-3  # host dispatch+fetch energy per program
+
+
+V5E = HardwareModel()
+
+
+@dataclass
+class KernelCost:
+    """Roofline-style cost of one device program (GLOBAL totals)."""
+
+    name: str
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float = 0.0  # bytes crossing chip boundaries on-device
+
+    def device_seconds(self, chips: int, hw: HardwareModel = V5E) -> float:
+        t_c = self.flops / (chips * hw.peak_flops)
+        t_m = self.hbm_bytes / (chips * hw.hbm_bw)
+        t_x = self.coll_bytes / (chips * hw.ici_bw)
+        return max(t_c, t_m, t_x)
+
+    def energy_j(self, hw: HardwareModel = V5E) -> float:
+        return (
+            self.flops * hw.pj_per_flop * 1e-12
+            + self.hbm_bytes * hw.pj_per_hbm_byte * 1e-12
+            + self.coll_bytes * hw.pj_per_ici_byte * 1e-12
+        )
+
+
+@dataclass
+class ModeledRun:
+    """Outcome of simulating one schedule."""
+
+    makespan: float
+    vector_busy: float
+    scalar_busy: float
+    launches: int
+    host_exchange_bytes: float
+    energy_j: float
+    detail: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# schedule-level models (mirror core.scheduler / core.sync exactly)
+# ---------------------------------------------------------------------------
+
+
+def model_vector_stream(
+    kernels: list[KernelCost], chips: int, hw: HardwareModel = V5E
+) -> tuple[float, float]:
+    """(seconds, energy) for a controller draining kernels on `chips` chips."""
+    t = 0.0
+    e = 0.0
+    for k in kernels:
+        t += hw.launch_overhead + k.device_seconds(chips, hw)
+        e += k.energy_j(hw) + hw.j_per_launch
+    return t, e
+
+
+def model_mixed_split(
+    kernels: list[KernelCost],
+    scalar_seconds: float,
+    chips_per_pod: int,
+    hw: HardwareModel = V5E,
+) -> ModeledRun:
+    """Paper's SM penalty case: scalar queue consumes controller-1 (its pod
+    idles); ALL vector work runs on pod-0's chips."""
+    t_vec, e = model_vector_stream(kernels, chips_per_pod, hw)
+    makespan = max(t_vec, scalar_seconds)
+    return ModeledRun(
+        makespan=makespan,
+        vector_busy=t_vec,
+        scalar_busy=scalar_seconds,
+        launches=len(kernels),
+        host_exchange_bytes=0.0,
+        energy_j=e,
+    )
+
+
+def model_mixed_merge(
+    kernels: list[KernelCost],
+    scalar_seconds: float,
+    total_chips: int,
+    hw: HardwareModel = V5E,
+    merge_coll_penalty: float = 0.0,
+) -> ModeledRun:
+    """MM: vector stream on the fused fabric; scalar work fully overlapped on
+    the freed controller. merge_coll_penalty: extra per-kernel collective
+    bytes for the pod-spanning axis (cross-pod DP sync), if any."""
+    adj = [
+        KernelCost(k.name, k.flops, k.hbm_bytes, k.coll_bytes + merge_coll_penalty)
+        for k in kernels
+    ]
+    t_vec, e = model_vector_stream(adj, total_chips, hw)
+    makespan = max(t_vec, scalar_seconds)
+    return ModeledRun(
+        makespan=makespan,
+        vector_busy=t_vec,
+        scalar_busy=scalar_seconds,
+        launches=len(kernels),
+        host_exchange_bytes=0.0,
+        energy_j=e,
+    )
+
+
+def model_staged_split(
+    phase: KernelCost,
+    rounds: int,
+    exchange_bytes: float,
+    chips_per_pod: int,
+    n_pods: int = 2,
+    hw: HardwareModel = V5E,
+    exchange_over: str = "ici",
+) -> ModeledRun:
+    """Split/baseline execution of a two-phase sync-bound kernel.
+
+    Per round: 2 × (per-pod phase program + barrier) + a host-orchestrated
+    corner-turn exchange. The pods ARE physically linked, so by default the
+    exchange program still moves bytes over ICI (``exchange_over='ici'``) —
+    but it is a SEPARATE launch per pod with barriers, and nothing overlaps
+    (phases, exchange, and sync serialize). ``exchange_over='pcie'`` models
+    the worst case where data is staged through the hosts (what
+    core.sync.run_split_staged literally does on this container).
+    """
+    total_chips = chips_per_pod * n_pods
+    per_phase = KernelCost(
+        phase.name, phase.flops / n_pods, phase.hbm_bytes / n_pods, 0.0
+    )
+    if exchange_over == "ici":
+        t_x = exchange_bytes / (total_chips * hw.ici_bw)
+        x_host_bytes = 0.0
+    else:
+        t_x = 2 * exchange_bytes / hw.pcie_bw
+        x_host_bytes = 2 * exchange_bytes
+    t = 0.0
+    e = 0.0
+    launches = 0
+    for _ in range(rounds):
+        for _ in range(2):  # phase_a, phase_b
+            t += hw.launch_overhead + per_phase.device_seconds(chips_per_pod, hw)
+            t += hw.barrier_overhead
+            launches += n_pods
+            e += phase.energy_j(hw) + n_pods * hw.j_per_launch
+        # two corner-turn exchange programs per round (turn + restore), each
+        # its own launch + barrier on both pods
+        t += 2 * (t_x + hw.launch_overhead + hw.barrier_overhead)
+        launches += 2 * n_pods
+        e += 2 * (
+            exchange_bytes * hw.pj_per_ici_byte * 1e-12 + n_pods * hw.j_per_launch
+        )
+    return ModeledRun(
+        makespan=t,
+        vector_busy=t,
+        scalar_busy=0.0,
+        launches=launches,
+        host_exchange_bytes=2 * x_host_bytes * rounds,
+        energy_j=e,
+    )
+
+
+def model_staged_merge(
+    phase: KernelCost,
+    rounds: int,
+    exchange_bytes: float,
+    total_chips: int,
+    hw: HardwareModel = V5E,
+) -> ModeledRun:
+    """Merged execution: ONE program for all rounds; exchanges are on-device
+    all-to-alls on ICI; a single dispatch; and — the key merge-mode win —
+    the scheduler OVERLAPS round r's collective with round r±1's compute
+    (async collectives inside one program), so the makespan is
+    launch + max(Σcompute, Σcomm) + one un-overlappable pipeline fill."""
+    t_phase = 2 * rounds * phase.device_seconds(total_chips, hw)
+    t_x_one = 2 * exchange_bytes / (total_chips * hw.ici_bw)
+    t_x = rounds * t_x_one
+    t = hw.launch_overhead + max(t_phase, t_x) + min(t_phase, t_x_one)
+    e = hw.j_per_launch + 2 * rounds * phase.energy_j(hw) + (
+        2 * rounds * exchange_bytes * hw.pj_per_ici_byte * 1e-12
+    )
+    return ModeledRun(
+        makespan=t,
+        vector_busy=t,
+        scalar_busy=0.0,
+        launches=1,
+        host_exchange_bytes=0.0,
+        energy_j=e,
+    )

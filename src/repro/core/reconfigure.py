@@ -1,0 +1,71 @@
+"""Runtime mode switching: remesh + reshard live state (paper's CSR write).
+
+Switching SPLIT↔MERGE re-homes every live array onto the new mesh view via
+``jax.device_put`` with the target :class:`NamedSharding`. The measured
+latency and bytes moved are the TPU analogue of the paper's reconfiguration
+cost (their mode switch is a CSR write + pipeline drain; ours is a resharding
+collective). The same machinery implements *elastic scaling*: shrinking onto
+the surviving pod after a failure is just a reshard onto
+``cluster.surviving_cluster(dead).pod_info(0)``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.common.utils import pytree_bytes
+from repro.core.cluster import SpatzformerCluster
+from repro.core.modes import Mode
+from repro.dist.sharding import MeshInfo, param_shardings
+
+
+@dataclass
+class SwitchReport:
+    from_desc: str
+    to_desc: str
+    bytes_moved: int
+    seconds: float
+
+    @property
+    def gbytes_per_sec(self) -> float:
+        return self.bytes_moved / 1e9 / max(self.seconds, 1e-12)
+
+
+def reshard(
+    tree: Any,
+    target_info: MeshInfo,
+    sharding_fn: Callable[[Any, MeshInfo], Any] = param_shardings,
+) -> Any:
+    """Re-home a live pytree onto a new mesh view."""
+    shardings = sharding_fn(jax.eval_shape(lambda: tree), target_info)
+    return jax.device_put(tree, shardings)
+
+
+def switch_mode(
+    cluster: SpatzformerCluster,
+    new_mode: Mode,
+    live_state: Optional[Any] = None,
+    *,
+    pod: int = 0,
+    sharding_fn: Callable[[Any, MeshInfo], Any] = param_shardings,
+) -> tuple[Optional[Any], SwitchReport]:
+    """Switch the cluster's mode, resharding ``live_state`` if given.
+
+    Returns (resharded_state_or_None, SwitchReport).
+    """
+    from_desc = f"{cluster.mode}"
+    t0 = time.perf_counter()
+    target = cluster.merge_info() if new_mode is Mode.MERGE else cluster.pod_info(pod)
+    out = None
+    moved = 0
+    if live_state is not None:
+        out = reshard(live_state, target, sharding_fn)
+        jax.block_until_ready(out)
+        moved = pytree_bytes(jax.eval_shape(lambda: live_state))
+    cluster.set_mode(new_mode)
+    secs = time.perf_counter() - t0
+    return out, SwitchReport(from_desc, str(new_mode), moved, secs)

@@ -1,0 +1,164 @@
+"""Mixed scalar-vector workload scheduler (paper §III, Fig. 2 right).
+
+Maps two task queues onto the fabric according to the current mode:
+
+* **MERGE** — controller-0 thread drives the *vector* queue on the fused
+  mesh (full fabric per kernel); the freed controller thread drains the
+  *scalar* queue concurrently. Scalar latency hides behind device compute
+  (async dispatch releases the GIL while the device works).
+* **SPLIT + scalar work present** — the paper's penalty case: one controller
+  is consumed by the scalar queue, leaving its vector unit idle; the other
+  controller runs every vector task on just its own pod (half fabric).
+* **SPLIT, vector-only** — two-tenant mode: vector tasks round-robin across
+  pods and run concurrently (this is where SPLIT shines; see
+  ``examples/dual_tenant.py``).
+
+Each VectorTask receives the :class:`MeshInfo` of whatever fabric slice the
+scheduler assigned, so the same task body runs in every mode.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.cluster import SpatzformerCluster
+from repro.core.modes import Mode
+from repro.dist.sharding import MeshInfo
+
+
+@dataclass
+class VectorTask:
+    name: str
+    fn: Callable[[MeshInfo], Any]  # must block until device work completes
+
+
+@dataclass
+class ScalarTask:
+    name: str
+    fn: Callable[[], Any]
+
+
+@dataclass
+class TaskRecord:
+    name: str
+    kind: str  # 'vector' | 'scalar'
+    lane: str  # which controller ran it
+    start: float
+    end: float
+    result: Any = None
+
+    @property
+    def seconds(self) -> float:
+        return self.end - self.start
+
+
+@dataclass
+class ScheduleReport:
+    mode: Mode
+    makespan: float
+    records: list[TaskRecord] = field(default_factory=list)
+
+    def lane_time(self, lane: str) -> float:
+        recs = [r for r in self.records if r.lane == lane]
+        if not recs:
+            return 0.0
+        return max(r.end for r in recs) - min(r.start for r in recs)
+
+    def kind_time(self, kind: str) -> float:
+        return sum(r.seconds for r in self.records if r.kind == kind)
+
+    def summary(self) -> str:
+        lines = [f"mode={self.mode} makespan={self.makespan:.4f}s"]
+        for r in self.records:
+            lines.append(
+                f"  [{r.lane}] {r.kind:6s} {r.name:24s} {r.seconds:.4f}s"
+            )
+        return "\n".join(lines)
+
+
+class MixedScheduler:
+    """Runs mixed scalar/vector workloads under a given mode."""
+
+    def __init__(self, cluster: SpatzformerCluster):
+        self.cluster = cluster
+
+    # ------------------------------------------------------------------ run
+
+    def run(
+        self,
+        mode: Mode,
+        vector_tasks: list[VectorTask],
+        scalar_tasks: Optional[list[ScalarTask]] = None,
+    ) -> ScheduleReport:
+        scalar_tasks = scalar_tasks or []
+        t0 = time.perf_counter()
+        records: list[TaskRecord] = []
+        lock = threading.Lock()
+
+        def record(name, kind, lane, start, end, result):
+            with lock:
+                records.append(TaskRecord(name, kind, lane, start, end, result))
+
+        def drain_vector(queue: list[VectorTask], info: MeshInfo, lane: str):
+            for task in queue:
+                s = time.perf_counter()
+                res = task.fn(info)
+                record(task.name, "vector", lane, s, time.perf_counter(), res)
+
+        def drain_scalar(queue: list[ScalarTask], lane: str):
+            for task in queue:
+                s = time.perf_counter()
+                res = task.fn()
+                record(task.name, "scalar", lane, s, time.perf_counter(), res)
+
+        if mode is Mode.MERGE:
+            info = self.cluster.merge_info()
+            threads = [
+                threading.Thread(
+                    target=drain_vector, args=(vector_tasks, info, "ctl0/merged")
+                )
+            ]
+            # freed controllers take the scalar queue
+            if scalar_tasks:
+                threads.append(
+                    threading.Thread(
+                        target=drain_scalar, args=(scalar_tasks, "ctl1/freed")
+                    )
+                )
+        else:  # SPLIT
+            infos = self.cluster.split_infos()
+            if scalar_tasks:
+                # paper's split-mode penalty: controller-1 (and its vector
+                # unit) is consumed by the scalar queue; all vector work
+                # lands on pod 0.
+                threads = [
+                    threading.Thread(
+                        target=drain_vector, args=(vector_tasks, infos[0], "ctl0/pod0")
+                    ),
+                    threading.Thread(
+                        target=drain_scalar, args=(scalar_tasks, "ctl1/scalar")
+                    ),
+                ]
+            else:
+                # two-tenant mode: round-robin vector tasks across pods
+                queues: list[list[VectorTask]] = [[] for _ in infos]
+                for i, task in enumerate(vector_tasks):
+                    queues[i % len(infos)].append(task)
+                threads = [
+                    threading.Thread(
+                        target=drain_vector, args=(q, infos[i], f"ctl{i}/pod{i}")
+                    )
+                    for i, q in enumerate(queues)
+                    if q
+                ]
+
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        makespan = time.perf_counter() - t0
+        records.sort(key=lambda r: r.start)
+        return ScheduleReport(mode=mode, makespan=makespan, records=records)

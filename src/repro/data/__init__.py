@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataConfig,
+    PrefetchLoader,
+    SyntheticCorpus,
+    loader_for,
+)
+
+__all__ = ["DataConfig", "SyntheticCorpus", "PrefetchLoader", "loader_for"]

@@ -1,0 +1,4 @@
+from repro.ft.elastic import ElasticReport, PodFailure, run_elastic
+from repro.ft.watchdog import LaneState, Watchdog
+
+__all__ = ["Watchdog", "LaneState", "PodFailure", "run_elastic", "ElasticReport"]

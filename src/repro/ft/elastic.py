@@ -1,0 +1,102 @@
+"""Elastic training driver: pod failure → shrink → restore → continue.
+
+Reuses the Spatzformer reconfiguration machinery (DESIGN.md §3): a dead pod
+turns the MERGE-mode fabric into "SPLIT with one tenant" on the survivors.
+The driver loop:
+
+1. run steps in MERGE mode on the full cluster,
+2. on a :class:`PodFailure` (watchdog callback or injected by tests),
+   rebuild the cluster without the dead pod (`surviving_cluster`),
+3. restore the latest checkpoint RESHARDED onto the surviving mesh
+   (`Checkpointer.restore(shardings=...)`),
+4. resume the data loader from the restored step and continue.
+
+Step functions are re-jitted per fabric (different mesh ⇒ different
+executable); params/opt-state shardings are recomputed from the same rules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core.cluster import SpatzformerCluster
+from repro.dist.sharding import MeshInfo, param_shardings
+
+
+class PodFailure(RuntimeError):
+    def __init__(self, pod: int, msg: str = ""):
+        super().__init__(msg or f"pod {pod} failed")
+        self.pod = pod
+
+
+@dataclass
+class ElasticReport:
+    steps_done: int
+    failures: int
+    final_devices: int
+    restarts: list[tuple[int, int]]  # (step, surviving_devices)
+
+
+def run_elastic(
+    cluster: SpatzformerCluster,
+    make_state: Callable[[MeshInfo], Any],
+    step_fn_factory: Callable[[MeshInfo], Callable[[Any, dict, int], Any]],
+    batches: Callable[[int], dict],
+    ckpt: Checkpointer,
+    total_steps: int,
+    ckpt_every: int = 5,
+    fail_at: Optional[dict[int, int]] = None,  # step -> pod to kill (tests)
+) -> tuple[Any, ElasticReport]:
+    """Generic elastic loop. ``step_fn_factory(info)`` returns a jitted
+    ``(state, batch, step) -> state``; ``make_state(info)`` builds fresh
+    state on the given fabric (used once at the start)."""
+    fail_at = fail_at or {}
+    info = cluster.merge_info()
+    state = make_state(info)
+    step_fn = step_fn_factory(info)
+    restarts: list[tuple[int, int]] = []
+    failures = 0
+
+    step = 0
+    while step < total_steps:
+        try:
+            if step in fail_at:
+                pod = fail_at.pop(step)
+                raise PodFailure(pod)
+            state = step_fn(state, batches(step), step)
+            step += 1
+            if step % ckpt_every == 0:
+                ckpt.save(step, state)
+        except PodFailure as e:
+            failures += 1
+            ckpt.wait()  # make sure the last async save is durable
+            cluster = cluster.surviving_cluster(e.pod)
+            # survivors form a single-tenant SPLIT fabric (or a smaller merge)
+            info = (
+                cluster.merge_info() if cluster.n_pods > 1 else cluster.pod_info(0)
+            )
+            shardings = param_shardings(jax.eval_shape(lambda: state), info)
+            last = ckpt.latest_step()
+            if last is not None:
+                state, step = ckpt.restore(
+                    jax.eval_shape(lambda: state), shardings=shardings
+                )
+            else:  # failed before the first checkpoint: reshard live state
+                from repro.core.reconfigure import reshard as _reshard
+
+                state = _reshard(state, info)
+                # step unchanged
+            step_fn = step_fn_factory(info)
+            restarts.append((step, cluster.n_devices))
+
+    ckpt.wait()
+    return state, ElasticReport(
+        steps_done=step,
+        failures=failures,
+        final_devices=cluster.n_devices,
+        restarts=restarts,
+    )

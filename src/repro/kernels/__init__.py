@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's six kernel families + LM hot-spots.
+
+Layout per the deliverable spec: ``<name>.py`` holds the ``pl.pallas_call``
+kernel with explicit BlockSpec VMEM tiling, ``ops.py`` the jit'd dispatch
+wrappers (TPU → Pallas, CPU → oracle, interpret for validation), ``ref.py``
+the pure-jnp oracles.
+"""

@@ -1,0 +1,48 @@
+"""AXPY streaming kernel: y <- alpha*x + y (the paper's LinAlg kernel).
+
+Pure HBM-bandwidth workload: 1-D grid of VMEM-sized blocks, VPU elementwise
+math, alpha passed as a scalar-prefetch-style (1,1) block in SMEM-like
+fashion (a tiny replicated block)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    a = alpha_ref[0, 0].astype(jnp.float32)
+    o_ref[...] = (
+        a * x_ref[...].astype(jnp.float32) + y_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def axpy(
+    alpha: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """x, y: [R, C] with C % block == 0 (ops.axpy handles arbitrary shapes)."""
+    r, c = x.shape
+    assert c % block == 0, (c, block)
+    alpha = jnp.asarray(alpha, x.dtype).reshape(1, 1)
+    grid = (r, c // block)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(alpha, x, y)

@@ -1,0 +1,44 @@
+"""Dot-product reduction kernel (the paper's dotp).
+
+Grid of VMEM blocks, each contributing a partial f32 sum; the partials land
+in a [grid] output reduced by the wrapper (tree reduction outside keeps the
+kernel single-pass and avoids cross-block sequential dependencies)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dotp_kernel(x_ref, y_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(
+        x_ref[...].astype(jnp.float32) * y_ref[...].astype(jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dotp_partials(
+    x: jax.Array, y: jax.Array, *, block: int = 2048, interpret: bool = False
+) -> jax.Array:
+    """x, y: [R, C]; returns [R, C//block] partial sums (f32)."""
+    r, c = x.shape
+    assert c % block == 0
+    grid = (r, c // block)
+    return pl.pallas_call(
+        _dotp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c // block), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def dotp(x: jax.Array, y: jax.Array, *, block: int = 2048, interpret: bool = False):
+    return dotp_partials(x, y, block=block, interpret=interpret).sum()

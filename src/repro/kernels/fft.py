@@ -1,0 +1,80 @@
+"""Batched Stockham radix-2 FFT kernel (the paper's sync-critical DSP kernel).
+
+TPU adaptation (DESIGN.md §2): complex data is PLANAR (separate re/im f32
+arrays — VPU lanes hate interleaved complex), a whole power-of-two row lives
+in VMEM per block, and all log2(N) butterfly stages run register/VMEM-
+resident inside one kernel invocation — zero HBM round-trips between stages.
+The twiddle table ([stages, N/2], precomputed on host) streams in once.
+Stockham's autosorting recursion avoids the bit-reversal gather that would
+scatter VMEM accesses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import fft_twiddles
+
+
+def _fft_kernel(re_ref, im_ref, twr_ref, twi_ref, ore_ref, oim_ref, *, n: int):
+    b = re_ref.shape[0]
+    xr = re_ref[...].astype(jnp.float32)
+    xi = im_ref[...].astype(jnp.float32)
+    stages = int(np.log2(n))
+    for s in range(stages):
+        l = 2**s
+        g = n // (2 * l)  # butterfly groups
+        # Stockham split: even = first half, odd = second half, viewed [g, l]
+        er = xr[:, : n // 2].reshape(b, g, l)
+        ei = xi[:, : n // 2].reshape(b, g, l)
+        orr = xr[:, n // 2 :].reshape(b, g, l)
+        oi = xi[:, n // 2 :].reshape(b, g, l)
+        twr = twr_ref[s, :].reshape(g, l)
+        twi = twi_ref[s, :].reshape(g, l)
+        tr = orr * twr - oi * twi
+        ti = orr * twi + oi * twr
+        xr = jnp.concatenate([er + tr, er - tr], axis=-1).reshape(b, n)
+        xi = jnp.concatenate([ei + ti, ei - ti], axis=-1).reshape(b, n)
+    ore_ref[...] = xr.astype(ore_ref.dtype)
+    oim_ref[...] = xi.astype(oim_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fft(
+    re: jax.Array,
+    im: jax.Array,
+    *,
+    block_rows: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched FFT over the last dim. re/im: [B, N], N a power of two,
+    B % block_rows == 0 (ops.fft pads)."""
+    b, n = re.shape
+    assert b % block_rows == 0, (b, block_rows)
+    twr, twi = fft_twiddles(n)
+    stages = twr.shape[0]
+    out_shape = (
+        jax.ShapeDtypeStruct((b, n), re.dtype),
+        jax.ShapeDtypeStruct((b, n), im.dtype),
+    )
+    return pl.pallas_call(
+        functools.partial(_fft_kernel, n=n),
+        grid=(b // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((stages, n // 2), lambda i: (0, 0)),
+            pl.BlockSpec((stages, n // 2), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(re, im, jnp.asarray(twr), jnp.asarray(twi))

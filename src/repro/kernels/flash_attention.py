@@ -1,0 +1,113 @@
+"""Flash attention forward kernel (LM hot-spot; the framework's biggest
+compute consumer at prefill).
+
+Blockwise online-softmax attention: Q tiles stay VMEM-resident while K/V
+tiles stream HBM→VMEM along the innermost (sequential) grid dim; the
+(m, l, acc) online-softmax state lives in f32 VMEM scratch. Causal masking
+skips fully-masked K tiles via ``pl.when`` (upper-triangle tiles cost zero
+MXU work). This is the Pallas twin of
+``repro.models.attention.chunked_attention`` (the XLA fallback), and the
+oracle is ``ref.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal: bool, k_steps: int,
+    block_q: int, block_k: int
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (d**-0.5)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # skip K tiles strictly above the diagonal
+        pl.when((ki * block_k) <= (qi * block_q + block_q - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == k_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q/k/v: [BH, S, d] (batch·heads flattened). S % block == 0."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0
+    k_steps = sk // block_k
+    grid = (bh, sq // block_q, k_steps)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            causal=causal,
+            k_steps=k_steps,
+            block_q=block_q,
+            block_k=block_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)

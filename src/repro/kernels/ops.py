@@ -1,0 +1,184 @@
+"""Dispatch layer for the kernels: Pallas on TPU, interpret-mode Pallas for
+validation, jnp oracle fallback for fast CPU execution.
+
+Every op pads arbitrary shapes to the kernel's block grid and unpads the
+result, so callers never see the tiling constraints. ``mode`` resolution:
+
+* ``auto``      — compiled Pallas on TPU, oracle elsewhere (production)
+* ``pallas``    — compiled Pallas (TPU only)
+* ``interpret`` — Pallas kernel body interpreted on CPU (correctness runs)
+* ``ref``       — the jnp oracle
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (
+    axpy as _axpy_k,
+    conv2d as _conv2d_k,
+    dotp as _dotp_k,
+    fft as _fft_k,
+    flash_attention as _flash_k,
+    matmul as _matmul_k,
+    rmsnorm as _rmsnorm_k,
+    softmax as _softmax_k,
+)
+from repro.kernels import ref
+
+Mode = Literal["auto", "pallas", "interpret", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: Mode) -> str:
+    if mode == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return mode
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b, *, mode: Mode = "auto", block: int = 128):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.matmul(a, b)
+    a_p, m0 = _pad_to(a, 0, block)
+    a_p, k0 = _pad_to(a_p, 1, block)
+    b_p, _ = _pad_to(b, 0, block)
+    b_p, n0 = _pad_to(b_p, 1, block)
+    out = _matmul_k.matmul(
+        a_p, b_p, block_m=block, block_n=block, block_k=block,
+        interpret=(m == "interpret"),
+    )
+    return out[:m0, :n0]
+
+
+def axpy(alpha, x, y, *, mode: Mode = "auto", block: int = 1024):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.axpy(alpha, x, y)
+    orig_shape = x.shape
+    x2 = x.reshape(1, -1) if x.ndim == 1 else x
+    y2 = y.reshape(1, -1) if y.ndim == 1 else y
+    blk = min(block, x2.shape[-1]) if x2.shape[-1] % block else block
+    if x2.shape[-1] % blk:
+        blk = x2.shape[-1]  # tiny inputs: one block
+    x_p, c0 = _pad_to(x2, 1, blk)
+    y_p, _ = _pad_to(y2, 1, blk)
+    out = _axpy_k.axpy(alpha, x_p, y_p, block=blk, interpret=(m == "interpret"))
+    return out[:, :c0].reshape(orig_shape)
+
+
+def dotp(x, y, *, mode: Mode = "auto", block: int = 2048):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.dotp(x, y)
+    x2 = x.reshape(1, -1)
+    y2 = y.reshape(1, -1)
+    blk = min(block, x2.shape[-1])
+    x_p, _ = _pad_to(x2, 1, blk)
+    y_p, _ = _pad_to(y2, 1, blk)  # zero padding contributes 0 to the sum
+    return _dotp_k.dotp(x_p, y_p, block=blk, interpret=(m == "interpret"))
+
+
+def softmax(x, *, mode: Mode = "auto", block_rows: int = 128):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.softmax(x)
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    br = min(block_rows, x2.shape[0])
+    x_p, r0 = _pad_to(x2, 0, br)
+    out = _softmax_k.softmax(x_p, block_rows=br, interpret=(m == "interpret"))
+    return out[:r0].reshape(orig)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, mode: Mode = "auto", block_rows: int = 128):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.rmsnorm(x, w, eps)
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    br = min(block_rows, x2.shape[0])
+    x_p, r0 = _pad_to(x2, 0, br)
+    out = _rmsnorm_k.rmsnorm(x_p, w, eps=eps, block_rows=br, interpret=(m == "interpret"))
+    return out[:r0].reshape(orig)
+
+
+def fft(re, im, *, mode: Mode = "auto", block_rows: int = 64):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.fft(re, im)
+    br = min(block_rows, re.shape[0])
+    re_p, b0 = _pad_to(re, 0, br)
+    im_p, _ = _pad_to(im, 0, br)
+    o_re, o_im = _fft_k.fft(re_p, im_p, block_rows=br, interpret=(m == "interpret"))
+    return o_re[:b0], o_im[:b0]
+
+
+def conv2d(x, w, *, mode: Mode = "auto", block_h: int = 8):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.conv2d(x, w)
+    kh = w.shape[0]
+    h_out = x.shape[1] - kh + 1
+    bh = min(block_h, h_out)
+    pad = (-h_out) % bh
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _conv2d_k.conv2d(x, w, block_h=bh, interpret=(m == "interpret"))
+    return out[:, :h_out]
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, mode: Mode = "auto", block: int = 128
+):
+    """q/k/v: [B, H, S, d] or [BH, S, d]."""
+    m = _resolve(mode)
+    squeeze = False
+    if q.ndim == 3:
+        q, k, v = q[None], k[None], v[None]
+        squeeze = True
+    b, h, s, d = q.shape
+    if m == "ref":
+        out = ref.flash_attention(q, k, v, causal=causal)
+        return out[0] if squeeze else out
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, k.shape[2], d)
+    vf = v.reshape(b * h, v.shape[2], d)
+    bq = min(block, s)
+    bk = min(block, kf.shape[1])
+    # pad S to block multiples; padded q rows are discarded, padded k cols are
+    # masked by causality only when causal — for non-causal we must mask, so
+    # fall back to oracle when padding is needed on K and not causal.
+    if (s % bq or kf.shape[1] % bk) and not causal:
+        out = ref.flash_attention(q, k, v, causal=causal)
+        return out[0] if squeeze else out
+    qf, s0 = _pad_to(qf, 1, bq)
+    kf, _ = _pad_to(kf, 1, bk)
+    vf, _ = _pad_to(vf, 1, bk)
+    out = _flash_k.flash_attention(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+        interpret=(m == "interpret"),
+    )
+    out = out[:, :s0].reshape(b, h, s0, d)
+    return out[0] if squeeze else out

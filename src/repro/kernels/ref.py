@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are also the CPU fallback implementations used by ``ops.py`` when the
+backend is not TPU, so the whole framework runs (slowly) anywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[M,K] @ [K,N] with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
+    return (alpha * x.astype(jnp.float32) + y.astype(jnp.float32)).astype(x.dtype)
+
+
+def dotp(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Row softmax over the last dim, numerically stable, f32 math."""
+    xf = x.astype(jnp.float32)
+    m = xf.max(axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / e.sum(axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def fft(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched complex FFT over the last dim, planar (re, im) f32 layout."""
+    z = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64), axis=-1)
+    return jnp.real(z).astype(re.dtype), jnp.imag(z).astype(im.dtype)
+
+
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """NHWC x HWIO VALID conv, stride 1, f32 accumulation."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """[B,H,S,hd] attention oracle (dense softmax)."""
+    b, h, s, d = q.shape
+    scale = d**-0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def fft_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-stage Stockham radix-2 twiddle table [log2(n), n//2] (re, im).
+
+    Stage s (s=0 the first) multiplies odd halves by W_{2L}^{j mod L} where
+    L = 2**s; entries are tiled so every stage reads row s directly.
+    """
+    stages = int(np.log2(n))
+    assert 2**stages == n, f"n={n} must be a power of 2"
+    tw_re = np.ones((stages, n // 2), np.float32)
+    tw_im = np.zeros((stages, n // 2), np.float32)
+    for s in range(stages):
+        l = 2**s
+        j = np.arange(n // 2) % l
+        ang = -2.0 * np.pi * j / (2 * l)
+        tw_re[s] = np.cos(ang).astype(np.float32)
+        tw_im[s] = np.sin(ang).astype(np.float32)
+    return tw_re, tw_im
+
+
+def fft_stockham(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """jnp Stockham radix-2 (the exact algorithm the Pallas kernel runs).
+
+    Kept separate from :func:`fft` (which defers to jnp.fft) so kernel bugs
+    can be localized: kernel ↔ fft_stockham ↔ jnp.fft.
+    """
+    b, n = re.shape
+    stages = int(np.log2(n))
+    tw_re, tw_im = fft_twiddles(n)
+    xr = re.astype(jnp.float32)
+    xi = im.astype(jnp.float32)
+    for s in range(stages):
+        l = 2**s
+        g = n // (2 * l)
+        # Stockham split: even = first half, odd = second half, viewed [g, l]
+        er = xr[:, : n // 2].reshape(b, g, l)
+        ei = xi[:, : n // 2].reshape(b, g, l)
+        orr = xr[:, n // 2 :].reshape(b, g, l)
+        oi = xi[:, n // 2 :].reshape(b, g, l)
+        twr = tw_re[s].reshape(g, l)
+        twi = tw_im[s].reshape(g, l)
+        tr = orr * twr - oi * twi
+        ti = orr * twi + oi * twr
+        xr = jnp.concatenate([er + tr, er - tr], axis=-1).reshape(b, n)
+        xi = jnp.concatenate([ei + ti, ei - ti], axis=-1).reshape(b, n)
+    return xr.astype(re.dtype), xi.astype(im.dtype)

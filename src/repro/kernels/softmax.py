@@ -1,0 +1,36 @@
+"""Row-softmax kernel (the paper's exp/ML kernel family).
+
+One VMEM block per row-tile; max/exp/sum fused in one pass over the tile
+(numerically stable, f32 math on the VPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax(
+    x: jax.Array, *, block_rows: int = 128, interpret: bool = False
+) -> jax.Array:
+    """x: [R, C]; whole row per block (rows up to a few K wide fit VMEM)."""
+    r, c = x.shape
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+initialization, and the production meshes need 512 host placeholder devices.
+
+For every live cell (repro.configs.all_cells) on the single-pod (16,16) and
+multi-pod (2,16,16) meshes this script:
+
+  1. builds the jitted step (train_step / forward / decode_step) with
+     in/out shardings from the rule-based sharding layer,
+  2. ``.lower()`` s it on ShapeDtypeStruct stand-ins (no allocation),
+  3. ``.compile()`` s — sharding mismatches, unsupported collectives and
+     compile-time OOMs all surface HERE,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / the collectives
+     parsed from the partitioned HLO, alongside the analytic roofline terms
+     (repro.roofline) into a JSONL consumed by EXPERIMENTS.md §Dry-run /
+     §Roofline and the perf loop.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out benchmarks/results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch mistral-large-123b --shape train_4k \
+      --mesh single --hlo-dir /tmp/hlo
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, all_cells, get_arch, get_shape
+from repro.dist.sharding import MeshInfo, batch_shardings, param_shardings, replicated
+from repro.launch.mesh import make_production_mesh, mesh_info_for
+from repro.models.model import LM, input_specs
+from repro.roofline.analysis import RooflineTerms, parse_collectives
+from repro.roofline.flops import count_cell
+from repro.train.optimizer import adamw_init
+from repro.train.step import make_train_step
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    baseline: bool = False,
+):
+    """Build + lower + compile one cell. Returns a result record dict.
+
+    ``baseline=True`` disables the beyond-paper memory policies (grad-accum
+    sizing, f8 KV, FSDP) — used by the §Perf before/after measurements.
+    """
+    import dataclasses
+
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = mesh_info_for(mesh)
+    rec: dict = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh.size,
+        "kind": shape.kind,
+        "baseline": baseline,
+    }
+
+    # ---- memory policies (each one a recorded §Perf iteration) ----
+    grad_accum = 1
+    strategy = "tp"
+    if not baseline:
+        n_p = cfg.num_params()
+        if shape.kind == "train":
+            # microbatching where live activations demand it (SSM state
+            # streams; ≥8B dense). Small dense models skip it — it buys
+            # nothing there and accum=2 trips an SPMD partitioner edge on
+            # minicpm3's replicated-vocab embedding grads.
+            if n_p >= 100e9:
+                grad_accum = 8
+            elif n_p >= 50e9:
+                grad_accum = 4
+            elif n_p >= 8e9 or cfg.family in ("ssm", "hybrid"):
+                grad_accum = 2
+            # DP+ZeRO-1 for small non-MoE models: roofline shows TP-16
+            # all-reduces of activation-sized payloads dominate (zamba2:
+            # t_coll 2.05 s vs t_comp 0.29 s). Replicate weights, fold the
+            # model axis into DP, shard optimizer state 256-way.
+            if cfg.family != "moe" and 2 * n_p * 2 <= 13e9:
+                strategy = "dp_zero1"
+                info = MeshInfo(
+                    mesh,
+                    batch_axes=info.batch_axes + ("model",),
+                    tp_enabled=False,
+                )
+            elif cfg.family != "moe" and n_p <= 16e9:
+                # mid-size: weights can't replicate but CAN be ZeRO-3
+                # sharded over the full fabric with per-layer gathers —
+                # 3 param-AG passes cost less wire than L layers of
+                # activation all-reduces (falcon-mamba: 10.7 vs 25 TB)
+                strategy = "dp_zero3"
+                info = MeshInfo(
+                    mesh,
+                    batch_axes=info.batch_axes + ("model",),
+                    tp_enabled=False,
+                )
+        if shape.kind == "decode":
+            # f8 KV storage when the bf16 cache would crowd HBM
+            cache_elems = (
+                shape.global_batch * shape.seq_len * cfg.n_layers
+            ) * (
+                (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim)
+                if cfg.mla is not None
+                else 2 * cfg.n_kv_heads * cfg.head_dim
+            )
+            if cache_elems * 2 / mesh.size > 4e9:  # >4 GB/dev in bf16
+                cfg = dataclasses.replace(cfg, kv_cache_dtype="float8_e4m3fn")
+        if shape.kind == "prefill" and cfg.d_model >= 8192:
+            # wide models: smaller KV chunk shrinks the [B,H,S,chunk] f32
+            # online-softmax block
+            cfg = dataclasses.replace(cfg, attn_chunk=256)
+    rec["grad_accum"] = grad_accum
+    rec["strategy"] = strategy
+    rec["kv_cache_dtype"] = cfg.kv_cache_dtype or cfg.dtype
+    model = LM(cfg, mesh_info=info)
+
+    params_s = model.param_specs()
+    # FSDP/ZeRO second-dim sharding when TP-only state won't fit HBM:
+    # train keeps params(bf16)+grads(bf16)+AdamW moments(2×f32) resident.
+    state_mult = 12 if shape.kind == "train" else 2
+    per_dev = cfg.num_params() * state_mult / info.model_size
+    fsdp = ((per_dev > 8e9) or strategy == "dp_zero3") and not baseline
+    rec["fsdp"] = bool(fsdp)
+    p_shard = param_shardings(params_s, info, fsdp=fsdp)
+    opt_fsdp = fsdp or strategy in ("dp_zero1", "dp_zero3")
+    batch_s = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch_s, info)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg = TrainConfig(grad_accum=grad_accum)
+        step = make_train_step(model, tcfg)
+        opt_s = jax.eval_shape(lambda: adamw_init(params_s))
+        o_shard = param_shardings(opt_s, info, fsdp=opt_fsdp, fsdp_threshold=2**22)
+        m_shard = {k: replicated(info) for k in ("loss", "aux", "grad_norm", "lr")}
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, m_shard),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        with mesh:
+            lowered = jax.jit(
+                model.forward,
+                in_shardings=(p_shard, b_shard),
+            ).lower(params_s, batch_s)
+    else:  # decode
+        cache_s = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_shard = model.cache_shardings(cache_s, info)
+        with mesh:
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(p_shard, c_shard, b_shard, replicated(info)),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ).lower(
+                params_s, cache_s, batch_s, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["mem"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    # peak per-device ≈ args + temp (aliased args reuse their buffers)
+    rec["mem"]["peak_bytes"] = int(
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+    )
+    # XLA *CPU* converts bf16 weights to f32 around dots (convert fusions),
+    # holding a ~2×params f32 copy of the touched weight stacks in temp.
+    # TPU executes bf16 natively on the MXU — no such copies. Report a
+    # TPU-adjusted estimate alongside the raw number (evidence: temp has a
+    # B/S-independent component ≈ 2× per-device param bytes; EXPERIMENTS.md
+    # §Dry-run).
+    from repro.common.utils import pytree_bytes
+
+    param_dev_bytes = pytree_bytes(params_s) / mesh.size * info.data_size
+    if not fsdp:
+        rec["mem"]["tpu_adjusted_peak_bytes"] = int(
+            max(rec["mem"]["peak_bytes"] - 2 * param_dev_bytes, 0)
+        )
+    else:  # FSDP: weights are gathered per layer; the f32 copies are transient
+        rec["mem"]["tpu_adjusted_peak_bytes"] = rec["mem"]["peak_bytes"]
+    ca = compiled.cost_analysis() or {}
+    rec["hlo_flops_raw"] = float(ca.get("flops", 0.0))
+    rec["hlo_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    rec["collectives_raw"] = parse_collectives(hlo_text)
+    from repro.roofline.hlo_loops import corrected_collectives
+
+    # loop-corrected: while (scan) bodies multiplied by their trip counts —
+    # the measured cross-check for the analytic collective term
+    rec["collectives_corrected"] = corrected_collectives(hlo_text)
+
+    # analytic roofline (global counts)
+    dp = info.data_size
+    tp = info.model_size
+    zero = {"dp_zero1": "zero1", "dp_zero3": "zero3"}.get(strategy, "none")
+    counts = count_cell(cfg, shape, dp=dp, tp=tp, zero=zero)
+    terms = RooflineTerms(
+        name=f"{arch_name}/{shape_name}/{rec['mesh']}",
+        chips=mesh.size,
+        flops=counts.flops,
+        hbm_bytes=counts.hbm_bytes,
+        coll_bytes=counts.coll_bytes,
+        model_flops=counts.model_flops,
+    )
+    rec["analytic"] = {
+        "flops": counts.flops,
+        "hbm_bytes": counts.hbm_bytes,
+        "coll_bytes": counts.coll_bytes,
+        "model_flops": counts.model_flops,
+        "t_compute": terms.t_compute,
+        "t_memory": terms.t_memory,
+        "t_collective": terms.t_collective,
+        "bottleneck": terms.bottleneck,
+        "step_time": terms.step_time,
+        "mfu": terms.mfu,
+        "usefulness": terms.usefulness,
+    }
+    rec["ok"] = True
+    return rec, compiled, lowered
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--hlo-dir", default=None, help="dump compiled HLO text here")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch != "all":
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    with open(args.out, "w") as f:
+        for arch_name, shape_name in cells:
+            for multi_pod in meshes:
+                tag = f"{arch_name}/{shape_name}/{'multi' if multi_pod else 'single'}"
+                try:
+                    rec, compiled, _ = lower_cell(arch_name, shape_name, multi_pod)
+                    peak = rec["mem"]["peak_bytes"] / 1e9
+                    an = rec["analytic"]
+                    print(
+                        f"OK   {tag:64s} compile={rec['compile_s']:7.1f}s "
+                        f"peak/dev={peak:7.2f}GB bound={an['bottleneck']:10s} "
+                        f"step={an['step_time']*1e3:8.2f}ms MFU={an['mfu']*100:5.1f}%",
+                        flush=True,
+                    )
+                    if args.hlo_dir:
+                        os.makedirs(args.hlo_dir, exist_ok=True)
+                        with open(
+                            os.path.join(args.hlo_dir, tag.replace("/", "__") + ".hlo"),
+                            "w",
+                        ) as hf:
+                            hf.write(compiled.as_text())
+                    del compiled
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    rec = {
+                        "arch": arch_name,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"FAIL {tag}: {rec['error'][:200]}", flush=True)
+                    if args.fail_fast:
+                        traceback.print_exc()
+                        raise
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                results.append(rec)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells compiled OK -> {args.out}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax initialization and only then calls this.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.dist.sharding import MeshInfo
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_info_for(mesh) -> MeshInfo:
+    """Axis roles for a production mesh (pod folds into the batch axes —
+    MERGE-mode semantics; SPLIT tenants use SpatzformerCluster.pod_info)."""
+    if "pod" in mesh.axis_names:
+        return MeshInfo(mesh, batch_axes=("pod", "data"))
+    return MeshInfo(mesh, batch_axes=("data",))

@@ -1,0 +1,147 @@
+"""Training launcher: real steps on the available fabric.
+
+On this CPU container it trains reduced configs end-to-end (the e2e example
+drives a ~10-100M-param model for a few hundred steps); on a real cluster the
+same entry point runs the full configs — the only difference is the mesh and
+the ``--reduced`` flag.
+
+Features wired here: SpatzformerCluster modes (MERGE by default — data
+pipeline + async checkpointing ride the freed controller), rule-based
+shardings, AdamW, checkpoint/restart, watchdog heartbeats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch codeqwen1.5-7b \
+      --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import Checkpointer
+from repro.configs import TrainConfig, get_arch
+from repro.core import Mode, SpatzformerCluster
+from repro.data import DataConfig, PrefetchLoader, SyntheticCorpus
+from repro.dist.sharding import (
+    MeshInfo,
+    batch_shardings,
+    param_shardings,
+    replicated,
+    single_device_mesh_info,
+)
+from repro.ft import Watchdog
+from repro.models import LM
+from repro.train import adamw_init, make_train_step
+
+
+def build_mesh_info(args) -> MeshInfo:
+    n = len(jax.devices())
+    if n == 1:
+        return single_device_mesh_info()
+    cluster = SpatzformerCluster(n_pods=args.pods if n % args.pods == 0 else 1)
+    if args.mode == "merge" and cluster.n_pods > 1:
+        return cluster.merge_info()
+    return cluster.pod_info(0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mode", default="merge", choices=["merge", "split"])
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(
+        lr=args.lr,
+        total_steps=args.steps,
+        warmup_steps=max(args.steps // 20, 5),
+        grad_accum=args.grad_accum,
+        seed=args.seed,
+    )
+    info = build_mesh_info(args)
+    model = LM(cfg, mesh_info=info if info.n_devices > 1 else None)
+    print(f"arch={cfg.name} params={cfg.num_params():,} devices={info.n_devices}")
+
+    # ---- state
+    params = model.init(jax.random.key(args.seed))
+    opt = adamw_init(params)
+    p_shard = param_shardings(jax.eval_shape(lambda: params), info)
+    o_shard = param_shardings(jax.eval_shape(lambda: opt), info)
+    params = jax.device_put(params, p_shard)
+    opt = jax.device_put(opt, o_shard)
+
+    ckpt = Checkpointer(args.ckpt_dir, keep=3)
+    start_step = 0
+    if args.resume and ckpt.latest_step() is not None:
+        (params, opt), start_step = ckpt.restore(
+            jax.eval_shape(lambda: (params, opt)), shardings=(p_shard, o_shard)
+        )
+        print(f"resumed from step {start_step}")
+
+    # ---- data (prefetch thread = scalar task on the freed controller)
+    corpus = SyntheticCorpus(
+        DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    )
+    loader = PrefetchLoader(corpus, start_step=start_step)
+
+    # ---- step
+    step_fn = make_train_step(model, tcfg)
+    b_spec = batch_shardings(
+        jax.eval_shape(lambda: corpus.batch(0)), info
+    )
+    m_shard = {k: replicated(info) for k in ("loss", "aux", "grad_norm", "lr")}
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, o_shard, b_spec),
+        out_shardings=(p_shard, o_shard, m_shard),
+        donate_argnums=(0, 1),
+    )
+
+    wd = Watchdog(straggler_after=60.0, dead_after=600.0).start()
+    wd.register("trainer")
+
+    t0 = time.time()
+    tok_per_step = args.batch * args.seq
+    for step in range(start_step, args.steps):
+        batch = next(loader)
+        batch = jax.device_put(batch, b_spec)
+        params, opt, metrics = jit_step(params, opt, batch)
+        wd.beat("trainer", step)
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            m = jax.tree.map(float, metrics)
+            rate = tok_per_step * (step + 1 - start_step) / (time.time() - t0)
+            print(
+                f"step {step+1:5d} loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f} "
+                f"lr={m['lr']:.2e} tok/s={rate:,.0f}",
+                flush=True,
+            )
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt))
+
+    ckpt.save(args.steps, (params, opt), blocking=True)
+    loader.close()
+    wd.stop()
+    print(f"done in {time.time()-t0:.1f}s; final loss above. ckpts in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import LM, input_specs
+
+__all__ = ["LM", "input_specs"]

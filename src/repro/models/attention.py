@@ -1,0 +1,285 @@
+"""Attention: GQA/MHA with dense and memory-efficient (chunked online-softmax)
+implementations, qk-norm, RoPE, sliding windows, and a KV-cache decode path.
+
+The chunked implementation is the CPU/XLA analogue of the Pallas
+flash-attention kernel (``repro.kernels.flash_attention``): it never
+materializes the full S×S score matrix — it scans KV blocks carrying the
+online (max, sum, acc) triple. On TPU the Pallas kernel takes over via
+``repro.kernels.ops.flash_attention``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, (d, H, hd), dtype),
+        "wk": dense_init(k2, (d, KV, hd), dtype),
+        "wv": dense_init(k3, (d, KV, hd), dtype),
+        "wo": dense_init(k4, (H, hd, d), dtype, fan_in=H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Score-level primitives
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """[B, S, KV, hd] -> [B, S, KV*groups, hd] by head repetition."""
+    if groups == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, groups, hd))
+    return x.reshape(b, s, kv * groups, hd)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+) -> jax.Array:
+    """Reference attention materializing the full score matrix.
+
+    q: [B, Sq, H, hd], k/v: [B, Sk, H, hd] (already GQA-expanded).
+    q_offset: absolute position of q[0] (for causal masking vs a longer k).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    chunk: int = 512,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+) -> jax.Array:
+    """Flash-style online-softmax attention scanning KV chunks.
+
+    Never materializes [Sq, Sk]; per-step footprint is [B, H, Sq, chunk].
+    Matches :func:`dense_attention` to fp tolerance.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if sk % chunk:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pad_mask = jnp.arange(sk + pad) < sk  # [Skp]
+    else:
+        pad = 0
+        pad_mask = None
+    skp = k.shape[1]
+    n_chunks = skp // chunk
+    scale = hd**-0.5
+
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = jnp.arange(sq) + q_offset  # [Sq]
+    qf = q.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # rematted: the [B,H,Sq,chunk] probability block is recomputed in
+        # backward rather than saved per KV chunk
+        m, l, acc = carry  # [B,H,Sq], [B,H,Sq], [B,H,Sq,hd]
+        kci, vci, ci = xs  # [B,chunk,H,hd] x2, scalar chunk index
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", qf, kci.astype(jnp.float32)) * scale
+        )  # [B,H,Sq,chunk]
+        kpos = ci * chunk + jnp.arange(chunk)  # [chunk]
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if pad_mask is not None:
+            mask &= (kpos < sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vci.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,hd]
+
+
+# ---------------------------------------------------------------------------
+# Full block-level forward (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+
+def attention_apply(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    impl: Optional[str] = None,
+    return_kv: bool = False,
+):
+    """Self-attention over a full sequence (train / prefill).
+
+    x: [B, S, d]; positions: [S] or [B, S]. With ``return_kv`` also returns
+    the post-rope, pre-GQA-expansion (k, v) [B,S,KV,hd] — exactly the decode
+    cache layout, enabling prefill-into-cache.
+    """
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    impl = impl or cfg.attn_impl
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if positions.ndim == 1:
+        positions = positions[None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kv_cache = (k, v) if return_kv else None
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+
+    if impl == "dense":
+        o = dense_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        o = chunked_attention(
+            q, k, v, causal=True, chunk=cfg.attn_chunk, window=cfg.sliding_window
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    if return_kv:
+        return out, kv_cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cur_len: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, KV, hd]; cur_len: [] or [B] tokens
+    already in the cache. Returns (out [B,1,d], new_k, new_v).
+    """
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, _, d = x.shape
+    s_max = cache_k.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    pos = jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None]  # [B,1]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    # scatter the new k/v at cur_len
+    cache_k = _scatter_step(cache_k, k, cur_len)
+    cache_v = _scatter_step(cache_v, v, cur_len)
+
+    # grouped-GQA scores: never expand the cache to H heads (materializing
+    # [B,S,H,hd] per layer is a groups× transient blowup at 32k context)
+    g = H // KV
+    qg = q.reshape(b, 1, KV, g, hd)
+    scale = hd**-0.5
+    scores = (
+        jnp.einsum("bqkgd,btkd->bkgqt", qg, cache_k.astype(q.dtype)).astype(
+            jnp.float32
+        )
+        * scale
+    )  # [B,KV,G,1,S]  (cache may be f8 storage; compute in model dtype)
+    kpos = jnp.arange(s_max)[None, :]  # [1, S]
+    valid = kpos <= jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None]
+    if cfg.sliding_window:
+        valid &= kpos > (
+            jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None] - cfg.sliding_window
+        )
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", probs, cache_v.astype(q.dtype))
+    o = o.reshape(b, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, cache_k, cache_v
+
+
+def _scatter_step(cache: jax.Array, new: jax.Array, cur_len: jax.Array) -> jax.Array:
+    """Write new [B,1,...] into cache [B,S,...] at position cur_len (per-batch).
+
+    Scalar ``cur_len`` (all sequences aligned — the dry-run decode cells) uses
+    a cheap dynamic_update_slice; per-batch lengths use a one-hot blend.
+    """
+    cur_len = jnp.asarray(cur_len)
+    if cur_len.ndim == 0:
+        start = (0, cur_len) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), start)
+    b, s = cache.shape[:2]
+    pos = jnp.broadcast_to(cur_len, (b,))
+    onehot = (jnp.arange(s)[None, :] == pos[:, None]).astype(cache.dtype)
+    onehot = onehot.reshape(b, s, *((1,) * (cache.ndim - 2)))
+    return cache * (1 - onehot) + onehot * new.astype(cache.dtype)

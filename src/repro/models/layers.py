@@ -1,0 +1,125 @@
+"""Shared neural-net layers: norms, RoPE, gated MLP, embeddings.
+
+Conventions:
+  * params are nested dicts of jnp arrays; leading ``L`` axis when stacked
+    for ``lax.scan`` over layers.
+  * weights stored in ``cfg.dtype`` (bf16 by default); math that needs f32
+    (norms, softmax, rope phases) upcasts locally.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    """Truncated-normal with 1/sqrt(fan_in) scaling (fan_in = shape[0] default)."""
+    if fan_in is None:
+        fan_in = shape[0]
+    scale = fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in f32 with cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for RoPE, shape [dim//2], f32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) by position-dependent phases.
+
+    x: [..., S, n, d]  (n = heads axis, may be 1)
+    positions: [..., S] int32 — broadcast against x's S axis.
+    """
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "w_gate": dense_init(k2, (d_model, d_ff), dtype),
+        "w_out": dense_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"])
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype, tie: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"tok": embed_init(k1, (vocab, d_model), dtype)}
+    if not tie:
+        p["head"] = dense_init(k2, (d_model, vocab), dtype)
+    return p
+
+
+def embed_tokens(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    if "head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["head"])
+    return jnp.einsum("...d,vd->...v", x, params["tok"])

@@ -1,0 +1,663 @@
+"""Unified LM over all assigned architecture families.
+
+One class, four families:
+
+* ``dense``  — pre-norm transformer (GQA/MHA, optional qk_norm, optional MLA)
+* ``moe``    — same attention; FFN replaced by routed experts (+shared) after
+               ``first_k_dense`` leading dense layers
+* ``ssm``    — Mamba1 stack (attention-free)
+* ``hybrid`` — Mamba2 stack with a single weight-tied attention+MLP block
+               invoked every ``shared_attn_every`` layers (Zamba2)
+
+Layer parameters are stacked on a leading ``L`` axis and the stack is
+traversed with ``jax.lax.scan`` (compile-time/HLO-size control at 512
+devices); ``cfg.remat == 'block'`` wraps the scanned body in
+``jax.checkpoint``.
+
+The same class serves training (``forward``), prefill (``forward``), and
+decoding (``decode_step`` + ``init_cache``). Modality stubs: ``audio``/``vlm``
+archs accept precomputed frame/patch embeddings via ``batch['embeds']``
+(DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import MeshInfo
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Params,
+    embed_tokens,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    unembed,
+)
+
+# =============================================================================
+# construction
+# =============================================================================
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, mesh_info: Optional[MeshInfo] = None):
+        self.cfg = cfg
+        self.mesh_info = mesh_info
+        self.dtype = jnp.dtype(cfg.dtype)
+        if cfg.family == "hybrid":
+            assert cfg.n_layers % cfg.shared_attn_every == 0, (
+                cfg.n_layers,
+                cfg.shared_attn_every,
+            )
+
+    # ------------------------------------------------------------------ init
+
+    def _block_init(self, key) -> Params:
+        """One transformer block's params (dense family or moe attention part)."""
+        cfg, dt = self.cfg, self.dtype
+        k_attn, k_mlp = jax.random.split(key)
+        if cfg.mla is not None:
+            attn = mla_mod.mla_init(k_attn, cfg, dt)
+        else:
+            attn = attn_mod.attention_init(k_attn, cfg, dt)
+        return {
+            "attn": attn,
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlp_init(k_mlp, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _moe_block_init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        k_attn, k_moe = jax.random.split(key)
+        if cfg.mla is not None:
+            attn = mla_mod.mla_init(k_attn, cfg, dt)
+        else:
+            attn = attn_mod.attention_init(k_attn, cfg, dt)
+        return {
+            "attn": attn,
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "moe": moe_mod.moe_init(k_moe, cfg, dt),
+        }
+
+    def _dense_block_init_ff(self, key, d_ff: int) -> Params:
+        """Dense block with an explicit d_ff (MoE stacks' leading dense layers)."""
+        cfg, dt = self.cfg, self.dtype
+        k_attn, k_mlp = jax.random.split(key)
+        if cfg.mla is not None:
+            attn = mla_mod.mla_init(k_attn, cfg, dt)
+        else:
+            attn = attn_mod.attention_init(k_attn, cfg, dt)
+        return {
+            "attn": attn,
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlp_init(k_mlp, cfg.d_model, d_ff, dt),
+        }
+
+    def _mamba_init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        init = ssm_mod.mamba1_init if cfg.ssm.variant == "mamba1" else ssm_mod.mamba2_init
+        return {"mamba": init(key, cfg, dt), "norm": jnp.ones((cfg.d_model,), dt)}
+
+    def init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        k_emb, k_blocks, k_shared = jax.random.split(key, 3)
+        params: Params = {
+            "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dt, cfg.tie_embeddings),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        L = cfg.n_layers
+        if cfg.family == "dense":
+            keys = jax.random.split(k_blocks, L)
+            params["blocks"] = jax.vmap(self._block_init)(keys)
+        elif cfg.family == "moe":
+            kd = cfg.first_k_dense
+            if kd:
+                dkeys = jax.random.split(jax.random.fold_in(k_blocks, 1), kd)
+                dff = cfg.dense_ff or cfg.d_ff
+                params["dense_blocks"] = jax.vmap(
+                    functools.partial(self._dense_block_init_ff, d_ff=dff)
+                )(dkeys)
+            mkeys = jax.random.split(jax.random.fold_in(k_blocks, 2), L - kd)
+            params["moe_blocks"] = jax.vmap(self._moe_block_init)(mkeys)
+        elif cfg.family == "ssm":
+            keys = jax.random.split(k_blocks, L)
+            params["blocks"] = jax.vmap(self._mamba_init)(keys)
+        elif cfg.family == "hybrid":
+            keys = jax.random.split(k_blocks, L)
+            params["blocks"] = jax.vmap(self._mamba_init)(keys)
+            params["shared"] = self._block_init(k_shared)  # ONE tied attn+mlp block
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    def param_specs(self, seed: int = 0) -> Any:
+        """ShapeDtypeStruct pytree of the params (no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(seed)))
+
+    # ------------------------------------------------------------- block fns
+
+    def _attn_apply(self, blk: Params, x: jax.Array, positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a = mla_mod.mla_apply(blk["attn"], cfg, h, positions)
+        else:
+            a = attn_mod.attention_apply(blk["attn"], cfg, h, positions)
+        return x + a
+
+    def _dense_block(self, blk: Params, x: jax.Array, positions: jax.Array) -> jax.Array:
+        x = self._attn_apply(blk, x, positions)
+        h = rms_norm(x, blk["norm2"], self.cfg.norm_eps)
+        return x + mlp_apply(blk["mlp"], h)
+
+    def _moe_block(
+        self, blk: Params, x: jax.Array, positions: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        x = self._attn_apply(blk, x, positions)
+        h = rms_norm(x, blk["norm2"], self.cfg.norm_eps)
+        out, aux = moe_mod.moe_apply(blk["moe"], self.cfg, h, mesh_info=self.mesh_info)
+        return x + out, aux
+
+    def _mamba_block(self, blk: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm"], cfg.norm_eps)
+        fn = ssm_mod.mamba1_apply if cfg.ssm.variant == "mamba1" else ssm_mod.mamba2_apply
+        return x + fn(blk["mamba"], cfg, h)
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "block":
+            return jax.checkpoint(fn)
+        return fn
+
+    # Megatron-style sequence parallelism: between blocks the residual stream
+    # is sharded over the MODEL axis on the sequence dim. XLA inserts the
+    # all-gather before attention/FFN (which need full sequence / are head-
+    # sharded) and the reduce-scatter after — and, critically, the remat
+    # checkpoint saved per scanned layer is the SP-sharded tensor: boundary
+    # activation memory drops by the TP degree (17 GB -> ~1 GB on
+    # codeqwen/train_4k; §Perf iteration 1).
+    def _sp(self, x: jax.Array) -> jax.Array:
+        mi = self.mesh_info
+        if mi is None or mi.model_size <= 1:
+            return x
+        s = x.shape[1]
+        if s < mi.model_size or s % mi.model_size:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        return mi.constraint(x, P(mi.batch_axes, "model", None))
+
+    def _logits_constraint(self, logits: jax.Array) -> jax.Array:
+        """Keep [B,S,V] logits vocab-sharded: replicated f32 logits at
+        vocab 92k-202k are 12-24 GB/device (§Perf iteration 2)."""
+        mi = self.mesh_info
+        if mi is None or mi.model_size <= 1:
+            return logits
+        if logits.shape[-1] % mi.model_size:
+            return logits
+        from jax.sharding import PartitionSpec as P
+
+        parts = [None] * logits.ndim
+        parts[0] = mi.batch_axes
+        parts[-1] = "model"
+        return mi.constraint(logits, P(*parts))
+
+    # ---------------------------------------------------------------- forward
+
+    def forward(self, params: Params, batch: dict) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence forward (train / prefill).
+
+        batch: {'tokens': [B,S] int32} or {'embeds': [B,S,d]} for audio stubs.
+        Returns (logits [B,S,V], aux scalar — MoE load-balance loss or 0).
+        """
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"])
+        b, s = x.shape[:2]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if self.mesh_info is not None:
+            x = self.mesh_info.constraint(x, self.mesh_info.batch_spec(3))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense",):
+            body = self._maybe_remat(
+                lambda xx, blk: (self._sp(self._dense_block(blk, self._sp(xx), positions)), None)
+            )
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        elif cfg.family == "moe":
+            if cfg.first_k_dense:
+                body_d = self._maybe_remat(
+                    lambda xx, blk: (self._sp(self._dense_block(blk, self._sp(xx), positions)), None)
+                )
+                x, _ = jax.lax.scan(body_d, x, params["dense_blocks"])
+
+            def _moe_body(xx, blk):
+                xx, aux = self._moe_block(blk, self._sp(xx), positions)
+                return self._sp(xx), aux
+
+            body_m = self._maybe_remat(_moe_body)
+            x, auxs = jax.lax.scan(body_m, x, params["moe_blocks"])
+            aux_total = aux_total + auxs.sum()
+        elif cfg.family == "ssm":
+            body = self._maybe_remat(
+                lambda xx, blk: (self._sp(self._mamba_block(blk, self._sp(xx))), None)
+            )
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        elif cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.n_layers // every
+            grouped = jax.tree.map(
+                lambda p: p.reshape(n_groups, every, *p.shape[1:]), params["blocks"]
+            )
+            shared = params["shared"]
+
+            def group_body(xx, gblk):
+                def inner(xxx, blk):
+                    return self._sp(self._mamba_block(blk, self._sp(xxx))), None
+
+                xx, _ = jax.lax.scan(inner, xx, gblk)
+                xx = self._dense_block(shared, xx, positions)
+                return self._sp(xx), None
+
+            x, _ = jax.lax.scan(self._maybe_remat(group_body), x, grouped)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)
+        logits = self._logits_constraint(logits)
+        return logits, aux_total
+
+    # ----------------------------------------------------------------- cache
+
+    @property
+    def cache_dtype(self):
+        """KV/latent cache storage dtype (f8 option halves decode HBM)."""
+        return jnp.dtype(self.cfg.kv_cache_dtype or self.cfg.dtype)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        """Decode cache pytree (zeros). Layout per family documented inline."""
+        cfg, dt = self.cfg, self.cache_dtype
+        L = cfg.n_layers
+        if cfg.family in ("dense", "moe"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                return {
+                    "ckv": jnp.zeros((L, batch, max_len, m.kv_lora_rank), dt),
+                    "krope": jnp.zeros((L, batch, max_len, m.rope_head_dim), dt),
+                }
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            return {
+                "k": jnp.zeros((L, batch, max_len, kv, hd), dt),
+                "v": jnp.zeros((L, batch, max_len, kv, hd), dt),
+            }
+        if cfg.family == "ssm":
+            mk = (
+                ssm_mod.mamba1_init_cache
+                if cfg.ssm.variant == "mamba1"
+                else ssm_mod.mamba2_init_cache
+            )
+            one = mk(cfg, batch, self.dtype)  # SSM states stay full precision
+            return jax.tree.map(
+                lambda leaf: jnp.zeros((L, *leaf.shape), leaf.dtype), one
+            )
+        if cfg.family == "hybrid":
+            mk = ssm_mod.mamba2_init_cache
+            one = mk(cfg, batch, self.dtype)
+            n_inv = L // cfg.shared_attn_every
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            return {
+                "mamba": jax.tree.map(
+                    lambda leaf: jnp.zeros((L, *leaf.shape), leaf.dtype), one
+                ),
+                "attn_k": jnp.zeros((n_inv, batch, max_len, kv, hd), dt),
+                "attn_v": jnp.zeros((n_inv, batch, max_len, kv, hd), dt),
+            }
+        raise ValueError(cfg.family)
+
+    def cache_specs(self, batch: int, max_len: int) -> Any:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_shardings(self, cache_shape: Any, mesh_info: MeshInfo) -> Any:
+        """Cache placement. Axis 0 is L (or n_inv) — never sharded. Axis 1
+        (batch) goes on the DP axes when divisible; otherwise (long_500k's
+        B=1) the SEQUENCE dim of attention caches is sharded on the DP axes
+        instead (sequence parallelism for the KV sweep). The widest remaining
+        trailing dim divisible by the model axis is model-sharded (KV
+        head_dim / MLA latent / SSM state)."""
+        dp = mesh_info.data_size
+
+        def leaf_spec(path, leaf):
+            parts: list[Any] = [None] * leaf.ndim
+            used = None
+            if leaf.shape[1] % dp == 0 and leaf.shape[1] >= dp:
+                parts[1] = mesh_info.batch_axes
+            elif (
+                leaf.ndim >= 4  # attention caches: [L, B, S, ...]
+                and leaf.shape[2] % dp == 0
+                and leaf.shape[2] >= dp
+            ):
+                parts[2] = mesh_info.batch_axes
+                used = 2
+            # model-axis placement preference for attention caches
+            # [L, B, S, KV, hd]: KV heads first (clean head parallelism),
+            # then the SEQUENCE dim (flash-decoding-style split-K: the
+            # scores/AV contractions run shard-local + one psum, and the
+            # scatter is a masked local write — no resharding copies),
+            # then head_dim as the last resort.
+            order = [3, 2, leaf.ndim - 1] if leaf.ndim >= 4 else list(
+                range(leaf.ndim - 1, 1, -1)
+            )
+            for i in order:
+                if i == used or i >= leaf.ndim or parts[i] is not None:
+                    continue
+                if leaf.shape[i] % mesh_info.model_size == 0 and leaf.shape[i] >= mesh_info.model_size:
+                    parts[i] = "model"
+                    break
+            return mesh_info.named(jax.sharding.PartitionSpec(*parts))
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+    # ---------------------------------------------------------------- prefill
+
+    def prefill(
+        self, params: Params, batch: dict, max_len: int
+    ) -> tuple[jax.Array, Params]:
+        """Full-sequence forward that also fills the decode cache.
+
+        Returns (logits [B,S,V], cache padded to ``max_len``). The caller
+        continues with ``decode_step(..., cur_len=S)``.
+        """
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"])
+        b, s = x.shape[:2]
+        assert s <= max_len, (s, max_len)
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def pad_seq(t):  # [B,S,...] -> [B,max_len,...]
+            widths = [(0, 0), (0, max_len - s)] + [(0, 0)] * (t.ndim - 2)
+            return jnp.pad(t, widths)
+
+        if cfg.family in ("dense", "moe"):
+
+            def body(xx, blk):
+                xx, piece = self._block_forward_capture(blk, xx, positions)
+                return xx, piece
+
+            if cfg.family == "dense":
+                x, pieces = jax.lax.scan(body, x, params["blocks"])
+            else:
+                pieces_list = []
+                if cfg.first_k_dense:
+                    x, pd = jax.lax.scan(body, x, params["dense_blocks"])
+                    pieces_list.append(pd)
+                x, pm = jax.lax.scan(body, x, params["moe_blocks"])
+                pieces_list.append(pm)
+                pieces = jax.tree.map(
+                    lambda *ts: jnp.concatenate(ts, axis=0), *pieces_list
+                ) if len(pieces_list) > 1 else pieces_list[0]
+            cache = jax.tree.map(lambda t: pad_seq_axis(t, 2, max_len), pieces)
+        elif cfg.family == "ssm":
+
+            def body(xx, blk):
+                h = rms_norm(xx, blk["norm"], cfg.norm_eps)
+                fn = (
+                    ssm_mod.mamba1_apply
+                    if cfg.ssm.variant == "mamba1"
+                    else ssm_mod.mamba2_apply
+                )
+                out, st = fn(blk["mamba"], cfg, h, return_state=True)
+                return xx + out, st
+
+            x, cache = jax.lax.scan(body, x, params["blocks"])
+        elif cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.n_layers // every
+            grouped = jax.tree.map(
+                lambda p: p.reshape(n_groups, every, *p.shape[1:]), params["blocks"]
+            )
+            shared = params["shared"]
+
+            def group_body(xx, gblk):
+                def inner(xxx, blk):
+                    h = rms_norm(xxx, blk["norm"], cfg.norm_eps)
+                    out, st = ssm_mod.mamba2_apply(blk["mamba"], cfg, h, return_state=True)
+                    return xxx + out, st
+
+                xx, sts = jax.lax.scan(inner, xx, gblk)
+                h = rms_norm(xx, shared["norm1"], cfg.norm_eps)
+                a, (kc, vc) = attn_mod.attention_apply(
+                    shared["attn"], cfg, h, positions, return_kv=True
+                )
+                xx = xx + a
+                h = rms_norm(xx, shared["norm2"], cfg.norm_eps)
+                xx = xx + mlp_apply(shared["mlp"], h)
+                return xx, (sts, kc, vc)
+
+            x, (mcache, ks, vs) = jax.lax.scan(group_body, x, grouped)
+            cache = {
+                "mamba": jax.tree.map(
+                    lambda t: t.reshape(cfg.n_layers, *t.shape[2:]), mcache
+                ),
+                "attn_k": pad_seq_axis(ks, 2, max_len),
+                "attn_v": pad_seq_axis(vs, 2, max_len),
+            }
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, cache
+
+    def _block_forward_capture(self, blk, x, positions):
+        """Dense/MoE block forward that also emits this layer's cache piece."""
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, (ckv, krope) = mla_mod.mla_apply(
+                blk["attn"], cfg, h, positions, return_kv=True
+            )
+            piece = {"ckv": ckv, "krope": krope}
+        else:
+            a, (k, v) = attn_mod.attention_apply(
+                blk["attn"], cfg, h, positions, return_kv=True
+            )
+            piece = {"k": k, "v": v}
+        x = x + a
+        h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+        if "moe" in blk:
+            out, _ = moe_mod.moe_apply(blk["moe"], cfg, h, mesh_info=self.mesh_info)
+            x = x + out
+        else:
+            x = x + mlp_apply(blk["mlp"], h)
+        return x, piece
+
+    # ------------------------------------------------------------ decode step
+
+    def _block_decode(
+        self, blk: Params, x: jax.Array, cache_l: Params, cur_len: jax.Array
+    ) -> tuple[jax.Array, Params]:
+        """One layer's decode. cache_l leaves have NO leading L axis here."""
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, ckv, krope = mla_mod.mla_decode(
+                blk["attn"], cfg, h, cache_l["ckv"], cache_l["krope"], cur_len
+            )
+            new_cache = {"ckv": ckv, "krope": krope}
+        else:
+            a, ck, cv = attn_mod.attention_decode(
+                blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len
+            )
+            new_cache = {"k": ck, "v": cv}
+        x = x + a
+        h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+        if "moe" in blk:
+            out, _ = moe_mod.moe_apply(blk["moe"], cfg, h, mesh_info=self.mesh_info)
+            x = x + out
+        else:
+            x = x + mlp_apply(blk["mlp"], h)
+        return x, new_cache
+
+    def _mamba_decode(self, blk, x, cache_l):
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm"], cfg.norm_eps)
+        fn = ssm_mod.mamba1_decode if cfg.ssm.variant == "mamba1" else ssm_mod.mamba2_decode
+        out, new_cache = fn(blk["mamba"], cfg, h, cache_l)
+        return x + out, new_cache
+
+    def decode_step(
+        self, params: Params, cache: Params, batch: dict, cur_len: jax.Array
+    ) -> tuple[jax.Array, Params]:
+        """One token for every sequence.
+
+        batch: {'tokens': [B,1]} or {'embeds': [B,1,d]}. cur_len: scalar int32
+        (tokens already cached). Returns (logits [B,1,V], new_cache).
+        """
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"])
+
+        if cfg.family in ("dense", "moe"):
+            if cfg.family == "moe" and cfg.first_k_dense:
+                kd = cfg.first_k_dense
+                dense_cache = jax.tree.map(lambda c: c[:kd], cache)
+                moe_cache = jax.tree.map(lambda c: c[kd:], cache)
+
+                def body_d(xx, xs):
+                    blk, cl = xs
+                    xx, ncl = self._block_decode(blk, xx, cl, cur_len)
+                    return xx, ncl
+
+                x, nd = jax.lax.scan(body_d, x, (params["dense_blocks"], dense_cache))
+                x, nm = jax.lax.scan(body_d, x, (params["moe_blocks"], moe_cache))
+                new_cache = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), nd, nm
+                )
+            else:
+                blocks = params["blocks"] if cfg.family == "dense" else params["moe_blocks"]
+
+                def body(xx, xs):
+                    blk, cl = xs
+                    xx, ncl = self._block_decode(blk, xx, cl, cur_len)
+                    return xx, ncl
+
+                x, new_cache = jax.lax.scan(body, x, (blocks, cache))
+        elif cfg.family == "ssm":
+
+            def body(xx, xs):
+                blk, cl = xs
+                xx, ncl = self._mamba_decode(blk, xx, cl)
+                return xx, ncl
+
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        elif cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.n_layers // every
+            grouped_blocks = jax.tree.map(
+                lambda p: p.reshape(n_groups, every, *p.shape[1:]), params["blocks"]
+            )
+            grouped_mcache = jax.tree.map(
+                lambda c: c.reshape(n_groups, every, *c.shape[1:]), cache["mamba"]
+            )
+            shared = params["shared"]
+
+            def group_body(xx, xs):
+                gblk, gmc, ak, av = xs
+
+                def inner(xxx, ys):
+                    blk, cl = ys
+                    xxx, ncl = self._mamba_decode(blk, xxx, cl)
+                    return xxx, ncl
+
+                xx, ngmc = jax.lax.scan(inner, xx, (gblk, gmc))
+                h = rms_norm(xx, shared["norm1"], cfg.norm_eps)
+                a, nak, nav = attn_mod.attention_decode(
+                    shared["attn"], cfg, h, ak, av, cur_len
+                )
+                xx = xx + a
+                h = rms_norm(xx, shared["norm2"], cfg.norm_eps)
+                xx = xx + mlp_apply(shared["mlp"], h)
+                return xx, (ngmc, nak, nav)
+
+            x, (ngm, nak, nav) = jax.lax.scan(
+                group_body,
+                x,
+                (grouped_blocks, grouped_mcache, cache["attn_k"], cache["attn_v"]),
+            )
+            new_cache = {
+                "mamba": jax.tree.map(
+                    lambda c: c.reshape(cfg.n_layers, *c.shape[2:]), ngm
+                ),
+                "attn_k": nak,
+                "attn_v": nav,
+            }
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, new_cache
+
+
+def pad_seq_axis(t: jax.Array, axis: int, max_len: int) -> jax.Array:
+    """Pad axis ``axis`` (the cache sequence axis) up to max_len with zeros."""
+    cur = t.shape[axis]
+    if cur == max_len:
+        return t
+    widths = [(0, 0)] * t.ndim
+    widths[axis] = (0, max_len - cur)
+    return jnp.pad(t, widths)
+
+
+# =============================================================================
+# input specs (dry-run stand-ins; ShapeDtypeStruct only, no allocation)
+# =============================================================================
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one (arch × shape) cell as ShapeDtypeStructs.
+
+    * train:   {'tokens': (B,S), 'labels': (B,S)}           (int32)
+    * prefill: {'tokens': (B,S)}
+    * decode:  {'tokens': (B,1)}  (+ cache/cur_len supplied by the caller)
+    Audio archs replace 'tokens' with precomputed frame embeddings
+    (B, S, d_model) per the modality-stub rule; labels stay int32 codes.
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    dt_tok = jnp.int32
+    dt_emb = jnp.dtype(cfg.dtype)
+
+    def tok_or_embed(s: int) -> dict:
+        if cfg.modality == "audio":
+            return {"embeds": jax.ShapeDtypeStruct((B, s, cfg.d_model), dt_emb)}
+        return {"tokens": jax.ShapeDtypeStruct((B, s), dt_tok)}
+
+    if shape.kind == "train":
+        specs = tok_or_embed(S)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), dt_tok)
+        return specs
+    if shape.kind == "prefill":
+        return tok_or_embed(S)
+    if shape.kind == "decode":
+        return tok_or_embed(1)
+    raise ValueError(shape.kind)

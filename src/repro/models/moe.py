@@ -1,0 +1,229 @@
+"""Mixture-of-Experts block with expert parallelism.
+
+Two execution paths sharing one per-shard implementation:
+
+* **reference** (no mesh): every expert lives on the one shard; used by smoke
+  tests and as the property-test oracle.
+* **EP** (``shard_map`` over the model axis): routed experts are sharded on
+  the ``model`` mesh axis; activations arrive replicated over ``model`` (they
+  are sharded over the batch axes), each shard computes *its* experts for all
+  local tokens via a capacity-bounded sort-free dispatch (one-hot cumsum slot
+  assignment, gather → expert GEMM → scatter-add), and a single ``psum`` over
+  ``model`` combines partial outputs. This is the "masked local experts +
+  reduce" EP style: it trades the all-to-all of token-routed EP for zero
+  resharding of activations, which is the right trade on a 1-hop ICI axis
+  where the model dimension is already being all-reduced by TP anyway.
+
+Shared experts are mathematically folded into one wider SwiGLU MLP (the sum
+of gated MLPs equals a single MLP over the concatenated hidden dim) and run
+as a normal TP MLP outside the shard_map region.
+
+Auxiliary load-balance loss (Switch-style): ``E * Σ_e f_e · P_e``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, dense_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ff = m.expert_ff or cfg.d_ff
+    k_router, k_in, k_gate, k_out, k_shared = jax.random.split(key, 5)
+    E = m.n_routed
+    p: Params = {
+        "router": dense_init(k_router, (d, E), jnp.float32),
+        "w_in": dense_init(k_in, (E, d, ff), dtype),
+        "w_gate": dense_init(k_gate, (E, d, ff), dtype),
+        "w_out": dense_init(k_out, (E, ff, d), dtype, fan_in=ff),
+    }
+    if m.n_shared:
+        from repro.models.layers import mlp_init
+
+        p["shared"] = mlp_init(k_shared, d, m.n_shared * ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k * m.capacity_factor / m.n_routed) + 1
+    # tiny token counts (decode steps): give full capacity — a dropped token
+    # at decode corrupts its sequence, and the slot table is tiny anyway.
+    c = max(c, min(tokens, 16))
+    return max(min(c, tokens), 1)
+
+
+def _moe_shard(
+    x_flat: jax.Array,  # [T, d] local tokens
+    router: jax.Array,  # [d, E] (replicated)
+    w_in: jax.Array,  # [E_loc, d, f]
+    w_gate: jax.Array,
+    w_out: jax.Array,  # [E_loc, f, d]
+    cfg: ArchConfig,
+    model_axis: Optional[str],
+) -> tuple[jax.Array, jax.Array]:
+    """Per-shard MoE: compute local experts for all local tokens, psum outputs.
+
+    Returns (out [T, d], aux_loss scalar).
+    """
+    m = cfg.moe
+    T, d = x_flat.shape
+    E = m.n_routed
+    E_loc = w_in.shape[0]
+    k = m.top_k
+    C = _capacity(T, cfg)
+
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router)  # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [T,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance aux (computed on the full router view; identical on every
+    # model shard, so no psum needed for it)
+    dispatch_frac = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    mean_prob = probs.mean(axis=0)
+    aux = E * jnp.sum(dispatch_frac * mean_prob)
+
+    if model_axis is not None:
+        shard_id = jax.lax.axis_index(model_axis)
+    else:
+        shard_id = 0
+    e_first = shard_id * E_loc
+
+    # flatten (token, k) assignment entries; keep only local experts
+    flat_e = top_e.reshape(-1)  # [T*k]
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    local = (flat_e >= e_first) & (flat_e < e_first + E_loc)
+    e_loc = jnp.where(local, flat_e - e_first, 0)
+
+    # slot position within each local expert: exclusive cumsum of one-hots
+    onehot = jax.nn.one_hot(e_loc, E_loc, dtype=jnp.int32) * local[:, None].astype(
+        jnp.int32
+    )  # [T*k, E_loc]
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    slot = jnp.sum(pos * onehot, axis=-1)  # [T*k]
+    keep = local & (slot < C)
+
+    # scatter entries into [E_loc, C] slot tables (dropped entries -> slot C)
+    safe_e = jnp.where(keep, e_loc, 0)
+    safe_s = jnp.where(keep, slot, C)  # C row is a trash slot
+    slot_tok = jnp.zeros((E_loc, C + 1), jnp.int32).at[safe_e, safe_s].set(
+        flat_t, mode="drop"
+    )[:, :C]
+    slot_w = jnp.zeros((E_loc, C + 1), jnp.float32).at[safe_e, safe_s].set(
+        jnp.where(keep, flat_w, 0.0), mode="drop"
+    )[:, :C]
+    slot_valid = jnp.zeros((E_loc, C + 1), jnp.bool_).at[safe_e, safe_s].set(
+        keep, mode="drop"
+    )[:, :C]
+
+    xg = x_flat[slot_tok] * slot_valid[..., None].astype(x_flat.dtype)  # [E_loc,C,d]
+    h = jnp.einsum("ecd,edf->ecf", xg, w_in)
+    g = jnp.einsum("ecd,edf->ecf", xg, w_gate)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, w_out)  # [E_loc,C,d]
+
+    y = y * (slot_w * slot_valid)[..., None].astype(y.dtype)
+    out = (
+        jnp.zeros((T, d), jnp.float32)
+        .at[slot_tok.reshape(-1)]
+        .add(y.reshape(-1, d).astype(jnp.float32), mode="drop")
+    )
+    if model_axis is not None:
+        # §Perf: psum the combined expert outputs in bf16, not f32 — halves
+        # the EP collective bytes. Each token sums ≤ top_k (+shared) expert
+        # outputs, so the bf16 reduction error is a couple of ulps.
+        out = jax.lax.psum(out.astype(x_flat.dtype), model_axis)
+    return out.astype(x_flat.dtype), aux
+
+
+def moe_apply(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, S, d]
+    *,
+    mesh_info=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Routed experts (+ shared experts) over a full activation tensor.
+
+    Returns (out [B,S,d], aux scalar).
+    """
+    b, s, d = x.shape
+
+    if mesh_info is not None and mesh_info.model_size > 1:
+        from jax.sharding import PartitionSpec as P
+
+        batch_axes = mesh_info.batch_axes
+        model_axis = mesh_info.model_axis
+
+        def shard_fn(xs, router, w_in, w_gate, w_out):
+            t = xs.shape[0] * xs.shape[1]
+            out, aux = _moe_shard(
+                xs.reshape(t, d), router, w_in, w_gate, w_out, cfg, model_axis
+            )
+            return out.reshape(xs.shape), aux
+
+        out, aux = jax.shard_map(
+            shard_fn,
+            mesh=mesh_info.mesh,
+            in_specs=(
+                P(batch_axes, None, None),
+                P(None, None),
+                P(model_axis, None, None),
+                P(model_axis, None, None),
+                P(model_axis, None, None),
+            ),
+            out_specs=(P(batch_axes, None, None), P()),
+            check_vma=False,
+        )(x, params["router"], params["w_in"], params["w_gate"], params["w_out"])
+        aux = aux  # identical on all shards
+    else:
+        out_flat, aux = _moe_shard(
+            x.reshape(b * s, d),
+            params["router"],
+            params["w_in"],
+            params["w_gate"],
+            params["w_out"],
+            cfg,
+            None,
+        )
+        out = out_flat.reshape(b, s, d)
+
+    if "shared" in params:
+        from repro.models.layers import mlp_apply
+
+        out = out + mlp_apply(params["shared"], x)
+    return out, aux
+
+
+def moe_reference_dense(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Oracle: compute EVERY expert densely and mix by (renormalized) top-k
+    weights — no capacity drops. Used by property tests with high capacity."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], top_e].set(top_p)
+
+    h = jnp.einsum("td,edf->tef", xf, params["w_in"])
+    g = jnp.einsum("td,edf->tef", xf, params["w_gate"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("tef,efd->ted", h, params["w_out"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), w)
+    out = out.astype(x.dtype).reshape(b, s, d)
+    if "shared" in params:
+        from repro.models.layers import mlp_apply
+
+        out = out + mlp_apply(params["shared"], x)
+    return out

@@ -1,0 +1,403 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD, chunked).
+
+TPU adaptation notes (DESIGN.md §2): the CUDA reference implementations are
+fused scan kernels; here the recurrences are restructured for TPU:
+
+* **Mamba1**: chunked selective scan — an outer ``lax.scan`` over sequence
+  chunks carries the [B, d_in, N] state in VMEM-sized pieces, and an inner
+  ``associative_scan`` parallelizes within the chunk (VPU-friendly, avoids
+  the [B, S, d_in, N] full-sequence blowup: peak temp is [B, Q, d_in, N]).
+* **Mamba2 (SSD)**: the chunked block-matrix form — intra-chunk attention-like
+  matmuls (MXU work) plus an inter-chunk state recurrence, exactly the
+  decomposition the SSD paper advocates; chunk length is picked so the
+  [B, H, Q, Q] intra-chunk score block is MXU-aligned.
+
+Both provide O(1)-state single-token ``decode`` steps (used by decode_32k /
+long_500k cells).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# shared: causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B, S, C]; w: [K, C] depthwise; left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled taps (K is 4): avoids conv lowering overhead, stays fused
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(state: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token conv: state [B, K-1, C] holds the last K-1 inputs.
+
+    Returns (y [B, C], new_state)."""
+    k = w.shape[0]
+    full = jnp.concatenate([state, xt[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(xt.dtype)
+    return y, full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(key, cfg: ArchConfig, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, d_in), dtype, fan_in=s.conv_kernel),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * s.state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype, fan_in=dt_rank),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(ks[4], (d_in,), jnp.float32, 1e-3, 1e-1)
+            )
+            - 1.0
+        ).astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, s.state + 1, dtype=jnp.float32), (d_in, s.state))
+        ),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _selective_scan_chunked(
+    x_c: jax.Array,  # [B, S, d_in]  (post-conv, post-silu input)
+    dt: jax.Array,  # [B, S, d_in] f32 (softplus'ed)
+    A: jax.Array,  # [d_in, N] f32 (negative)
+    Bm: jax.Array,  # [B, S, N]
+    C: jax.Array,  # [B, S, N]
+    h0: jax.Array,  # [B, d_in, N]
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """y[b,s,d] = Σ_n h[b,s,d,n]·C[b,s,n] with h_s = exp(dt_s A)·h_{s-1} + dt_s B_s x_s.
+
+    Outer scan over chunks, inner associative scan. The discretized
+    [B, Q, d_in, N] tensors (dA, dBx) are materialized PER CHUNK inside the
+    (rematted) scan body — never for the full sequence: peak temp is
+    O(B·Q·d_in·N), not O(B·S·d_in·N) (which hit 368 GB/device on
+    falcon-mamba/train_4k). Returns (y, h_final).
+    """
+    b, s, d_in = x_c.shape
+    n = A.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs_c = (to_chunks(x_c), to_chunks(dt), to_chunks(Bm), to_chunks(C))
+
+    @jax.checkpoint
+    def chunk_body(h, xs):
+        xq, dtq, bq, cq = xs  # [B,Q,d_in], [B,Q,d_in], [B,Q,N], [B,Q,N]
+        da = jnp.exp(dtq[..., None] * A)  # [B,Q,d_in,N]
+        dbx = dtq[..., None] * bq[:, :, None, :].astype(jnp.float32) * xq[
+            ..., None
+        ].astype(jnp.float32)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        acum, bacc = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hs = acum * h[:, None] + bacc  # [B, Q, d, N]
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cq.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs_c)
+    y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+    return y, h_final
+
+
+def mamba1_apply(
+    params: Params, cfg: ArchConfig, x: jax.Array, *, return_state: bool = False
+):
+    """Full-sequence Mamba1 block. x: [B, S, d] -> [B, S, d].
+
+    ``return_state`` also yields the decode cache {'h', 'conv'} after the
+    last token (prefill-into-cache)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    dt_rank = max(d // 16, 1)
+    N = s_cfg.state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = causal_conv1d(x_in, params["conv_w"], params["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bsd,de->bse", x_c, params["x_proj"])
+    dt_r, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [B,S,d_in] f32
+    A = -jnp.exp(params["A_log"])  # [d_in, N]
+
+    chunk = min(s_cfg.chunk, s)
+    if s % chunk:
+        chunk = s  # tiny sequences in tests
+    h0 = jnp.zeros((b, d_in, N), jnp.float32)
+    y, h_final = _selective_scan_chunked(
+        x_c, dt, A, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32), h0, chunk
+    )
+    y = y + params["D"] * x_c.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    if return_state:
+        k = s_cfg.conv_kernel
+        tail = x_in[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            x_in, ((0, 0), (k - 1 - s, 0), (0, 0))
+        )
+        return out, {"h": h_final, "conv": tail.astype(x.dtype)}
+    return out
+
+
+def mamba1_init_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_in, s.state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, d_in), dtype),
+    }
+
+
+def mamba1_decode(
+    params: Params, cfg: ArchConfig, x: jax.Array, cache: Params
+) -> tuple[jax.Array, Params]:
+    """One token. x: [B, 1, d]."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    dt_rank = max(d // 16, 1)
+    N = s_cfg.state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    x_in, z = jnp.split(xz, 2, axis=-1)  # [B, d_in]
+    x_c, conv_state = conv_step(cache["conv"], x_in, params["conv_w"], params["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bd,de->be", x_c, params["x_proj"])
+    dt_r, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # [B,d_in,N]
+    dBx = dt[..., None] * Bmat[:, None, :].astype(jnp.float32) * x_c[..., None].astype(
+        jnp.float32
+    )
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cmat.astype(jnp.float32))
+    y = y + params["D"] * x_c.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), params["out_proj"])
+    return out[:, None, :], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.n_groups * s.state + nh), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_dim), dtype, fan_in=s.conv_kernel),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32, 1e-3, 1e-1)) - 1.0
+        ),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(
+            jax.random.fold_in(key, 7), (d_in, d), dtype, fan_in=d_in
+        ),
+    }
+
+
+def _ssd_chunked(
+    xh: jax.Array,  # [B, S, H, P] head-split inputs (already dt-scaled NOT)
+    dt: jax.Array,  # [B, S, H] f32 (softplus'ed)
+    A: jax.Array,  # [H] f32 (negative)
+    Bm: jax.Array,  # [B, S, G, N]
+    Cm: jax.Array,  # [B, S, G, N]
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: y[s] = Σ_{t<=s} C_s·B_t · exp(Σ_{j∈(t,s]} dt_j A) · dt_t · x_t.
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]). G (groups) broadcast to H.
+    """
+    b, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+
+    def to_chunks(t, extra):  # [B,S,...] -> [nc, B, Q, ...]
+        return t.reshape(b, nc, chunk, *extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    x_c = to_chunks(xh, (h, p))
+    dt_c = to_chunks(dt, (h,))
+    B_c = to_chunks(Bm, (g, n))
+    C_c = to_chunks(Cm, (g, n))
+
+    # remat: the [B,H,Q,Q] decay/score blocks are recomputed in backward
+    # instead of being saved per chunk (×nc ×layers blew past 200 GB/device
+    # on zamba2/train_4k)
+    @jax.checkpoint
+    def chunk_body(state, xs):
+        xq, dtq, bq, cq = xs  # [B,Q,H,P], [B,Q,H], [B,Q,G,N] x2
+        l = dtq * A  # [B,Q,H] log-decay per step (negative)
+        cum = jnp.cumsum(l, axis=1)  # inclusive cumsum
+        # intra-chunk: M[s,t] = (C_s·B_t) exp(cum_s - cum_t) dt_t, t<=s
+        bq_h = jnp.repeat(bq, rep, axis=2)  # [B,Q,H,N]
+        cq_h = jnp.repeat(cq, rep, axis=2)
+        cb = jnp.einsum("bqhn,bthn->bhqt", cq_h, bq_h)  # [B,H,Q,Q]
+        decay = jnp.exp(
+            cum.transpose(0, 2, 1)[:, :, :, None] - cum.transpose(0, 2, 1)[:, :, None, :]
+        )  # [B,H,Q,Q]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(causal[None, None], cb * decay, 0.0)
+        m = m * dtq.transpose(0, 2, 1)[:, :, None, :]  # × dt_t
+        y_intra = jnp.einsum("bhqt,bthp->bqhp", m, xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state, decayed from chunk start
+        y_inter = jnp.einsum(
+            "bqhn,bhpn->bqhp", cq_h * jnp.exp(cum)[..., None], state
+        )
+        # state update: S' = exp(cum_Q) S + Σ_t exp(cum_Q - cum_t) dt_t B_t x_t^T
+        seg = jnp.exp(cum[:, -1:, :] - cum) * dtq  # [B,Q,H]
+        state_new = state * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+            "bqhn,bqhp,bqh->bhpn", bq_h, xq.astype(jnp.float32), seg
+        )
+        return state_new, (y_intra + y_inter)
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    state, ys = jax.lax.scan(
+        chunk_body, state0, (x_c, dt_c, B_c, C_c)
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, state
+
+
+def mamba2_apply(
+    params: Params, cfg: ArchConfig, x: jax.Array, *, return_state: bool = False
+):
+    """Full-sequence Mamba2 block. x: [B,S,d] -> [B,S,d].
+
+    ``return_state`` also yields the decode cache {'h', 'conv'}."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    G, N = s_cfg.n_groups, s_cfg.state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    xBC = causal_conv1d(xBC, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+
+    xh = xs.reshape(b, s, nh, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(params["A_log"])  # [H]
+    Bm = Bm.reshape(b, s, G, N)
+    Cm = Cm.reshape(b, s, G, N)
+
+    chunk = min(s_cfg.chunk, s)
+    if s % chunk:
+        chunk = s
+    y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        k = s_cfg.conv_kernel
+        xBC_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)[1]
+        tail = xBC_raw[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xBC_raw, ((0, 0), (k - 1 - s, 0), (0, 0))
+        )
+        return out, {"h": h_final, "conv": tail.astype(x.dtype)}
+    return out
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state
+    return {
+        "h": jnp.zeros((batch, nh, s.head_dim, s.state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(
+    params: Params, cfg: ArchConfig, x: jax.Array, cache: Params
+) -> tuple[jax.Array, Params]:
+    """One token. x: [B,1,d]."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    G, N = s_cfg.n_groups, s_cfg.state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    xBC, conv_state = conv_step(cache["conv"], xBC, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+
+    xh = xs.reshape(b, nh, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * -jnp.exp(params["A_log"]))  # [B,H]
+    Bm = jnp.repeat(Bm.reshape(b, G, N), nh // G, axis=1)  # [B,H,N]
+    Cm = jnp.repeat(Cm.reshape(b, G, N), nh // G, axis=1)
+
+    h = cache["h"] * a[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bm.astype(jnp.float32), xh.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm.astype(jnp.float32))
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])
+    return out[:, None, :], {"h": h, "conv": conv_state}

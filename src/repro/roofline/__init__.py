@@ -1,0 +1,18 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    parse_collectives,
+)
+from repro.roofline.flops import CellCounts, count_cell
+
+__all__ = [
+    "RooflineTerms",
+    "parse_collectives",
+    "count_cell",
+    "CellCounts",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+]

@@ -1,0 +1,142 @@
+"""Roofline terms from the compiled dry-run artifact + analytic counts.
+
+Semantics discovered on this backend (documented because they shape the
+method):
+
+* ``compiled.cost_analysis()`` returns **per-device** flops/bytes and counts
+  a ``while`` (lax.scan) body **once**, not ×trip-count. Scanned-layer models
+  therefore undercount by ~n_layers.
+* ``compiled.memory_analysis()`` is accurate (buffers are sized for the
+  whole loop) — it is the "fits in HBM" check.
+* the partitioned HLO text contains every collective with its per-device
+  shapes — reliable for WHICH collectives and their payloads, with the same
+  scan-body-once caveat for collectives inside the layer scan.
+
+The roofline table therefore uses EXACT ANALYTIC counts
+(:mod:`repro.roofline.flops` — we control every einsum) as the primary
+source, and reports the compiled artifact's raw numbers alongside as a
+cross-check (raw × n_layers ≈ analytic for scan-dominated programs).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4, "s16": 2,
+    "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8,
+    "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict[str, float]:
+    """Sum per-device result bytes of every collective op, by kind.
+
+    Works on ``compiled.as_text()`` (partitioned module). Start/done pairs
+    (async collectives) are counted once via the ``-start`` op.
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        # skip the 'done' half of start/done pairs
+        if re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)-done", line):
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        shapes = _SHAPE_RE.findall(lhs)
+        if not shapes:
+            continue
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[m.group(1)] = out.get(m.group(1), 0.0) + nbytes
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    """All quantities GLOBAL (whole mesh) per step; terms in seconds."""
+
+    name: str
+    chips: int
+    flops: float  # global FLOPs/step
+    hbm_bytes: float  # global HBM traffic bytes/step
+    coll_bytes: float  # global bytes crossing chip links /step
+    model_flops: float = 0.0  # 6·N·D (dense) or 6·N_active·D (MoE)
+    # raw compiled-artifact numbers (per-device, scan-body-once) for x-check
+    hlo_flops_raw: Optional[float] = None
+    hlo_bytes_raw: Optional[float] = None
+    hlo_coll_raw: Optional[dict] = None
+    memory_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: the max term (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        if self.model_flops and self.step_time > 0:
+            return self.model_flops / (self.chips * PEAK_FLOPS * self.step_time)
+        return 0.0
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / total FLOPs (catches remat/redundancy waste)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> str:
+        return (
+            f"{self.name:42s} {self.t_compute*1e3:9.2f} {self.t_memory*1e3:9.2f} "
+            f"{self.t_collective*1e3:9.2f}  {self.bottleneck:10s} "
+            f"{self.usefulness:6.2f} {self.mfu*100:6.1f}%"
+        )
+
+    @staticmethod
+    def header() -> str:
+        return (
+            f"{'cell':42s} {'t_comp(ms)':>9s} {'t_mem(ms)':>9s} {'t_coll(ms)':>9s}"
+            f"  {'bound':10s} {'useful':>6s} {'MFU':>7s}"
+        )

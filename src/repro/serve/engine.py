@@ -1,0 +1,160 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+A fixed pool of ``batch_slots`` cache slots; requests are admitted into free
+slots via single-sequence prefill (scattered into the batched cache at the
+slot index), and every engine tick advances ALL active slots one token with
+one jitted ``decode_step`` (per-slot ``cur_len`` vector — the decode paths
+mask per-slot). Finished slots free immediately and the next waiting request
+is admitted: classic continuous batching, sized down.
+
+Notes:
+* prefill compiles per distinct prompt length (exact-length prefill keeps
+  SSM states clean — right-padding would pollute the recurrence; production
+  TPU serving would bucket attention-only archs).
+* sampling (greedy / temperature) happens host-side on the [B, V] logits.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+    temperature: float = 0.0
+    generated: list[int] = field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+@dataclass
+class ServeStats:
+    total_tokens: int = 0
+    total_requests: int = 0
+    wall_seconds: float = 0.0
+    ticks: int = 0
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.total_tokens / max(self.wall_seconds, 1e-9)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: LM,
+        params,
+        *,
+        batch_slots: int = 4,
+        max_len: int = 256,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * batch_slots
+        self.slot_len = np.zeros(batch_slots, np.int32)
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self.waiting: list[Request] = []
+        self.finished: list[Request] = []
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_cache = {}
+        self._insert = jax.jit(self._insert_fn)
+
+    # ------------------------------------------------------------ internals
+
+    @staticmethod
+    def _insert_fn(cache, one_cache, slot):
+        """Scatter a B=1 prefilled cache into batched cache at ``slot``."""
+
+        def leaf(c, o):
+            return jax.lax.dynamic_update_slice_in_dim(c, o.astype(c.dtype), slot, axis=1)
+
+        return jax.tree.map(leaf, cache, one_cache)
+
+    def _prefill_one(self, req: Request, slot: int) -> np.ndarray:
+        s = len(req.prompt)
+        if s not in self._prefill_cache:
+            self._prefill_cache[s] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, self.max_len)
+            )
+        logits, one_cache = self._prefill_cache[s](
+            self.params, {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        )
+        self.cache = self._insert(self.cache, one_cache, jnp.int32(slot))
+        return np.asarray(logits[0, -1])  # last-position logits
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        z = logits.astype(np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.perf_counter()
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.slot_req[slot] is None and self.waiting:
+                req = self.waiting.pop(0)
+                last_logits = self._prefill_one(req, slot)
+                tok = self._sample(last_logits, req.temperature)
+                req.generated.append(tok)
+                req.first_token_at = time.perf_counter()
+                self.slot_req[slot] = req
+                self.slot_len[slot] = len(req.prompt)
+                self.last_token[slot] = tok
+
+    def run(self) -> ServeStats:
+        """Drain all submitted requests; returns throughput stats."""
+        stats = ServeStats()
+        t0 = time.perf_counter()
+        self._admit()
+        while any(r is not None for r in self.slot_req) or self.waiting:
+            active = [i for i, r in enumerate(self.slot_req) if r is not None]
+            tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+            cur_len = jnp.asarray(self.slot_len, jnp.int32)
+            logits, self.cache = self._decode(
+                self.params, self.cache, {"tokens": tokens}, cur_len
+            )
+            logits_np = np.asarray(logits[:, 0])
+            stats.ticks += 1
+            for i in active:
+                req = self.slot_req[i]
+                self.slot_len[i] += 1
+                tok = self._sample(logits_np[i], req.temperature)
+                req.generated.append(tok)
+                stats.total_tokens += 1
+                full = self.slot_len[i] + 1 >= self.max_len
+                if len(req.generated) >= req.max_new or full:
+                    req.done_at = time.perf_counter()
+                    self.finished.append(req)
+                    self.slot_req[i] = None
+                    self.slot_len[i] = 0
+                    stats.total_requests += 1
+                else:
+                    self.last_token[i] = tok
+            self._admit()
+        stats.wall_seconds = time.perf_counter() - t0
+        return stats

@@ -1,0 +1,23 @@
+from repro.train.loss import next_token_loss
+from repro.train.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    warmup_cosine,
+)
+from repro.train.step import (
+    make_compressed_dp_train_step,
+    make_loss_fn,
+    make_train_step,
+)
+
+__all__ = [
+    "next_token_loss",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "make_loss_fn",
+    "make_train_step",
+    "make_compressed_dp_train_step",
+]

@@ -1,0 +1,30 @@
+"""Cross-entropy LM loss (next-token), vocab-shard friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(
+    logits: jax.Array, labels: jax.Array, *, shift: bool = True
+) -> jax.Array:
+    """Mean CE of logits [B,S,V] against labels [B,S].
+
+    shift=True: predict labels[:, t+1] from logits[:, t] (causal LM).
+    The logsumexp form keeps the math stable and lowers to collectives
+    cleanly when V is sharded on the model axis.
+    """
+    if shift:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # gather-free target pick: iota-compare-reduce fuses under SPMD without
+    # materializing/gathering the vocab-sharded logits (take_along_axis would)
+    v = lf.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    tgt = jnp.sum(
+        jnp.where(iota == labels[..., None].astype(jnp.int32), lf, 0.0), axis=-1
+    )
+    return jnp.mean(lse - tgt)

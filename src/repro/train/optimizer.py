@@ -1,0 +1,96 @@
+"""AdamW with decoupled weight decay + cosine/warmup schedules.
+
+Self-contained (no optax in the image): state is a pytree-of-pytrees
+{mu, nu, step}; moments are f32 regardless of param dtype (bf16-safe).
+Optimizer state inherits the parameter sharding (moments shard like their
+parameter), which `repro.dist.sharding.opt_shardings` encodes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # first moment (f32, like params)
+    nu: Any  # second moment (f32)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def warmup_cosine(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1
+        )
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog)
+        )
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+    return schedule
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: TrainConfig,
+    schedule: Callable[[jax.Array], jax.Array],
+) -> tuple[Any, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule(step)
+
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+    )
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu,
+        grads,
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), metrics

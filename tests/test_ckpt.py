@@ -1,0 +1,56 @@
+"""Checkpointing: async roundtrip, retention, restore-into-structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import Checkpointer
+
+
+def _state(key=0):
+    k = jax.random.key(key)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros(16)},
+        "step": jnp.int32(7),
+        "nested": [jnp.ones((3,)), {"x": jnp.arange(5)}],
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = _state()
+    ck.save(10, state, blocking=True)
+    restored, step = ck.restore(jax.eval_shape(lambda: state))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    state = _state()
+    h = ck.save(1, state)  # non-blocking
+    h.wait()
+    assert ck.latest_step() == 1
+
+
+def test_retention_policy(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s), blocking=True)
+    assert ck.list_steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (5, 6):
+        ck.save(s, _state(s), blocking=True)
+    _, step = ck.restore(jax.eval_shape(lambda: _state()), step=5)
+    assert step == 5
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(jax.eval_shape(lambda: _state()))

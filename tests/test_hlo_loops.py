@@ -1,0 +1,69 @@
+"""Loop-corrected HLO collective parser unit tests (synthetic modules)."""
+
+from repro.roofline.hlo_loops import corrected_collectives
+from repro.roofline.analysis import parse_collectives
+
+
+SYNTH = """
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %v), to_apply=%add
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %c = s32[] constant(8)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main.1 (x: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(f32[64]{0} %x), dimensions={0}
+  %w = (s32[], f32[64]) while((s32[], f32[64]) %init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_body_multiplied_by_trip_count():
+    raw = parse_collectives(SYNTH)
+    corr = corrected_collectives(SYNTH)
+    assert raw["all-reduce"] == 64 * 4
+    assert corr["all-reduce"] == 8 * 64 * 4  # ×trip count
+    assert corr["all-gather"] == raw["all-gather"]  # entry-level unchanged
+
+
+NESTED = """
+%inner_body.2 (p: s32[]) -> s32[] {
+  %ar2 = f32[16]{0} all-reduce(f32[16]{0} %v), to_apply=%add
+  ROOT %x = s32[] add(...)
+}
+
+%inner_cond.2 (p: s32[]) -> pred[] {
+  %c2 = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c2), direction=LT
+}
+
+%outer_body.1 (p: s32[]) -> s32[] {
+  %w2 = s32[] while(s32[] %q), condition=%inner_cond.2, body=%inner_body.2
+  ROOT %y = s32[] add(...)
+}
+
+%outer_cond.1 (p: s32[]) -> pred[] {
+  %c1 = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c1), direction=LT
+}
+
+ENTRY %main.9 (x: f32[8]) -> f32[8] {
+  %w1 = s32[] while(s32[] %init), condition=%outer_cond.1, body=%outer_body.1
+  ROOT %r = f32[8]{0} copy(%x)
+}
+"""
+
+
+def test_nested_while_multiplies():
+    corr = corrected_collectives(NESTED)
+    assert corr["all-reduce"] == 3 * 4 * 16 * 4  # outer×inner×bytes
+
+
+def test_no_entry_falls_back_to_raw():
+    frag = "%ar = f32[32]{0} all-reduce(f32[32]{0} %v), to_apply=%add"
+    assert corrected_collectives(frag) == parse_collectives(frag)

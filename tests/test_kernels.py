@@ -1,0 +1,126 @@
+"""Per-kernel interpret-mode sweeps vs the jnp oracle (deliverable c).
+
+Every Pallas kernel × a grid of shapes × dtypes, executed with
+``interpret=True`` (kernel body runs on CPU) and compared against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+F32 = np.float32
+BF16 = jnp.bfloat16
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == BF16 else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 96, 32), (100, 70, 130), (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_matmul(rng, m, k, n, dtype):
+    a, b = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    out = ops.matmul(a, b, mode="interpret", block=32)
+    expect = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, F32), np.asarray(expect, F32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", [(3, 500), (1, 64), (8, 1024)])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_axpy(rng, shape, dtype):
+    x, y = _rand(rng, shape, dtype), _rand(rng, shape, dtype)
+    out = ops.axpy(2.5, x, y, mode="interpret", block=128)
+    np.testing.assert_allclose(
+        np.asarray(out, F32), np.asarray(ref.axpy(2.5, x, y), F32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4096])
+def test_dotp(rng, n):
+    x, y = _rand(rng, (n,), F32), _rand(rng, (n,), F32)
+    got = float(ops.dotp(x, y, mode="interpret", block=256))
+    expect = float(ref.dotp(x, y))
+    assert abs(got - expect) / (abs(expect) + 1e-6) < 1e-4
+
+
+@pytest.mark.parametrize("r,c", [(16, 64), (37, 128), (128, 512)])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_softmax(rng, r, c, dtype):
+    x = _rand(rng, (r, c), dtype)
+    out = ops.softmax(x, mode="interpret", block_rows=16)
+    np.testing.assert_allclose(
+        np.asarray(out, F32), np.asarray(ref.softmax(x), F32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(out, F32).sum(-1), 1.0, rtol=2e-2)
+
+
+@pytest.mark.parametrize("r,c", [(16, 64), (40, 256)])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rmsnorm(rng, r, c, dtype):
+    x = _rand(rng, (r, c), dtype)
+    w = _rand(rng, (c,), dtype)
+    out = ops.rmsnorm(x, w, mode="interpret", block_rows=8)
+    np.testing.assert_allclose(
+        np.asarray(out, F32), np.asarray(ref.rmsnorm(x, w), F32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("b,n", [(4, 64), (2, 256), (6, 1024)])
+def test_fft(rng, b, n):
+    re, im = _rand(rng, (b, n), F32), _rand(rng, (b, n), F32)
+    kr, ki = ops.fft(re, im, mode="interpret", block_rows=2)
+    fr, fi = ref.fft(re, im)
+    scale = float(np.abs(np.asarray(fr)).max())
+    assert np.abs(np.asarray(kr) - np.asarray(fr)).max() / scale < 1e-5
+    assert np.abs(np.asarray(ki) - np.asarray(fi)).max() / scale < 1e-5
+
+
+def test_fft_stockham_reference_matches_numpy(rng):
+    re, im = _rand(rng, (3, 128), F32), _rand(rng, (3, 128), F32)
+    sr, si = ref.fft_stockham(re, im)
+    z = np.fft.fft(np.asarray(re) + 1j * np.asarray(im), axis=-1)
+    np.testing.assert_allclose(np.asarray(sr), z.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(si), z.imag, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,h,w,c,o,kh", [(2, 12, 10, 8, 16, 3), (1, 8, 8, 4, 4, 1)])
+def test_conv2d(rng, b, h, w, c, o, kh):
+    x = _rand(rng, (b, h, w, c), F32)
+    wgt = _rand(rng, (kh, kh, c, o), F32)
+    out = ops.conv2d(x, wgt, mode="interpret", block_h=2)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.conv2d(x, wgt)), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("s,blk", [(64, 32), (128, 64), (96, 32)])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_flash_attention(rng, s, blk, dtype):
+    b, h, hd = 2, 3, 16
+    q = _rand(rng, (b, h, s, hd), dtype)
+    k = _rand(rng, (b, h, s, hd), dtype)
+    v = _rand(rng, (b, h, s, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, mode="interpret", block=blk)
+    expect = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, F32), np.asarray(expect, F32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_noncausal(rng):
+    b, h, s, hd = 1, 2, 64, 16
+    q = _rand(rng, (b, h, s, hd), F32)
+    k = _rand(rng, (b, h, s, hd), F32)
+    v = _rand(rng, (b, h, s, hd), F32)
+    out = ops.flash_attention(q, k, v, causal=False, mode="interpret", block=32)
+    expect = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)

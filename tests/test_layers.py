@@ -1,0 +1,54 @@
+"""Layer-level unit tests: norms, rope, mlp."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    apply_rope,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+
+
+def test_rms_norm_matches_manual(rng):
+    x = jnp.asarray(rng.standard_normal((4, 8, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    got = rms_norm(x, w, eps=1e-6)
+    expect = x / np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6) * np.asarray(w)
+    np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm(rng):
+    x = jnp.asarray(rng.standard_normal((2, 6, 4, 16)), jnp.float32)
+    pos = jnp.arange(6)[None]
+    y = apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_property(rng):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = 16
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 10000.0)
+        kj = apply_rope(k, jnp.array([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+    assert abs(dot_at(10, 2) - dot_at(18, 10)) < 1e-4
+
+
+def test_mlp_shapes_and_finite(rng):
+    p = mlp_init(jax.random.key(0), 16, 64, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)), jnp.float32)
+    y = mlp_apply(p, x)
+    assert y.shape == (2, 5, 16)
+    assert bool(jnp.isfinite(y).all())

@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coremark import coremark
+from repro.dist.compression import dequantize, quantize
+from repro.kernels import ref
+from repro.models.attention import chunked_attention, dense_attention
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32), min_size=2, max_size=64),
+)
+def test_quantize_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = quantize(x)
+    err = np.abs(np.asarray(dequantize(q, scale)) - np.asarray(x))
+    # symmetric int8: |err| <= scale/2 = amax/254 per element
+    amax = float(np.abs(np.asarray(x)).max())
+    assert err.max() <= amax / 254.0 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_sign(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+    q, scale = quantize(x)
+    d = np.asarray(dequantize(q, scale))
+    big = np.abs(np.asarray(x)) > float(scale)  # below 1 LSB sign may vanish
+    assert np.all(np.sign(d[big]) == np.sign(np.asarray(x)[big]))
+
+
+def test_error_feedback_converges_to_uncompressed_mean():
+    """EF-compressed running sum approaches the true sum: residual stays
+    bounded instead of accumulating (the EF-SGD invariant)."""
+    rng = np.random.default_rng(0)
+    resid = np.zeros(16, np.float32)
+    total_sent = np.zeros(16, np.float64)
+    total_true = np.zeros(16, np.float64)
+    for _ in range(200):
+        g = rng.standard_normal(16).astype(np.float32)
+        corrected = g + resid
+        q, s = quantize(jnp.asarray(corrected))
+        sent = np.asarray(dequantize(q, s))
+        resid = corrected - sent
+        total_sent += sent
+        total_true += g
+    # residual bounded by one quantization step of the last tensor
+    assert np.abs(total_sent + resid - total_true).max() < 1e-3
+    assert np.abs(resid).max() < 0.1
+
+
+# ---------------------------------------------------------------------------
+# FFT / softmax invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64, 256]))
+def test_fft_stockham_matches_numpy(seed, n):
+    rng = np.random.default_rng(seed)
+    re = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+    sr, si = ref.fft_stockham(re, im)
+    z = np.fft.fft(np.asarray(re) + 1j * np.asarray(im), axis=-1)
+    scale = max(np.abs(z).max(), 1.0)
+    assert np.abs(np.asarray(sr) - z.real).max() / scale < 1e-4
+    assert np.abs(np.asarray(si) - z.imag).max() / scale < 1e-4
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.floats(-50, 50))
+def test_softmax_shift_invariance(seed, shift):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, 16)).astype(np.float32))
+    a = np.asarray(ref.softmax(x))
+    b = np.asarray(ref.softmax(x + np.float32(shift)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+def test_chunked_attention_chunk_invariance(seed, chunk):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 16, 2, 8)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 16, 2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 16, 2, 8)).astype(np.float32))
+    d = np.asarray(dense_attention(q, k, v, causal=True))
+    c = np.asarray(chunked_attention(q, k, v, causal=True, chunk=chunk))
+    np.testing.assert_allclose(c, d, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scalar workload determinism (scheduler correctness depends on it)
+# ---------------------------------------------------------------------------
+
+
+def test_coremark_deterministic():
+    a = coremark(3, seed=42)
+    b = coremark(3, seed=42)
+    assert a.checksum == b.checksum
+    c = coremark(3, seed=43)
+    assert c.checksum != a.checksum
