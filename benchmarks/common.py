@@ -9,7 +9,6 @@ express fabric scaling; see repro.core.perfmodel docstring).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 from typing import Callable
 
 import jax

@@ -18,6 +18,10 @@ reported for the dispatch-path reality check only) come from common.py.
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
 from repro.core.perfmodel import (
     V5E,
     KernelCost,
@@ -32,9 +36,9 @@ CHIPS_PER_POD = 256
 PODS = 2
 
 
-def run(csv: bool = True) -> list[tuple[str, float, str]]:
+def run(csv: bool = True, tiny: bool = False) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
-    meas = measured_kernels()
+    meas = measured_kernels(scale=64 if tiny else 256)
     for name, cost in PAPER_KERNELS.items():
         # baseline / SM: each pod runs half the data; barrier at the end.
         half = KernelCost(name, cost.flops / PODS, cost.hbm_bytes / PODS, cost.coll_bytes)
@@ -77,5 +81,33 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+def main() -> None:
+    """CLI entry point (the CI bench-smoke job): CSV to stdout, optional JSON
+    artifact with enough metadata to line up BENCH_* trajectories across
+    commits."""
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--tiny", action="store_true", help="small measured kernels (CI smoke)"
+    )
+    ap.add_argument("--json", default=None, metavar="PATH", help="write rows as JSON")
+    args = ap.parse_args()
+
+    rows = run(csv=True, tiny=args.tiny)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        payload = {
+            "benchmark": "kernels_modes",
+            "tiny": bool(args.tiny),
+            "devices": jax.device_count(),
+            "jax": jax.__version__,
+            "rows": [{"name": n, "value": v, "note": d} for n, v, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

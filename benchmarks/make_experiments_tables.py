@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
 

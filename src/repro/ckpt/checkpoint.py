@@ -18,7 +18,6 @@ import json
 import os
 import shutil
 import threading
-import time
 from dataclasses import dataclass
 from typing import Any, Optional
 

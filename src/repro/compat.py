@@ -1,0 +1,83 @@
+"""Forward-compat shims for older jax images.
+
+The codebase targets the jax ≥ 0.6 surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``).
+The pinned container ships jax 0.4.37, where those spellings don't exist yet;
+this module installs equivalents onto the ``jax`` namespace so the same source
+runs on both. Importing :mod:`repro` (any submodule) activates it. Every shim
+is a no-op when the real API is already present.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        # 0.4.x spells replication checking `check_rep`; default it off — the
+        # old inference rejects valid ppermute-based programs.
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        else:
+            kwargs.setdefault("check_rep", False)
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kwargs):
+        del axis_types  # 0.4.x meshes are implicitly Auto on every axis
+        return _make_mesh(axis_shapes, axis_names, *args, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_pallas_compiler_params() -> None:
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always ships in our images
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+        # renamed TPUCompilerParams -> CompilerParams in newer jax
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_pallas_compiler_params()
+
+
+install()

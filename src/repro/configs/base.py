@@ -9,9 +9,8 @@ skip rules (long_500k only for sub-quadratic archs).
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Callable, Optional
+from dataclasses import dataclass, replace
+from typing import Optional
 
 # ---------------------------------------------------------------------------
 # Sub-configs

@@ -19,7 +19,6 @@ claim check) and the raw measured mechanism overheads.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,33 @@
+"""Distribution layer: mesh views, rule-based shardings, ring collectives,
+and int8 gradient compression.
+
+This is the substrate the Spatzformer SPLIT/MERGE machinery is built on:
+:class:`repro.dist.sharding.MeshInfo` is the per-mode view object that
+``SpatzformerCluster.merge_info()`` / ``split_infos()`` hand out, and
+reshard-on-mode-switch (the paper's CSR-write reconfiguration analogue) is
+``jax.device_put`` onto shardings produced by the rules here.
+"""
+
+from repro.dist import collectives, compression, sharding
+from repro.dist.sharding import (
+    MeshInfo,
+    batch_shardings,
+    opt_shardings,
+    param_shardings,
+    replicated,
+    single_device_mesh_info,
+    spec_for_param,
+)
+
+__all__ = [
+    "MeshInfo",
+    "batch_shardings",
+    "collectives",
+    "compression",
+    "opt_shardings",
+    "param_shardings",
+    "replicated",
+    "sharding",
+    "single_device_mesh_info",
+    "spec_for_param",
+]

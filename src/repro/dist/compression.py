@@ -1,0 +1,86 @@
+"""Int8 gradient compression: symmetric per-chunk quantization + a ring
+all-reduce that moves int8 payloads (+ f32 scales) instead of f32 gradients.
+
+Used by the compressed-DP train step (:mod:`repro.train.step`) together with
+error feedback: the quantization residual is carried to the next step, so the
+running sum of transmitted gradients tracks the true sum (the EF-SGD
+invariant, property-tested in ``tests/test_property.py``).
+
+Quantization contract (pinned by the tests):
+
+* ``scale = amax / 127`` per chunk, round-to-nearest → per-element error is
+  at most ``scale / 2 = amax / 254``;
+* any element with ``|x| > scale`` keeps its sign through the round trip.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# 1 KiB of int8 payload per f32 scale — ~0.4% scale overhead.
+CHUNK = 1024
+
+_INT8_MAX = 127.0
+
+
+def quantize(x: jax.Array, *, chunk: int = CHUNK) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization with one f32 scale per ``chunk`` elements.
+
+    Returns ``(q, scales)`` where ``q`` is int8 with x's shape and ``scales``
+    is f32 ``[ceil(x.size / chunk)]`` (a scalar when one chunk suffices, so
+    ``float(scale)`` works for small tensors). Wire payload: 1 byte/element +
+    the scales — ~3.98× smaller than f32.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_chunks = max(-(-n // chunk), 1)
+    padded = jnp.pad(flat, (0, n_chunks * chunk - n)).reshape(n_chunks, chunk)
+    amax = jnp.max(jnp.abs(padded), axis=1)
+    scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
+    q = jnp.clip(jnp.round(padded / scale[:, None]), -_INT8_MAX, _INT8_MAX)
+    q = q.astype(jnp.int8).reshape(-1)[:n].reshape(x.shape)
+    return q, (scale[0] if n_chunks == 1 else scale)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, *, chunk: int = CHUNK) -> jax.Array:
+    """Inverse of :func:`quantize`; returns f32 with ``q``'s shape."""
+    flat = q.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    scale = jnp.atleast_1d(scale)
+    n_chunks = scale.shape[0]
+    padded = jnp.pad(flat, (0, n_chunks * chunk - n)).reshape(n_chunks, chunk)
+    out = padded * scale[:, None]
+    return out.reshape(-1)[:n].reshape(q.shape)
+
+
+def ring_allreduce_q8(x: jax.Array, axis_name: str, *, chunk: int = CHUNK) -> jax.Array:
+    """Mean all-reduce over ``axis_name`` with int8-compressed hops.
+
+    Runs inside ``shard_map``: each device quantizes its local tensor once,
+    then int8 payloads (+ scales) travel the ring; every device dequantizes
+    and accumulates in f32. The local contribution is also routed through the
+    quantizer so all ranks see identically-compressed terms.
+    """
+    p = int(jax.lax.psum(1, axis_name))
+    q, scale = quantize(x, chunk=chunk)
+    acc = dequantize(q, scale, chunk=chunk)
+    if p == 1:
+        return acc
+    perm = [(j, (j + 1) % p) for j in range(p)]
+    buf_q, buf_s = q, scale
+    for _ in range(p - 1):
+        buf_q = jax.lax.ppermute(buf_q, axis_name, perm)
+        buf_s = jax.lax.ppermute(buf_s, axis_name, perm)
+        acc = acc + dequantize(buf_q, buf_s, chunk=chunk)
+    return acc / p
+
+
+def allreduce_pytree_q8(tree: Any, axis_name: str, *, chunk: int = CHUNK) -> Any:
+    """Leaf-wise :func:`ring_allreduce_q8` over a gradient pytree."""
+    return jax.tree.map(
+        lambda leaf: ring_allreduce_q8(leaf, axis_name, chunk=chunk), tree
+    )

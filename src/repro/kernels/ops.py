@@ -12,12 +12,10 @@ result, so callers never see the tiling constraints. ``mode`` resolution:
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import (
     axpy as _axpy_k,

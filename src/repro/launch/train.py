@@ -20,12 +20,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import Checkpointer
 from repro.configs import TrainConfig, get_arch
-from repro.core import Mode, SpatzformerCluster
+from repro.core import SpatzformerCluster
 from repro.data import DataConfig, PrefetchLoader, SyntheticCorpus
 from repro.dist.sharding import (
     MeshInfo,

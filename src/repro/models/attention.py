@@ -10,7 +10,7 @@ online (max, sum, acc) triple. On TPU the Pallas kernel takes over via
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ parameter), which `repro.dist.sharding.opt_shardings` encodes.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -11,8 +11,7 @@ microbatch of activations at a time.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

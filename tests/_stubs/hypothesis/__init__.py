@@ -1,0 +1,56 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface this
+repo uses. Activated by ``tests/conftest.py`` ONLY when the real package is
+absent (the pinned container doesn't ship it; CI pip-installs the real one).
+
+Scope: ``@given`` over positional strategies, ``@settings(max_examples=...,
+deadline=...)``, and the four strategies in :mod:`.strategies`. Examples are
+drawn from a fixed-seed RNG (deterministic, no shrinking) with a sprinkle of
+boundary values — a smoke-grade approximation, not a replacement.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+from . import strategies  # noqa: F401  (re-export: `from hypothesis import strategies`)
+
+__version__ = "0.0-repro-stub"
+
+_SEED = 20260727
+
+
+def settings(**kwargs):
+    """Records max_examples on the (already ``@given``-wrapped) test."""
+
+    def deco(fn):
+        fn._stub_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_stub_settings", {})
+            n = int(conf.get("max_examples", 20))
+            rng = np.random.default_rng(_SEED)
+            for i in range(n):
+                drawn = [s.example(rng, index=i) for s in strats]
+                kw = {k: s.example(rng, index=i) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kwargs, **kw)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (it inspects __wrapped__ otherwise)
+        del wrapper.__wrapped__
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(strats)]
+        keep = [p for p in keep if p.name not in kw_strats]
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+
+    return deco

@@ -1,0 +1,77 @@
+"""Strategies for the hypothesis stub: floats, integers, lists, sampled_from.
+
+Each strategy draws from the shared RNG; the first few examples per run are
+boundary-biased (min/max/zero) so the cheap-but-important edges always get
+exercised even with few examples.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(
+        self,
+        draw: Callable[[np.random.Generator], Any],
+        corners: Sequence[Any] = (),
+    ):
+        self._draw = draw
+        self._corners = list(corners)
+
+    def example(self, rng: np.random.Generator, index: int = 0) -> Any:
+        if index < len(self._corners):
+            return self._corners[index]
+        return self._draw(rng)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+    width: int = 64,
+) -> SearchStrategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite here
+
+    def cast(v: float) -> float:
+        return float(np.float32(v)) if width == 32 else float(v)
+
+    corners = [cast(v) for v in (min_value, max_value) if min_value <= v <= max_value]
+    if min_value <= 0.0 <= max_value:
+        corners.append(0.0)
+    return SearchStrategy(
+        lambda rng: cast(rng.uniform(min_value, max_value)), corners=corners
+    )
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        corners=[min_value, max_value],
+    )
+
+
+def lists(
+    elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10
+) -> SearchStrategy:
+    def draw(rng: np.random.Generator) -> list:
+        size = int(rng.integers(min_size, max_size + 1))
+        # ~1 in 8 elements comes from the element strategy's corner pool
+        return [
+            elements.example(rng, index=0 if rng.random() < 0.125 else 1 << 30)
+            for _ in range(size)
+        ]
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(
+        lambda rng: options[int(rng.integers(0, len(options)))],
+        corners=options[: min(len(options), 2)],
+    )

@@ -1,6 +1,5 @@
 """Attention: chunked online-softmax vs dense oracle; decode path; GQA."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,6 @@ perf model claims. (True multi-pod behaviour runs in test_multidev.py.)"""
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -18,7 +17,6 @@ from repro.core import (
     switch_mode,
 )
 from repro.core.perfmodel import (
-    V5E,
     KernelCost,
     model_mixed_merge,
     model_mixed_split,

@@ -1,0 +1,132 @@
+"""`repro.dist.sharding` edge cases beyond the seed suite: batch/data_size
+divisibility, optimizer-state specs mirroring their parameter, and the
+single-device fallback path used by laptops and the fast CI lane."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    MeshInfo,
+    _add_fsdp_dim,
+    batch_shardings,
+    opt_shardings,
+    param_shardings,
+    replicated,
+    single_device_mesh_info,
+    spec_for_batch,
+    spec_for_param,
+)
+
+M = 16  # model-axis size for pure spec-level checks
+
+
+def one_dev_info(batch_axes=("data",), **kw) -> MeshInfo:
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return MeshInfo(mesh, batch_axes=batch_axes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# batch divisibility
+# ---------------------------------------------------------------------------
+
+
+def test_odd_batch_replicates_instead_of_uneven_shards():
+    # 7 % 4 != 0: fall back to replication rather than an invalid sharding
+    assert spec_for_batch((7, 128), 4, ("data",)) == P()
+    assert spec_for_batch((8, 128), 4, ("data",)) == P(("data",), None)
+    # batch smaller than the DP degree also replicates
+    assert spec_for_batch((2, 128), 4, ("data",)) == P()
+    # scalars have no batch dim
+    assert spec_for_batch((), 4, ("data",)) == P()
+    # MERGE mode: the folded pod axis rides along in the batch axes
+    assert spec_for_batch((8, 16), 8, ("pod", "data")) == P(("pod", "data"), None)
+
+
+def test_batch_shardings_builder_on_live_mesh():
+    info = one_dev_info()
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+    }
+    sh = batch_shardings(batch, info)
+    assert set(sh) == {"tokens", "labels"}
+    assert all(s.mesh == info.mesh for s in sh.values())
+    # a real array lands under it without error
+    x = jax.device_put(jnp.zeros((8, 32), jnp.int32), sh["tokens"])
+    assert x.shape == (8, 32)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state mirrors parameters
+# ---------------------------------------------------------------------------
+
+
+def test_opt_shardings_mirror_param_specs():
+    from repro.train.optimizer import adamw_init
+
+    params = {
+        "embed": {"tok": jax.ShapeDtypeStruct((32768, 4096), jnp.bfloat16)},
+        "blocks": {
+            "mlp": {"w_in": jax.ShapeDtypeStruct((32, 4096, 13440), jnp.bfloat16)}
+        },
+    }
+    info = one_dev_info()
+    p_sh = param_shardings(params, info)
+    o_sh = opt_shardings(jax.eval_shape(lambda: adamw_init(params)), info)
+    # moments carry exactly their parameter's sharding; step replicates
+    assert o_sh.mu == p_sh
+    assert o_sh.nu == p_sh
+    assert o_sh.step == replicated(info)
+
+
+def test_moe_block_attention_uses_attn_rule_not_expert_rule():
+    """Attention params under `moe_blocks` must take the heads/head_dim rule;
+    the expert-dim branch is only for the true `['moe']` expert stacks
+    (regression: a bare "moe" substring match sharded d_model instead)."""
+    spec = spec_for_param("['moe_blocks']['attn']['wq']", 4, (27, 2048, 16, 128), M)
+    assert spec == P(None, None, "model", None)
+    # GQA fallback still reachable for moe-family archs
+    spec = spec_for_param("['moe_blocks']['attn']['wk']", 4, (27, 2048, 8, 128), M)
+    assert spec == P(None, None, None, "model")
+
+
+def test_spec_rules_are_prefix_invariant():
+    """The path rules key on substrings, so a param nested under an optimizer
+    prefix (keystr adds e.g. ``[1]`` for the NamedTuple slot) resolves to the
+    same spec — this is what makes opt_shardings ≡ param_shardings."""
+    for path, shape in [
+        ("['blocks']['mlp']['w_in']", (32, 4096, 13440)),
+        ("['blocks']['attn']['wk']", (88, 12288, 8, 128)),
+        ("['moe_blocks']['moe']['w_in']", (27, 64, 2048, 1408)),
+        ("['embed']['tok']", (73448, 2560)),
+    ]:
+        base = spec_for_param(path, len(shape), shape, M)
+        nested = spec_for_param(f"[1]{path}", len(shape), shape, M)
+        assert base == nested, path
+
+
+# ---------------------------------------------------------------------------
+# single-device fallback
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_mesh_info_fallback():
+    info = single_device_mesh_info()
+    assert info.n_devices == 1
+    assert info.data_size == 1 and info.model_size == 1
+    assert info.batch_spec(3) == P(("data",), None, None)
+    # every builder degrades to replication and still produces usable shardings
+    params = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    for sh in jax.tree.leaves(param_shardings(params, info)):
+        assert sh == replicated(info)
+    w = jax.device_put(jnp.ones((64, 64)), replicated(info))
+    assert float(w.sum()) == 64 * 64
+
+
+def test_fsdp_below_threshold_is_identity():
+    info = one_dev_info()
+    spec = P(None, None, "model")
+    assert _add_fsdp_dim(spec, (4, 8, 16), info, 1, threshold=2**24) == spec

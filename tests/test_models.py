@@ -3,7 +3,6 @@ per-family behaviours (MLA absorbed decode, MoE aux, hybrid tying)."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_arch

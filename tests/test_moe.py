@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.models.moe import _capacity, _moe_shard, moe_init, moe_reference_dense

@@ -1,6 +1,5 @@
 """Property-based tests (hypothesis) on system invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,7 +1,6 @@
 """Sharding-rule unit tests, including the L-dim regression that once cost
 6×7 GB of involuntary all-gathers (EXPERIMENTS §Perf #0)."""
 
-import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
