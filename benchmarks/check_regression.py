@@ -1,0 +1,168 @@
+"""Bench-regression gate: compare fresh benchmark JSON against the committed
+baseline (``benchmarks/results/baseline.json``) with a wall-clock tolerance.
+
+Direction is inferred from the row name: throughput-like rows
+(``*tok_per_s``, ``*speedup*``) must not DROP more than the tolerance;
+time/energy-like rows (``*_ms``, ``*_us``, ``*_s``, ``*_rel``, ``*_seconds``)
+must not GROW more than the tolerance. Rows present on only one side are
+reported but never fail the gate (new benchmarks don't need a baseline
+backfill to land). Exit code 1 on any regression — this fails the CI
+bench-smoke job.
+
+Usage:
+    python -m benchmarks.check_regression current.json [current2.json ...] \
+        [--baseline benchmarks/results/baseline.json] [--tolerance 0.2]
+
+Refreshing the baseline after an intentional perf change:
+    python -m benchmarks.serving_bench --json /tmp/serving.json
+    python -m benchmarks.kernels_modes --tiny --json /tmp/kernels.json
+    python -m benchmarks.check_regression /tmp/serving.json /tmp/kernels.json \
+        --update-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(__file__), "results", "baseline.json"
+)
+
+_HIGHER_BETTER = ("tok_per_s", "speedup")
+_LOWER_BETTER = ("_ms", "_us", "_s", "_seconds", "_rel")
+# rows whose absolute value depends on the machine that measured them:
+# gated only when the current host fingerprint matches the baseline's
+_MACHINE_DEPENDENT = ("cpu_measured", "serve_engine")
+
+
+def host_fingerprint() -> dict:
+    """Identity of the measuring host. Deliberately strict (includes the
+    hostname): machine-dependent wall-clock rows only gate against a
+    baseline recorded on the SAME host — a 2-vCPU CI runner and a 2-vCPU
+    laptop are not comparable at ±20%. Modeled/analytic rows always gate
+    regardless, so CI still catches perf-model regressions."""
+    return {
+        "cpu_count": os.cpu_count(),
+        "machine": platform.machine(),
+        "node": platform.node(),
+    }
+
+
+def row_direction(name: str) -> str:
+    """'up' (higher is better), 'down' (lower is better), or 'skip'."""
+    if any(t in name for t in _HIGHER_BETTER):
+        return "up"
+    if name.endswith(_LOWER_BETTER):
+        return "down"
+    return "skip"
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["value"]) for r in payload.get("rows", [])}
+
+
+def check(
+    current: dict[str, float],
+    baseline: dict[str, float],
+    tolerance: float,
+    same_host: bool = True,
+) -> list[str]:
+    """Returns a list of human-readable regression descriptions (empty = ok).
+
+    With ``same_host=False`` (the baseline was recorded on different
+    hardware), machine-dependent wall-clock rows are reported but never
+    fail the gate — a 2-vCPU CI runner measuring 1.8x the laptop baseline
+    is hardware, not a regression. Modeled/analytic rows always gate.
+    """
+    regressions = []
+    for name, base in sorted(baseline.items()):
+        if name not in current:
+            print(f"  [absent ] {name} (baseline {base:.6g}) — not checked")
+            continue
+        cur = current[name]
+        direction = row_direction(name)
+        if not same_host and any(t in name for t in _MACHINE_DEPENDENT):
+            print(f"  [no-gate] {name}: {cur:.6g} vs {base:.6g} (different host)")
+            continue
+        if direction == "skip" or base == 0:
+            print(f"  [skipped] {name}: {cur:.6g}")
+            continue
+        ratio = cur / base
+        if direction == "up":
+            bad = ratio < 1.0 - tolerance
+            arrow = "↑ok" if ratio >= 1.0 else "↓"
+        else:
+            bad = ratio > 1.0 + tolerance
+            arrow = "↓ok" if ratio <= 1.0 else "↑"
+        status = "REGRESSED" if bad else "ok"
+        print(
+            f"  [{status:9s}] {name}: {cur:.6g} vs baseline {base:.6g} "
+            f"({ratio:.3f}x {arrow}, tol ±{tolerance:.0%})"
+        )
+        if bad:
+            regressions.append(f"{name}: {cur:.6g} vs {base:.6g} ({ratio:.3f}x)")
+    for name in sorted(set(current) - set(baseline)):
+        print(f"  [new    ] {name}: {current[name]:.6g} — no baseline yet")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="+", help="fresh benchmark JSON file(s)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=float(
+        os.environ.get("REPRO_BENCH_TOLERANCE", "0.2")
+    ))
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline from the current rows instead of checking",
+    )
+    args = ap.parse_args()
+
+    current: dict[str, float] = {}
+    for path in args.current:
+        current.update(load_rows(path))
+
+    if args.update_baseline:
+        payload = {
+            "note": "committed bench baseline; refresh via check_regression --update-baseline",
+            "tolerance": args.tolerance,
+            "host": host_fingerprint(),
+            "rows": [
+                {"name": n, "value": v} for n, v in sorted(current.items())
+            ],
+        }
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"baseline updated: {args.baseline} ({len(current)} rows)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to check")
+        return 0
+    baseline = load_rows(args.baseline)
+    base_host = json.load(open(args.baseline)).get("host")
+    same_host = base_host == host_fingerprint()
+    print(
+        f"checking {len(current)} rows against {args.baseline} "
+        f"(host match: {same_host}):"
+    )
+    regressions = check(current, baseline, args.tolerance, same_host=same_host)
+    if regressions:
+        print(f"\n{len(regressions)} bench regression(s) beyond ±{args.tolerance:.0%}:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("\nbench gate: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

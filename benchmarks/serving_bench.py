@@ -1,9 +1,19 @@
 """Serving benchmark: real continuous-batching engine throughput on this
 host (reduced arch) + modeled production decode throughput per arch from the
-dry-run decode cells (tokens/s/chip at the roofline step time)."""
+dry-run decode cells (tokens/s/chip at the roofline step time).
+
+The measured section reports STEADY-STATE serving throughput: a small
+warmup drain first absorbs the one-time jit compiles (production serving
+compiles once and then serves millions of tokens), then a ragged-length
+request stream is timed end to end — decode ticks, admissions, prefills
+and sampling included. Ragged prompt lengths are deliberate: they exercise
+the prefill-bucketing path (without it, every distinct length is a fresh
+XLA compile in the measured region).
+"""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -16,6 +26,13 @@ from repro.serve import Request, ServeEngine
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
 
+MEASURED_REQUESTS = 24
+MAX_NEW = 12
+PROMPT_LENS = (5, 8, 11, 13, 16, 19, 23, 27, 31, 34, 38, 43)  # ragged stream
+# warmup must cycle EVERY prompt length so all prefill buckets compile
+# before the measured region (otherwise rep 1 is compile-polluted)
+WARMUP_REQUESTS = len(PROMPT_LENS)
+
 
 def run(csv: bool = True) -> list[tuple[str, float, str]]:
     rows = []
@@ -26,20 +43,44 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     params = model.init(jax.random.key(0))
     eng = ServeEngine(model, params, batch_slots=4, max_len=96)
     rng = np.random.default_rng(0)
-    for i in range(8):
-        eng.submit(
-            Request(
-                rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
-                max_new=12,
+
+    def submit(n: int, rid0: int) -> None:
+        for i in range(n):
+            s = PROMPT_LENS[i % len(PROMPT_LENS)]
+            eng.submit(
+                Request(
+                    rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+                    max_new=MAX_NEW,
+                )
             )
-        )
-    stats = eng.run()
+
+    submit(WARMUP_REQUESTS, rid0=-WARMUP_REQUESTS)  # absorb jit compiles
+    warm = eng.run()
+    # best-of-3 measured drains: steady-state throughput, shared-host-noise
+    # resistant (same reasoning as time_thunk's best-of-5)
+    best = None
+    for rep in range(3):
+        submit(MEASURED_REQUESTS, rid0=rep * MEASURED_REQUESTS)
+        stats = eng.run()
+        if best is None or stats.tokens_per_sec > best.tokens_per_sec:
+            best = stats
     rows.append(
         (
             "serve_engine_cpu_tok_per_s",
-            stats.tokens_per_sec,
-            f"{stats.total_requests} reqs, {stats.ticks} ticks, 4 slots (1-core host)",
+            best.tokens_per_sec,
+            f"{best.total_requests} reqs, {best.ticks} ticks, "
+            f"{best.prefill_compiles} prefill compiles in measured region, "
+            "4 slots (1-core host, steady-state, best of 3)",
+        )
+    )
+    rows.append(
+        (
+            # '_wall' suffix keeps this row OUT of the regression gate: jit
+            # compile time is too machine-noisy for a ±20% wall-clock check
+            "serve_engine_cold_start_wall",
+            warm.wall_seconds,
+            f"warmup drain incl. jit compiles ({warm.prefill_compiles} prefills)",
         )
     )
 
@@ -66,5 +107,26 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+def main() -> None:
+    """CLI entry point (the CI bench-smoke job): CSV to stdout, optional JSON
+    artifact comparable across commits via benchmarks.check_regression."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH", help="write rows as JSON")
+    args = ap.parse_args()
+
+    rows = run(csv=True)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        payload = {
+            "benchmark": "serving",
+            "devices": jax.device_count(),
+            "jax": jax.__version__,
+            "rows": [{"name": n, "value": v, "note": d} for n, v, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

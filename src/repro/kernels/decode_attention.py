@@ -1,0 +1,131 @@
+"""Batched GQA decode-attention kernel: one query token per sequence against
+the full [B, S_max, KV, hd] cache, per-slot valid lengths.
+
+This is the serving-engine hot path: every engine tick runs one of these per
+layer over all batch slots. The grid is (batch, KV head, S tiles); the
+query-head group rides inside the block (a [G, hd] tile — G = H//KV query
+heads share one KV head), so the cache is never expanded ``G``-fold. The
+per-slot length arrives as a scalar-prefetch-style SMEM operand and gates
+whole tiles: tiles entirely past ``cur_len`` are skipped (``pl.when``), so
+short slots in a long cache cost proportionally less.
+
+Semantics match ``ref.decode_attention``: key position ``t`` is valid iff
+``t <= cur_len`` (the new token was just scattered at index ``cur_len``),
+windowed by ``t > cur_len - window`` when ``window > 0``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import _online_softmax_update
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+    block_s: int, s_steps: int, window: int
+):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # this slot's cached-token count; the new token sits at index cur
+    cur = lens_ref[pl.program_id(0)]
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # [bs, d]
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (d**-0.5)
+        kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= cur
+        if window:
+            valid &= kpos > cur - window
+        s = jnp.where(valid, s, NEG_INF)
+        # zero rows of v that can't contribute (overhang reads are undefined)
+        vpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v_ok = vpos <= cur
+        if window:
+            v_ok &= vpos > cur - window
+        v = jnp.where(v_ok, v, 0.0)
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    # skip tiles entirely past the valid prefix (and before the window)
+    live = si * block_s <= cur
+    if window:
+        live &= (si + 1) * block_s > cur - window
+    pl.when(live)(_compute)
+
+    @pl.when(si == s_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_s", "interpret")
+)
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cur_len: jax.Array,
+    *,
+    window: int = 0,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, KV, G, d]; k/v: [B, S_max, KV, d]; cur_len: [B] int32.
+
+    Returns [B, KV, G, d] attention outputs for the single new token."""
+    b, kvh, g, d = q.shape
+    s_max = k.shape[1]
+    s_steps = pl.cdiv(s_max, block_s)
+    grid = (b, kvh, s_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec(
+                (1, block_s, 1, d), lambda bi, hi, si, lens: (bi, si, hi, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_s, 1, d), lambda bi, hi, si, lens: (bi, si, hi, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda bi, hi, si, lens: (bi, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, block_s=block_s, s_steps=s_steps, window=window
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(cur_len, q, k, v)

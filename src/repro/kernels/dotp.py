@@ -2,7 +2,9 @@
 
 Grid of VMEM blocks, each contributing a partial f32 sum; the partials land
 in a [grid] output reduced by the wrapper (tree reduction outside keeps the
-kernel single-pass and avoids cross-block sequential dependencies)."""
+kernel single-pass and avoids cross-block sequential dependencies). The C
+overhang of the tail block is zeroed in-kernel with an iota mask, so the
+dispatch layer never pads."""
 
 from __future__ import annotations
 
@@ -13,29 +15,35 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _dotp_kernel(x_ref, y_ref, o_ref):
-    o_ref[0, 0] = jnp.sum(
-        x_ref[...].astype(jnp.float32) * y_ref[...].astype(jnp.float32)
-    )
+def _dotp_kernel(x_ref, y_ref, o_ref, *, block: int, c_size: int):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    if c_size % block:  # tail block: mask the overhang out of the sum
+        pos = pl.program_id(1) * block + jax.lax.broadcasted_iota(
+            jnp.int32, x.shape, 1
+        )
+        x = jnp.where(pos < c_size, x, 0.0)
+        y = jnp.where(pos < c_size, y, 0.0)
+    o_ref[0, 0] = jnp.sum(x * y)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dotp_partials(
     x: jax.Array, y: jax.Array, *, block: int = 2048, interpret: bool = False
 ) -> jax.Array:
-    """x, y: [R, C]; returns [R, C//block] partial sums (f32)."""
+    """x, y: [R, C]; returns [R, cdiv(C, block)] partial sums (f32)."""
     r, c = x.shape
-    assert c % block == 0
-    grid = (r, c // block)
+    steps = pl.cdiv(c, block)
+    grid = (r, steps)
     return pl.pallas_call(
-        _dotp_kernel,
+        functools.partial(_dotp_kernel, block=block, c_size=c),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block), lambda i, j: (i, j)),
             pl.BlockSpec((1, block), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c // block), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((r, steps), jnp.float32),
         interpret=interpret,
     )(x, y)
 

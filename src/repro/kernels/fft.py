@@ -52,10 +52,9 @@ def fft(
     block_rows: int = 64,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Batched FFT over the last dim. re/im: [B, N], N a power of two,
-    B % block_rows == 0 (ops.fft pads)."""
+    """Batched FFT over the last dim. re/im: [B, N], N a power of two.
+    Arbitrary B (independent rows, masked tail)."""
     b, n = re.shape
-    assert b % block_rows == 0, (b, block_rows)
     twr, twi = fft_twiddles(n)
     stages = twr.shape[0]
     out_shape = (
@@ -64,7 +63,7 @@ def fft(
     )
     return pl.pallas_call(
         functools.partial(_fft_kernel, n=n),
-        grid=(b // block_rows,),
+        grid=(pl.cdiv(b, block_rows),),
         in_specs=[
             pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, n), lambda i: (i, 0)),

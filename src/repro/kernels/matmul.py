@@ -4,6 +4,11 @@ MXU-aligned (block_m × block_k) @ (block_k × block_n) tiles staged in VMEM,
 f32 accumulator scratch, K as the innermost sequential grid dim. The RVV
 kernel's strip-mined loop over vector registers becomes a 2-D systolic tile
 schedule — DESIGN.md §2 (hardware adaptation).
+
+Shapes need NOT divide the blocks: the grid ceil-divides and tail blocks
+mask the K overhang with an iota compare inside the kernel (out-of-bounds
+M/N rows/cols are dropped by Pallas' masked writes), so the dispatch layer
+never materializes padded copies.
 """
 
 from __future__ import annotations
@@ -16,14 +21,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+def _matmul_kernel(
+    a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, block_k: int, k_size: int
+):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    )
+    a = a_ref[...]
+    b = b_ref[...]
+    if k_size % block_k:  # K tail: zero the overhang in both operands
+        s = pl.program_id(2)
+        ka = s * block_k + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        kb = s * block_k + jax.lax.broadcasted_iota(jnp.int32, b.shape, 0)
+        a = jnp.where(ka < k_size, a, 0)
+        b = jnp.where(kb < k_size, b, 0)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _flush():
@@ -42,16 +55,16 @@ def matmul(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """[M,K] @ [K,N] -> [M,N]. Shapes must divide the block sizes
-    (``ops.matmul`` pads arbitrary shapes)."""
+    """[M,K] @ [K,N] -> [M,N]. Arbitrary shapes; tail blocks are masked."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    k_steps = k // block_k
-    grid = (m // block_m, n // block_n, k_steps)
+    k_steps = pl.cdiv(k, block_k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), k_steps)
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps),
+        functools.partial(
+            _matmul_kernel, k_steps=k_steps, block_k=block_k, k_size=k
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),

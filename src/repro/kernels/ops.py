@@ -1,8 +1,12 @@
 """Dispatch layer for the kernels: Pallas on TPU, interpret-mode Pallas for
 validation, jnp oracle fallback for fast CPU execution.
 
-Every op pads arbitrary shapes to the kernel's block grid and unpads the
-result, so callers never see the tiling constraints. ``mode`` resolution:
+Hot-path contract: no ``jnp.pad`` device copies. Kernels ceil-divide their
+grids and mask tail blocks in-kernel (iota compares against the true sizes),
+so arbitrary shapes dispatch straight through. Block sizes come from the
+autotuner (``repro.kernels.autotune``) unless the caller pins them; the
+resolved (mode, blocks) plan is memoized per static shape so repeat calls
+skip both the tuner consult and the block arithmetic. ``mode`` resolution:
 
 * ``auto``      — compiled Pallas on TPU, oracle elsewhere (production)
 * ``pallas``    — compiled Pallas (TPU only)
@@ -12,14 +16,17 @@ result, so callers never see the tiling constraints. ``mode`` resolution:
 
 from __future__ import annotations
 
-from typing import Literal
+import functools
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import (
+    autotune,
     axpy as _axpy_k,
     conv2d as _conv2d_k,
+    decode_attention as _decode_k,
     dotp as _dotp_k,
     fft as _fft_k,
     flash_attention as _flash_k,
@@ -42,104 +49,144 @@ def _resolve(mode: Mode) -> str:
     return mode
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x, size
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), size
+@functools.lru_cache(maxsize=4096)
+def _plan(
+    op: str, shape: tuple[int, ...], dtype_name: str, backend: str, gen: int
+) -> dict[str, int]:
+    """Memoized block plan for one static (op, shape, dtype, backend) cell.
+
+    ``gen`` is the tuner generation — swapping tuners (tests) invalidates
+    every memoized plan without touching this cache directly.
+    """
+    tuner = autotune.get_tuner()
+    hit = tuner.lookup(op, shape, dtype_name, backend)
+    if hit is not None:
+        return dict(hit)
+    # only build the measure closure (it allocates bucketed synthetic
+    # inputs) once we know the lookup missed and a sweep will actually run
+    measure = (
+        autotune.measure_for(op, shape, dtype_name, backend)
+        if tuner.sweep
+        else None
+    )
+    return tuner.get(op, shape, dtype_name, backend, measure=measure)
+
+
+def _blocks(op: str, shape: tuple[int, ...], dtype, backend: str) -> dict[str, int]:
+    return _plan(op, shape, jnp.dtype(dtype).name, backend, autotune.generation())
 
 
 # ---------------------------------------------------------------------------
 
 
-def matmul(a, b, *, mode: Mode = "auto", block: int = 128):
+def matmul(
+    a,
+    b,
+    *,
+    mode: Mode = "auto",
+    block: Optional[int] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+):
     m = _resolve(mode)
     if m == "ref":
         return ref.matmul(a, b)
-    a_p, m0 = _pad_to(a, 0, block)
-    a_p, k0 = _pad_to(a_p, 1, block)
-    b_p, _ = _pad_to(b, 0, block)
-    b_p, n0 = _pad_to(b_p, 1, block)
-    out = _matmul_k.matmul(
-        a_p, b_p, block_m=block, block_n=block, block_k=block,
+    m0, k0 = a.shape
+    n0 = b.shape[1]
+    if block is not None:
+        block_m = block_n = block_k = block
+    if block_m is None or block_n is None or block_k is None:
+        cfg = _blocks("matmul", (m0, k0, n0), a.dtype, m)  # fill the gaps
+        block_m = cfg["block_m"] if block_m is None else block_m
+        block_n = cfg["block_n"] if block_n is None else block_n
+        block_k = cfg["block_k"] if block_k is None else block_k
+    return _matmul_k.matmul(
+        a, b,
+        block_m=min(block_m, max(m0, 1)),
+        block_n=min(block_n, max(n0, 1)),
+        block_k=min(block_k, max(k0, 1)),
         interpret=(m == "interpret"),
     )
-    return out[:m0, :n0]
 
 
-def axpy(alpha, x, y, *, mode: Mode = "auto", block: int = 1024):
+def axpy(alpha, x, y, *, mode: Mode = "auto", block: Optional[int] = None):
     m = _resolve(mode)
     if m == "ref":
         return ref.axpy(alpha, x, y)
     orig_shape = x.shape
     x2 = x.reshape(1, -1) if x.ndim == 1 else x
     y2 = y.reshape(1, -1) if y.ndim == 1 else y
-    blk = min(block, x2.shape[-1]) if x2.shape[-1] % block else block
-    if x2.shape[-1] % blk:
-        blk = x2.shape[-1]  # tiny inputs: one block
-    x_p, c0 = _pad_to(x2, 1, blk)
-    y_p, _ = _pad_to(y2, 1, blk)
-    out = _axpy_k.axpy(alpha, x_p, y_p, block=blk, interpret=(m == "interpret"))
-    return out[:, :c0].reshape(orig_shape)
+    if block is None:
+        block = _blocks("axpy", x2.shape, x.dtype, m)["block"]
+    blk = min(block, x2.shape[-1])
+    out = _axpy_k.axpy(alpha, x2, y2, block=blk, interpret=(m == "interpret"))
+    return out.reshape(orig_shape)
 
 
-def dotp(x, y, *, mode: Mode = "auto", block: int = 2048):
+def dotp(x, y, *, mode: Mode = "auto", block: Optional[int] = None):
     m = _resolve(mode)
     if m == "ref":
         return ref.dotp(x, y)
     x2 = x.reshape(1, -1)
     y2 = y.reshape(1, -1)
+    if block is None:
+        block = _blocks("dotp", x2.shape, x.dtype, m)["block"]
     blk = min(block, x2.shape[-1])
-    x_p, _ = _pad_to(x2, 1, blk)
-    y_p, _ = _pad_to(y2, 1, blk)  # zero padding contributes 0 to the sum
-    return _dotp_k.dotp(x_p, y_p, block=blk, interpret=(m == "interpret"))
+    return _dotp_k.dotp(x2, y2, block=blk, interpret=(m == "interpret"))
 
 
-def softmax(x, *, mode: Mode = "auto", block_rows: int = 128):
+def softmax(x, *, mode: Mode = "auto", block_rows: Optional[int] = None):
     m = _resolve(mode)
     if m == "ref":
         return ref.softmax(x)
     orig = x.shape
     x2 = x.reshape(-1, orig[-1])
+    if block_rows is None:
+        block_rows = _blocks("softmax", x2.shape, x.dtype, m)["block_rows"]
     br = min(block_rows, x2.shape[0])
-    x_p, r0 = _pad_to(x2, 0, br)
-    out = _softmax_k.softmax(x_p, block_rows=br, interpret=(m == "interpret"))
-    return out[:r0].reshape(orig)
+    out = _softmax_k.softmax(x2, block_rows=br, interpret=(m == "interpret"))
+    return out.reshape(orig)
 
 
-def rmsnorm(x, w, *, eps: float = 1e-6, mode: Mode = "auto", block_rows: int = 128):
+def rmsnorm(
+    x, w, *, eps: float = 1e-6, mode: Mode = "auto",
+    block_rows: Optional[int] = None,
+):
     m = _resolve(mode)
     if m == "ref":
         return ref.rmsnorm(x, w, eps)
     orig = x.shape
     x2 = x.reshape(-1, orig[-1])
+    if block_rows is None:
+        block_rows = _blocks("rmsnorm", x2.shape, x.dtype, m)["block_rows"]
     br = min(block_rows, x2.shape[0])
-    x_p, r0 = _pad_to(x2, 0, br)
-    out = _rmsnorm_k.rmsnorm(x_p, w, eps=eps, block_rows=br, interpret=(m == "interpret"))
-    return out[:r0].reshape(orig)
+    out = _rmsnorm_k.rmsnorm(x2, w, eps=eps, block_rows=br, interpret=(m == "interpret"))
+    return out.reshape(orig)
 
 
-def fft(re, im, *, mode: Mode = "auto", block_rows: int = 64):
+def fft(re, im, *, mode: Mode = "auto", block_rows: Optional[int] = None):
     m = _resolve(mode)
     if m == "ref":
         return ref.fft(re, im)
+    if block_rows is None:
+        block_rows = _blocks("fft", re.shape, re.dtype, m)["block_rows"]
     br = min(block_rows, re.shape[0])
-    re_p, b0 = _pad_to(re, 0, br)
-    im_p, _ = _pad_to(im, 0, br)
-    o_re, o_im = _fft_k.fft(re_p, im_p, block_rows=br, interpret=(m == "interpret"))
-    return o_re[:b0], o_im[:b0]
+    return _fft_k.fft(re, im, block_rows=br, interpret=(m == "interpret"))
 
 
-def conv2d(x, w, *, mode: Mode = "auto", block_h: int = 8):
+def conv2d(x, w, *, mode: Mode = "auto", block_h: Optional[int] = None):
     m = _resolve(mode)
     if m == "ref":
         return ref.conv2d(x, w)
     kh = w.shape[0]
     h_out = x.shape[1] - kh + 1
+    if block_h is None:
+        block_h = _blocks("conv2d", x.shape, x.dtype, m)["block_h"]
     bh = min(block_h, h_out)
+    # conv2d keeps the padded-wrapper path: its in-kernel halo slice clamps
+    # at the image edge, so a masked tail tile would read shifted rows. Not
+    # an LM hot path — the pad only fires for ragged H anyway.
     pad = (-h_out) % bh
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -148,9 +195,12 @@ def conv2d(x, w, *, mode: Mode = "auto", block_h: int = 8):
 
 
 def flash_attention(
-    q, k, v, *, causal: bool = True, mode: Mode = "auto", block: int = 128
+    q, k, v, *, causal: bool = True, mode: Mode = "auto",
+    block: Optional[int] = None,
+    block_q: Optional[int] = None, block_k: Optional[int] = None,
 ):
-    """q/k/v: [B, H, S, d] or [BH, S, d]."""
+    """q/k/v: [B, H, S, d] or [BH, S, d]. Arbitrary S — the kernel's
+    key-validity mask covers the K overhang (causal and non-causal alike)."""
     m = _resolve(mode)
     squeeze = False
     if q.ndim == 3:
@@ -163,20 +213,77 @@ def flash_attention(
     qf = q.reshape(b * h, s, d)
     kf = k.reshape(b * h, k.shape[2], d)
     vf = v.reshape(b * h, v.shape[2], d)
-    bq = min(block, s)
-    bk = min(block, kf.shape[1])
-    # pad S to block multiples; padded q rows are discarded, padded k cols are
-    # masked by causality only when causal — for non-causal we must mask, so
-    # fall back to oracle when padding is needed on K and not causal.
-    if (s % bq or kf.shape[1] % bk) and not causal:
-        out = ref.flash_attention(q, k, v, causal=causal)
-        return out[0] if squeeze else out
-    qf, s0 = _pad_to(qf, 1, bq)
-    kf, _ = _pad_to(kf, 1, bk)
-    vf, _ = _pad_to(vf, 1, bk)
+    if block is not None:
+        block_q = block_k = block
+    if block_q is None or block_k is None:
+        cfg = _blocks("flash_attention", qf.shape, q.dtype, m)  # fill the gaps
+        block_q = cfg["block_q"] if block_q is None else block_q
+        block_k = cfg["block_k"] if block_k is None else block_k
     out = _flash_k.flash_attention(
-        qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+        qf, kf, vf, causal=causal,
+        block_q=min(block_q, s), block_k=min(block_k, kf.shape[1]),
         interpret=(m == "interpret"),
     )
-    out = out[:, :s0].reshape(b, h, s0, d)
+    out = out.reshape(b, h, s, d)
     return out[0] if squeeze else out
+
+
+def gqa_flash_attention(
+    q, k, v, *, causal: bool = True, mode: Mode = "auto",
+    block_q: Optional[int] = None, block_k: Optional[int] = None,
+):
+    """GQA-native attention: q [B, H, S, d], k/v [B, KV, S, d], H % KV == 0.
+
+    K/V are never expanded to H heads — the kernel broadcasts each KV tile
+    across the query-head group via the grid, the oracle via einsum."""
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d).reshape(b * kvh, g, sq, d)
+    kf = k.reshape(b * kvh, k.shape[2], d)
+    vf = v.reshape(b * kvh, v.shape[2], d)
+    m = _resolve(mode)
+    if m == "ref":
+        out = ref.gqa_flash_attention(qg, kf, vf, causal=causal)
+    else:
+        if block_q is None or block_k is None:
+            cfg = _blocks("gqa_flash_attention", qg.shape, q.dtype, m)
+            block_q = cfg["block_q"] if block_q is None else block_q
+            block_k = cfg["block_k"] if block_k is None else block_k
+        out = _flash_k.gqa_flash_attention(
+            qg, kf, vf, causal=causal,
+            block_q=min(block_q, sq), block_k=min(block_k, kf.shape[1]),
+            interpret=(m == "interpret"),
+        )
+    return out.reshape(b, h, sq, d)
+
+
+def decode_attention(
+    q, k, v, cur_len, *, window: int = 0, mode: Mode = "auto",
+    block_s: Optional[int] = None,
+):
+    """Batched single-token decode attention against the KV cache.
+
+    q: [B, H, d] (the new token's query heads); k/v: [B, S_max, KV, d]
+    (decode-cache layout, possibly lower-precision storage); cur_len: []
+    or [B] tokens already cached per slot. Returns [B, H, d]."""
+    b, h, d = q.shape
+    s_max, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    m = _resolve(mode)
+    if m == "ref":
+        out = ref.decode_attention(qg, k, v, cur_len, window=window)
+    else:
+        if block_s is None:
+            block_s = _blocks("decode_attention", k.shape, q.dtype, m)["block_s"]
+        # no pre-cast of the cache: the kernel upcasts per-tile (f8/bf16
+        # storage reads stay at storage width in HBM)
+        out = _decode_k.decode_attention(
+            qg, k, v, cur_len,
+            window=window, block_s=min(block_s, s_max),
+            interpret=(m == "interpret"),
+        )
+    return out.reshape(b, h, d)

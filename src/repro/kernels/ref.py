@@ -70,6 +70,53 @@ def flash_attention(
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def gqa_flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """GQA oracle. q: [BKV, G, Sq, d]; k/v: [BKV, Sk, d] (no head repeat)."""
+    bkv, g, sq, d = q.shape
+    sk = k.shape[1]
+    scale = d**-0.5
+    scores = jnp.einsum("bgqd,bkd->bgqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgqk,bkd->bgqd", p.astype(v.dtype), v)
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cur_len: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token grouped decode attention oracle.
+
+    q: [B, KV, G, d]; k/v: [B, S_max, KV, d]; cur_len: [] or [B] tokens
+    already cached (the new token was scattered at index cur_len, so key
+    position t is valid iff t <= cur_len). Returns [B, KV, G, d] in f32
+    softmax math, cast back to q.dtype.
+    """
+    b, kvh, g, d = q.shape
+    s_max = k.shape[1]
+    scale = d**-0.5
+    scores = (
+        jnp.einsum("bkgd,btkd->bkgt", q, k.astype(q.dtype)).astype(jnp.float32)
+        * scale
+    )  # [B,KV,G,S]
+    kpos = jnp.arange(s_max)[None, :]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None]
+    valid = kpos <= cur
+    if window:
+        valid &= kpos > cur - window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(q.dtype))
+
+
 def fft_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-stage Stockham radix-2 twiddle table [log2(n), n//2] (re, im).
 

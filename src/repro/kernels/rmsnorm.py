@@ -29,12 +29,11 @@ def rmsnorm(
     block_rows: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """x: [R, C], w: [C]."""
+    """x: [R, C], w: [C]. Arbitrary R (independent rows, masked tail)."""
     r, c = x.shape
-    assert r % block_rows == 0
     return pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(r // block_rows,),
+        grid=(pl.cdiv(r, block_rows),),
         in_specs=[
             pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
             pl.BlockSpec((c,), lambda i: (0,)),

@@ -23,12 +23,12 @@ def _softmax_kernel(x_ref, o_ref):
 def softmax(
     x: jax.Array, *, block_rows: int = 128, interpret: bool = False
 ) -> jax.Array:
-    """x: [R, C]; whole row per block (rows up to a few K wide fit VMEM)."""
+    """x: [R, C]; whole row per block (rows up to a few K wide fit VMEM).
+    Arbitrary R — rows are independent, so tail-block writes mask cleanly."""
     r, c = x.shape
-    assert r % block_rows == 0
     return pl.pallas_call(
         _softmax_kernel,
-        grid=(r // block_rows,),
+        grid=(pl.cdiv(r, block_rows),),
         in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),

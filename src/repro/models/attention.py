@@ -1,11 +1,15 @@
 """Attention: GQA/MHA with dense and memory-efficient (chunked online-softmax)
 implementations, qk-norm, RoPE, sliding windows, and a KV-cache decode path.
 
-The chunked implementation is the CPU/XLA analogue of the Pallas
-flash-attention kernel (``repro.kernels.flash_attention``): it never
-materializes the full S×S score matrix — it scans KV blocks carrying the
-online (max, sum, acc) triple. On TPU the Pallas kernel takes over via
-``repro.kernels.ops.flash_attention``.
+All three implementations are GQA-native: K/V stay at ``n_kv_heads`` and the
+query heads are grouped ``[B, S, KV, G, hd]`` inside the einsums, so the
+``H//KV``-fold K/V expansion (`_repeat_kv`) is never materialized. The
+chunked implementation is the CPU/XLA analogue of the Pallas flash-attention
+kernel (``repro.kernels.ops.gqa_flash_attention``, which takes over on TPU):
+it never materializes the full S×S score matrix — it scans KV blocks
+carrying the online (max, sum, acc) triple. Decode dispatches through
+``repro.kernels.ops.decode_attention`` (grouped oracle on CPU, the batched
+Pallas decode kernel on TPU).
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models.layers import Params, apply_rope, dense_init, rms_norm
 
 NEG_INF = -1e30
@@ -47,12 +52,24 @@ def attention_init(key, cfg: ArchConfig, dtype) -> Params:
 
 
 def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
-    """[B, S, KV, hd] -> [B, S, KV*groups, hd] by head repetition."""
+    """[B, S, KV, hd] -> [B, S, KV*groups, hd] by head repetition.
+
+    Kept as a reference utility (and for external callers); the attention
+    paths below are GQA-native and never call it.
+    """
     if groups == 1:
         return x
     b, s, kv, hd = x.shape
     x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, groups, hd))
     return x.reshape(b, s, kv * groups, hd)
+
+
+def _group_q(q: jax.Array, kv_heads: int) -> jax.Array:
+    """[B, Sq, H, hd] -> [B, Sq, KV, G, hd] (head-major grouping: query head
+    h belongs to KV head h // G)."""
+    b, sq, h, hd = q.shape
+    assert h % kv_heads == 0, (h, kv_heads)
+    return q.reshape(b, sq, kv_heads, h // kv_heads, hd)
 
 
 def dense_attention(
@@ -66,13 +83,20 @@ def dense_attention(
 ) -> jax.Array:
     """Reference attention materializing the full score matrix.
 
-    q: [B, Sq, H, hd], k/v: [B, Sk, H, hd] (already GQA-expanded).
+    q: [B, Sq, H, hd], k/v: [B, Sk, KV, hd] with H % KV == 0 (KV == H is
+    plain MHA). The group dim lives inside the einsum — no K/V repetition.
     q_offset: absolute position of q[0] (for causal masking vs a longer k).
     """
     b, sq, h, hd = q.shape
-    sk = k.shape[1]
+    sk, kvh = k.shape[1], k.shape[2]
     scale = hd**-0.5
-    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if kvh == h:  # MHA: flat 4-D einsums (cheaper to compile/lower than 5-D)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    else:
+        qg = _group_q(q, kvh)  # [B,Sq,KV,G,hd]
+        scores = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+        )  # [B,KV,G,Sq,Sk]
     qpos = jnp.arange(sq)[:, None] + q_offset
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), dtype=bool)
@@ -80,10 +104,13 @@ def dense_attention(
         mask &= kpos <= qpos
     if window:
         mask &= kpos > qpos - window
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    mask = mask[None, None] if kvh == h else mask[None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
-    return out
+    if kvh == h:
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
 
 
 def chunked_attention(
@@ -98,64 +125,78 @@ def chunked_attention(
 ) -> jax.Array:
     """Flash-style online-softmax attention scanning KV chunks.
 
-    Never materializes [Sq, Sk]; per-step footprint is [B, H, Sq, chunk].
+    q: [B, Sq, H, hd], k/v: [B, Sk, KV, hd] with H % KV == 0. Never
+    materializes [Sq, Sk]; per-step footprint is [B, KV, G, Sq, chunk].
     Matches :func:`dense_attention` to fp tolerance.
     """
     b, sq, h, hd = q.shape
-    sk = k.shape[1]
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    grouped = kvh != h  # GQA: group dim inside the einsums, no K/V repeat
     if sk % chunk:
         pad = chunk - sk % chunk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        pad_mask = jnp.arange(sk + pad) < sk  # [Skp]
+        pad_mask = True
     else:
-        pad = 0
-        pad_mask = None
+        pad_mask = False
     skp = k.shape[1]
     n_chunks = skp // chunk
     scale = hd**-0.5
 
-    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
-    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
 
     qpos = jnp.arange(sq) + q_offset  # [Sq]
-    qf = q.astype(jnp.float32)
+    if grouped:
+        qf = _group_q(q, kvh).astype(jnp.float32)  # [B,Sq,KV,G,hd]
+        qk, pv = "bqkgd,bckd->bkgqc", "bkgqc,bckd->bkgqd"
+        head_shape = (b, kvh, g)
+    else:  # MHA: flat 4-D einsums (cheaper to compile/lower than 5-D)
+        qf = q.astype(jnp.float32)
+        qk, pv = "bqhd,bchd->bhqc", "bhqc,bchd->bhqd"
+        head_shape = (b, h)
+    n_mask_dims = len(head_shape)  # leading broadcast dims for the [Sq,c] mask
 
     @jax.checkpoint
     def body(carry, xs):
-        # rematted: the [B,H,Sq,chunk] probability block is recomputed in
-        # backward rather than saved per KV chunk
-        m, l, acc = carry  # [B,H,Sq], [B,H,Sq], [B,H,Sq,hd]
-        kci, vci, ci = xs  # [B,chunk,H,hd] x2, scalar chunk index
-        scores = (
-            jnp.einsum("bqhd,bkhd->bhqk", qf, kci.astype(jnp.float32)) * scale
-        )  # [B,H,Sq,chunk]
+        # rematted: the [B,heads...,Sq,chunk] probability block is recomputed
+        # in backward rather than saved per KV chunk
+        m, l, acc = carry  # [*head,Sq], [*head,Sq], [*head,Sq,hd]
+        kci, vci, ci = xs  # [B,chunk,KV,hd] x2, scalar chunk index
+        scores = jnp.einsum(qk, qf, kci.astype(jnp.float32)) * scale
         kpos = ci * chunk + jnp.arange(chunk)  # [chunk]
         mask = jnp.ones((sq, chunk), dtype=bool)
         if causal:
             mask &= kpos[None, :] <= qpos[:, None]
         if window:
             mask &= kpos[None, :] > qpos[:, None] - window
-        if pad_mask is not None:
+        if pad_mask:
             mask &= (kpos < sk)[None, :]
-        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        scores = jnp.where(
+            mask.reshape((1,) * (n_mask_dims - 1) + (1, sq, chunk)), scores, NEG_INF
+        )
         m_new = jnp.maximum(m, scores.max(axis=-1))
         p = jnp.exp(scores - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
-            "bhqk,bkhd->bhqd", p, vci.astype(jnp.float32)
+            pv, p, vci.astype(jnp.float32)
         )
         return (m_new, l_new, acc_new), None
 
-    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, h, sq), jnp.float32)
-    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((*head_shape, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((*head_shape, sq), jnp.float32)
+    acc0 = jnp.zeros((*head_shape, sq, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
         body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
     )
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,hd]
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # [*head,Sq,hd]
+    if grouped:
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    else:
+        out = out.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)  # [B,Sq,H,hd]
 
 
 # ---------------------------------------------------------------------------
@@ -175,8 +216,9 @@ def attention_apply(
     """Self-attention over a full sequence (train / prefill).
 
     x: [B, S, d]; positions: [S] or [B, S]. With ``return_kv`` also returns
-    the post-rope, pre-GQA-expansion (k, v) [B,S,KV,hd] — exactly the decode
-    cache layout, enabling prefill-into-cache.
+    the post-rope (k, v) [B,S,KV,hd] — exactly the decode cache layout,
+    enabling prefill-into-cache. On TPU the full-attention window-free case
+    routes to the GQA-native Pallas flash kernel.
     """
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     impl = impl or cfg.attn_impl
@@ -192,10 +234,21 @@ def attention_apply(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     kv_cache = (k, v) if return_kv else None
-    k = _repeat_kv(k, H // KV)
-    v = _repeat_kv(v, H // KV)
 
-    if impl == "dense":
+    # Pallas GQA flash kernel on TPU, but only on the prefill path
+    # (return_kv=True): pallas_call has no VJP, so the training forward
+    # (which jax.grad traverses) must stay on the XLA implementations.
+    if (
+        return_kv
+        and jax.default_backend() == "tpu"
+        and not cfg.sliding_window
+    ):
+        # [B,S,H,hd] -> [B,H,S,d] / [B,KV,S,d] for the Pallas GQA kernel
+        o = ops.gqa_flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+        ).transpose(0, 2, 1, 3)
+    elif impl == "dense":
         o = dense_attention(q, k, v, causal=True, window=cfg.sliding_window)
     else:
         o = chunked_attention(
@@ -225,9 +278,7 @@ def attention_decode(
     x: [B, 1, d]; cache_k/v: [B, S_max, KV, hd]; cur_len: [] or [B] tokens
     already in the cache. Returns (out [B,1,d], new_k, new_v).
     """
-    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, _, d = x.shape
-    s_max = cache_k.shape[1]
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
@@ -243,27 +294,12 @@ def attention_decode(
     cache_k = _scatter_step(cache_k, k, cur_len)
     cache_v = _scatter_step(cache_v, v, cur_len)
 
-    # grouped-GQA scores: never expand the cache to H heads (materializing
-    # [B,S,H,hd] per layer is a groups× transient blowup at 32k context)
-    g = H // KV
-    qg = q.reshape(b, 1, KV, g, hd)
-    scale = hd**-0.5
-    scores = (
-        jnp.einsum("bqkgd,btkd->bkgqt", qg, cache_k.astype(q.dtype)).astype(
-            jnp.float32
-        )
-        * scale
-    )  # [B,KV,G,1,S]  (cache may be f8 storage; compute in model dtype)
-    kpos = jnp.arange(s_max)[None, :]  # [1, S]
-    valid = kpos <= jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None]
-    if cfg.sliding_window:
-        valid &= kpos > (
-            jnp.broadcast_to(jnp.asarray(cur_len), (b,))[:, None] - cfg.sliding_window
-        )
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    o = jnp.einsum("bkgqt,btkd->bqkgd", probs, cache_v.astype(q.dtype))
-    o = o.reshape(b, 1, H, hd)
+    # grouped decode attention: never expands the cache to H heads
+    # (materializing [B,S,H,hd] per layer is a groups× transient blowup at
+    # 32k context); cache may be f8 storage — compute in model dtype
+    o = ops.decode_attention(
+        q[:, 0], cache_k, cache_v, cur_len, window=cfg.sliding_window
+    )[:, None]  # [B,1,H,hd]
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
     return out, cache_k, cache_v
 
@@ -271,15 +307,21 @@ def attention_decode(
 def _scatter_step(cache: jax.Array, new: jax.Array, cur_len: jax.Array) -> jax.Array:
     """Write new [B,1,...] into cache [B,S,...] at position cur_len (per-batch).
 
-    Scalar ``cur_len`` (all sequences aligned — the dry-run decode cells) uses
-    a cheap dynamic_update_slice; per-batch lengths use a one-hot blend.
+    Scalar ``cur_len`` (all sequences aligned — the dry-run decode cells)
+    uses one dynamic_update_slice; per-batch lengths use a vmapped
+    dynamic_update_slice — an O(1)-per-row write instead of the old O(S)
+    one-hot blend that read+wrote the entire cache every decode step.
     """
     cur_len = jnp.asarray(cur_len)
     if cur_len.ndim == 0:
         start = (0, cur_len) + (0,) * (cache.ndim - 2)
         return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), start)
-    b, s = cache.shape[:2]
+    b = cache.shape[0]
     pos = jnp.broadcast_to(cur_len, (b,))
-    onehot = (jnp.arange(s)[None, :] == pos[:, None]).astype(cache.dtype)
-    onehot = onehot.reshape(b, s, *((1,) * (cache.ndim - 2)))
-    return cache * (1 - onehot) + onehot * new.astype(cache.dtype)
+
+    def write_row(c, n, p):  # c: [S,...], n: [1,...], p: []
+        return jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (p,) + (0,) * (c.ndim - 1)
+        )
+
+    return jax.vmap(write_row)(cache, new, pos)

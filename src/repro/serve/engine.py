@@ -3,20 +3,38 @@
 A fixed pool of ``batch_slots`` cache slots; requests are admitted into free
 slots via single-sequence prefill (scattered into the batched cache at the
 slot index), and every engine tick advances ALL active slots one token with
-one jitted ``decode_step`` (per-slot ``cur_len`` vector — the decode paths
-mask per-slot). Finished slots free immediately and the next waiting request
-is admitted: classic continuous batching, sized down.
+one jitted fused tick (per-slot ``cur_len`` vector — the decode paths mask
+per-slot). Finished slots free immediately and the next waiting request is
+admitted: classic continuous batching, sized down.
 
-Notes:
-* prefill compiles per distinct prompt length (exact-length prefill keeps
-  SSM states clean — right-padding would pollute the recurrence; production
-  TPU serving would bucket attention-only archs).
-* sampling (greedy / temperature) happens host-side on the [B, V] logits.
+Hot-path structure (what makes a serving token cheap here):
+
+* ONE jitted dispatch per CHUNK of ticks: decode + device-side sampling
+  (greedy argmax / gumbel-max per-slot temperature over the [B, V] logits)
+  + the per-slot ``cur_len`` advance are fused and scanned ``k`` steps
+  deep, where ``k`` (bucketed to {1,2,4,8}) is the largest chunk in which
+  no slot can finish — termination depends only on counts, so the host
+  knows ``k`` in advance and chunking is output-invariant. A steady-state
+  chunk ships zero host arrays to the device and no [B, V] logits to the
+  host, and the per-dispatch overhead amortizes ``k``-fold;
+* tick state (last tokens, cur_len, PRNG key) is device-resident; host
+  bookkeeping tracks counts only and harvests tick t-1's token values while
+  tick t computes (termination depends on counts, never on token values);
+  admission/finish events update the device state through small "override
+  lane" arrays that are cached device zeros between events;
+* the decode cache is donated to each chunk — the engine never holds two
+  copies of the KV cache;
+* prefill lengths are bucketed to powers of two for attention-only archs
+  (causal masking + per-slot cur_len make right-padding invisible), so a
+  stream of ragged prompts hits a handful of compiled prefills instead of
+  one per distinct length. SSM/hybrid archs keep exact-length prefill —
+  right-padding would pollute the recurrent state.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -34,6 +52,7 @@ class Request:
     max_new: int
     temperature: float = 0.0
     generated: list[int] = field(default_factory=list)
+    n_generated: int = 0  # tokens sampled so far (values may still be in flight)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
@@ -45,10 +64,19 @@ class ServeStats:
     total_requests: int = 0
     wall_seconds: float = 0.0
     ticks: int = 0
+    prefill_compiles: int = 0
 
     @property
     def tokens_per_sec(self) -> float:
         return self.total_tokens / max(self.wall_seconds, 1e-9)
+
+
+def _bucket_len(s: int, max_len: int) -> int:
+    """Next power of two ≥ s, capped at max_len (prefill compile buckets)."""
+    b = 1
+    while b < s:
+        b *= 2
+    return min(b, max_len) if b > s else b
 
 
 class ServeEngine:
@@ -67,14 +95,33 @@ class ServeEngine:
         self.max_len = max_len
         self.cache = model.init_cache(batch_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
-        self.slot_len = np.zeros(batch_slots, np.int32)
-        self.last_token = np.zeros(batch_slots, np.int32)
+        self.slot_len = np.zeros(batch_slots, np.int32)  # host mirror (counts)
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
         self.rng = np.random.default_rng(seed)
-        self._decode = jax.jit(model.decode_step)
         self._prefill_cache = {}
-        self._insert = jax.jit(self._insert_fn)
+        # the cache is donated through both consumers — the engine never
+        # holds two copies of the KV cache
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._tick = jax.jit(
+            self._tick_fn, donate_argnums=(1,), static_argnames=("n_steps",)
+        )
+        # device-resident tick state: sampled tokens, per-slot lengths, PRNG
+        self._last_tok = jnp.zeros(batch_slots, jnp.int32)
+        self._cur_len = jnp.zeros(batch_slots, jnp.int32)
+        self._rng_key = jax.random.key(seed)
+        # event-driven device arrays (re-uploaded only when slots change)
+        self._active = jnp.zeros(batch_slots, bool)
+        self._temps = jnp.zeros(batch_slots, jnp.float32)
+        self._zero_mask = jnp.zeros(batch_slots, bool)
+        self._zero_i32 = jnp.zeros(batch_slots, jnp.int32)
+        self._ov_mask_h = np.zeros(batch_slots, bool)  # staged override lanes
+        self._ov_tok_h = np.zeros(batch_slots, np.int32)
+        self._ov_len_h = np.zeros(batch_slots, np.int32)
+        self._dirty = False  # overrides/active/temps pending upload
+        # right-padded prefill is only safe when nothing recurrent sees the
+        # pad tokens: attention masks them (causal + cur_len), SSM states don't
+        self._bucket_prefill = model.cfg.family in ("dense", "moe")
 
     # ------------------------------------------------------------ internals
 
@@ -87,26 +134,111 @@ class ServeEngine:
 
         return jax.tree.map(leaf, cache, one_cache)
 
-    def _prefill_one(self, req: Request, slot: int) -> np.ndarray:
+    @staticmethod
+    def _sample_batch_fn(logits, temps, key):
+        """One device-side sample for every slot. logits: [B, V] (any float
+        dtype), temps: [B] f32. Greedy slots take argmax; temperature slots
+        take gumbel-max (categorical) at their own temperature."""
+        logits = logits.astype(jnp.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        gumbel = jax.random.gumbel(key, logits.shape, jnp.float32)
+        scaled = logits / jnp.maximum(temps, 1e-6)[:, None] + gumbel
+        sampled = jnp.argmax(scaled, axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy)
+
+    def _tick_fn(self, params, cache, last_tok, cur_len, ov_mask, ov_tok, ov_len,
+                 active, temps, key, n_steps: int = 1):
+        """One fused engine dispatch: fold the admission override lanes into
+        the device state, then run ``n_steps`` decode+sample steps as a
+        device-side scan. Everything stays on device; the per-dispatch
+        overhead (and, without donation, the KV-cache copy) amortizes over
+        the whole chunk. Returns toks [n_steps, B].
+
+        Chunking never changes results: the host only chooses ``n_steps``
+        such that no slot can finish (and hence no admission can land)
+        inside the chunk, and the PRNG split chain per step is identical to
+        n_steps=1 dispatches.
+        """
+        last_tok = jnp.where(ov_mask, ov_tok, last_tok)
+        cur_len = jnp.where(ov_mask, ov_len, cur_len)
+        adv = active.astype(jnp.int32)
+
+        def step(carry, _):
+            tok, cl, cache, key = carry
+            logits, cache = self.model.decode_step(
+                params, cache, {"tokens": tok[:, None]}, cl
+            )
+            key, sub = jax.random.split(key)
+            tok = self._sample_batch_fn(logits[:, 0], temps, sub)
+            return (tok, cl + adv, cache, key), tok
+
+        (last_tok, cur_len, cache, key), toks = jax.lax.scan(
+            step, (last_tok, cur_len, cache, key), None, length=n_steps
+        )
+        return toks, last_tok, cur_len, cache, key
+
+    def _prefill_one(self, req: Request, slot: int, stats: Optional[ServeStats]) -> np.ndarray:
         s = len(req.prompt)
-        if s not in self._prefill_cache:
-            self._prefill_cache[s] = jax.jit(
+        sb = _bucket_len(s, self.max_len) if self._bucket_prefill else s
+        sb = max(sb, s)
+        if sb not in self._prefill_cache:
+            self._prefill_cache[sb] = jax.jit(
                 lambda p, b: self.model.prefill(p, b, self.max_len)
             )
-        logits, one_cache = self._prefill_cache[s](
-            self.params, {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            if stats is not None:
+                stats.prefill_compiles += 1
+        toks = np.zeros(sb, np.int32)
+        toks[:s] = req.prompt
+        logits, one_cache = self._prefill_cache[sb](
+            self.params, {"tokens": jnp.asarray(toks, jnp.int32)[None]}
         )
         self.cache = self._insert(self.cache, one_cache, jnp.int32(slot))
-        return np.asarray(logits[0, -1])  # last-position logits
+        return np.asarray(logits[0, s - 1])  # last REAL position's logits
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        """Host-side single sample (prefill first-token path)."""
         if temperature <= 0:
             return int(np.argmax(logits))
-        z = logits.astype(np.float64) / temperature
+        z = np.asarray(logits, np.float64) / temperature
         z -= z.max()
         p = np.exp(z)
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
+
+    def _harvest(self, entry) -> None:
+        """Blockingly pull one chunk's sampled tokens and credit the slots'
+        requests. Called one chunk behind the dispatch, so this host transfer
+        overlaps the next chunk's device compute."""
+        tok_dev, items = entry
+        toks = np.asarray(tok_dev)  # [n_steps, B]
+        for slot, req in items:
+            req.generated.extend(int(t) for t in toks[:, slot])
+
+    def _flush_events(self):
+        """Upload pending slot changes; returns this tick's override lanes."""
+        if not self._dirty:
+            return self._zero_mask, self._zero_i32, self._zero_i32
+        self._active = jnp.asarray(
+            np.asarray([r is not None for r in self.slot_req]), bool
+        )
+        self._temps = jnp.asarray(
+            np.asarray(
+                [r.temperature if r is not None else 0.0 for r in self.slot_req],
+                np.float32,
+            )
+        )
+        # hand jax PRIVATE copies: CPU device_put of a numpy array can be
+        # zero-copy/deferred, so converting the live staging arrays and then
+        # mutating them below (or at the next admission) races the in-flight
+        # dispatch — observed as override lanes reading zeros mid-run
+        ov = (
+            jnp.asarray(self._ov_mask_h.copy()),
+            jnp.asarray(self._ov_tok_h.copy()),
+            jnp.asarray(self._ov_len_h.copy()),
+        )
+        self._ov_mask_h[:] = False
+        self._dirty = False
+        return ov
 
     # ------------------------------------------------------------------ API
 
@@ -114,47 +246,73 @@ class ServeEngine:
         req.submitted_at = time.perf_counter()
         self.waiting.append(req)
 
-    def _admit(self) -> None:
+    def _admit(self, stats: Optional[ServeStats] = None) -> None:
         for slot in range(self.B):
             if self.slot_req[slot] is None and self.waiting:
                 req = self.waiting.pop(0)
-                last_logits = self._prefill_one(req, slot)
+                last_logits = self._prefill_one(req, slot, stats)
                 tok = self._sample(last_logits, req.temperature)
                 req.generated.append(tok)
+                req.n_generated = len(req.generated)
                 req.first_token_at = time.perf_counter()
                 self.slot_req[slot] = req
                 self.slot_len[slot] = len(req.prompt)
-                self.last_token[slot] = tok
+                self._ov_mask_h[slot] = True
+                self._ov_tok_h[slot] = tok
+                self._ov_len_h[slot] = len(req.prompt)
+                self._dirty = True
 
     def run(self) -> ServeStats:
         """Drain all submitted requests; returns throughput stats."""
         stats = ServeStats()
         t0 = time.perf_counter()
-        self._admit()
+        self._admit(stats)
+        pending: deque = deque()
         while any(r is not None for r in self.slot_req) or self.waiting:
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
-            tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
-            cur_len = jnp.asarray(self.slot_len, jnp.int32)
-            logits, self.cache = self._decode(
-                self.params, self.cache, {"tokens": tokens}, cur_len
+            if not active:
+                self._admit(stats)
+                continue
+            # multi-step chunk: as long as no active slot can finish inside
+            # the chunk, k decode steps are one dispatch (bucketed to powers
+            # of two so at most 4 tick variants ever compile)
+            rem = min(
+                min(
+                    self.slot_req[i].max_new - self.slot_req[i].n_generated,
+                    self.max_len - 1 - int(self.slot_len[i]),
+                )
+                for i in active
             )
-            logits_np = np.asarray(logits[:, 0])
-            stats.ticks += 1
+            k = 8 if rem >= 8 else (4 if rem >= 4 else (2 if rem >= 2 else 1))
+            ov_mask, ov_tok, ov_len = self._flush_events()
+            toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+                self._tick(
+                    self.params, self.cache, self._last_tok, self._cur_len,
+                    ov_mask, ov_tok, ov_len, self._active, self._temps,
+                    self._rng_key, n_steps=k,
+                )
+            )
+            stats.ticks += k
+            pending.append((toks, [(i, self.slot_req[i]) for i in active]))
+            # bookkeeping needs only COUNTS — token values are harvested a
+            # chunk later, overlapping this chunk's device compute
             for i in active:
                 req = self.slot_req[i]
-                self.slot_len[i] += 1
-                tok = self._sample(logits_np[i], req.temperature)
-                req.generated.append(tok)
-                stats.total_tokens += 1
+                self.slot_len[i] += k
+                req.n_generated += k
+                stats.total_tokens += k
                 full = self.slot_len[i] + 1 >= self.max_len
-                if len(req.generated) >= req.max_new or full:
+                if req.n_generated >= req.max_new or full:
                     req.done_at = time.perf_counter()
                     self.finished.append(req)
                     self.slot_req[i] = None
                     self.slot_len[i] = 0
                     stats.total_requests += 1
-                else:
-                    self.last_token[i] = tok
-            self._admit()
+                    self._dirty = True
+            if len(pending) > 1:
+                self._harvest(pending.popleft())
+            self._admit(stats)
+        while pending:
+            self._harvest(pending.popleft())
         stats.wall_seconds = time.perf_counter() - t0
         return stats

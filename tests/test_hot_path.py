@@ -1,0 +1,121 @@
+"""Hot-path jaxpr inspection: the ops dispatch layer must not materialize
+``jnp.pad`` copies (tail handling lives in the kernels), and the GQA
+attention paths must not materialize the H//KV-fold K/V expansion."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import attention as attn_mod
+
+
+def _top_level_primitives(fn, *args):
+    """Primitive names of the traced fn's TOP-LEVEL jaxpr equations — the
+    dispatch layer itself, not the Pallas kernel bodies."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return [eqn.primitive.name for eqn in jaxpr.jaxpr.eqns]
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (100, 70, 130)])
+def test_matmul_dispatch_issues_no_pad(m, k, n):
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    prims = _top_level_primitives(
+        lambda x, y: ops.matmul(x, y, mode="interpret", block=32), a, b
+    )
+    assert "pad" not in prims, prims
+
+
+@pytest.mark.parametrize("s", [64, 96, 100])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_dispatch_issues_no_pad(s, causal):
+    q = jnp.zeros((2, 2, s, 16), jnp.float32)
+    prims = _top_level_primitives(
+        lambda x: ops.flash_attention(
+            x, x, x, causal=causal, mode="interpret", block=32
+        ),
+        q,
+    )
+    assert "pad" not in prims, prims
+
+
+def test_softmax_rmsnorm_axpy_dotp_dispatch_no_pad():
+    x = jnp.zeros((37, 130), jnp.float32)  # ragged both dims
+    w = jnp.zeros((130,), jnp.float32)
+    v = jnp.zeros((5000,), jnp.float32)
+    for fn, args in [
+        (lambda a: ops.softmax(a, mode="interpret", block_rows=16), (x,)),
+        (lambda a, b: ops.rmsnorm(a, b, mode="interpret", block_rows=16), (x, w)),
+        (lambda a: ops.axpy(2.0, a, a, mode="interpret", block=256), (x,)),
+        (lambda a: ops.dotp(a, a, mode="interpret", block=256), (v,)),
+    ]:
+        prims = _top_level_primitives(fn, *args)
+        assert "pad" not in prims, prims
+
+
+def test_decode_attention_dispatch_no_pad():
+    q = jnp.zeros((3, 6, 16), jnp.float32)
+    k = jnp.zeros((3, 40, 2, 16), jnp.float32)
+    cur = jnp.zeros((3,), jnp.int32)
+    prims = _top_level_primitives(
+        lambda a, b, c: ops.decode_attention(
+            a, b, b, c, mode="interpret", block_s=16
+        ),
+        q, k, cur,
+    )
+    assert "pad" not in prims, prims
+
+
+def _gqa_cfg():
+    return ArchConfig(
+        name="tiny", family="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+    )
+
+
+def test_attention_apply_never_calls_repeat_kv(monkeypatch):
+    cfg = _gqa_cfg()
+    params = attn_mod.attention_init(jax.random.key(0), cfg, jnp.float32)
+
+    def boom(x, groups):
+        raise AssertionError("_repeat_kv materialized in attention_apply")
+
+    monkeypatch.setattr(attn_mod, "_repeat_kv", boom)
+    x = jnp.zeros((1, 8, cfg.d_model), jnp.float32)
+    out = attn_mod.attention_apply(params, cfg, x, jnp.arange(8, dtype=jnp.int32))
+    assert out.shape == (1, 8, cfg.d_model)
+
+
+def test_attention_decode_never_calls_repeat_kv(monkeypatch):
+    cfg = _gqa_cfg()
+    params = attn_mod.attention_init(jax.random.key(0), cfg, jnp.float32)
+
+    def boom(x, groups):
+        raise AssertionError("_repeat_kv materialized in attention_decode")
+
+    monkeypatch.setattr(attn_mod, "_repeat_kv", boom)
+    x = jnp.zeros((2, 1, cfg.d_model), jnp.float32)
+    ck = jnp.zeros((2, 16, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    out, _, _ = attn_mod.attention_decode(
+        params, cfg, x, ck, ck, jnp.asarray([3, 5], jnp.int32)
+    )
+    assert out.shape == (2, 1, cfg.d_model)
+
+
+def test_gqa_flash_no_head_expansion_in_jaxpr():
+    """No top-level intermediate may carry an H-headed K/V: every broadcast
+    to [*, H(=4)-headed, S, d] K/V layout would show up as a broadcast eqn
+    whose output has 4 on the head axis with S=33 alongside."""
+    b, h, kv, s, d = 1, 4, 2, 33, 16
+    q = jnp.zeros((b, h, s, d), jnp.float32)
+    k = jnp.zeros((b, kv, s, d), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, c: ops.gqa_flash_attention(a, c, c, mode="interpret", block_q=16, block_k=16)
+    )(q, k)
+    expanded_kv_shape = (b * h, s, d)  # what a repeat would produce
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name in ("broadcast_in_dim", "concatenate"):
+            for out in eqn.outvars:
+                assert tuple(out.aval.shape) != expanded_kv_shape, eqn
