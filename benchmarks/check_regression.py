@@ -35,8 +35,16 @@ DEFAULT_BASELINE = os.path.join(
 _HIGHER_BETTER = ("tok_per_s", "speedup")
 _LOWER_BETTER = ("_ms", "_us", "_s", "_seconds", "_rel")
 # rows whose absolute value depends on the machine that measured them:
-# gated only when the current host fingerprint matches the baseline's
+# gated only when the current host fingerprint matches the baseline's.
+# All per-request latency rows (serve_engine_*_ttft_*/_tpot_*) ride the
+# "serve_engine" prefix — wall-clock through and through.
 _MACHINE_DEPENDENT = ("cpu_measured", "serve_engine")
+# open-loop arrival scenarios: run-to-run variance on a shared host
+# exceeds any sane tolerance (arrival alignment with tick boundaries
+# reshuffles the whole schedule — observed 1.0x-1.35x swings of the SAME
+# code). Reported and persisted for the per-PR trajectory, never gated;
+# the steady-state best-of-N rows are the enforceable serving gate.
+_REPORT_ONLY = ("_mixed_",)
 
 
 def host_fingerprint() -> dict:
@@ -87,6 +95,9 @@ def check(
             continue
         cur = current[name]
         direction = row_direction(name)
+        if any(t in name for t in _REPORT_ONLY):
+            print(f"  [info   ] {name}: {cur:.6g} vs {base:.6g} (trajectory row)")
+            continue
         if not same_host and any(t in name for t in _MACHINE_DEPENDENT):
             print(f"  [no-gate] {name}: {cur:.6g} vs {base:.6g} (different host)")
             continue

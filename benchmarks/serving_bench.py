@@ -2,13 +2,22 @@
 host (reduced arch) + modeled production decode throughput per arch from the
 dry-run decode cells (tokens/s/chip at the roofline step time).
 
-The measured section reports STEADY-STATE serving throughput: a small
-warmup drain first absorbs the one-time jit compiles (production serving
-compiles once and then serves millions of tokens), then a ragged-length
-request stream is timed end to end — decode ticks, admissions, prefills
-and sampling included. Ragged prompt lengths are deliberate: they exercise
-the prefill-bucketing path (without it, every distinct length is a fresh
-XLA compile in the measured region).
+Two measured scenarios:
+
+* **steady-state drain** — a small warmup drain absorbs the one-time jit
+  compiles (production serving compiles once and then serves millions of
+  tokens), then a pre-submitted ragged-length request stream is timed end
+  to end — decode ticks, admissions, prefills and sampling included.
+  Ragged prompt lengths are deliberate: they exercise the packed T-bucket
+  path (and the legacy prefill-bucketing path).
+* **mixed-arrival stream** — an open-loop timed arrival schedule (bursty
+  exponential inter-arrivals) drives BOTH engines over the identical
+  stream: the legacy engine (synchronous B=1 prefill per admission — every
+  admission stalls every decode slot) vs the unified ragged dispatch
+  (decode tokens and prefill chunks packed into one kernel per tick).
+  Reports tok/s and TTFT/TPOT p50/p99 per engine plus the unified/legacy
+  speedup — the serving analogue of the paper's merge-mode win on mixed
+  scalar-vector workloads.
 """
 
 from __future__ import annotations
@@ -33,14 +42,34 @@ PROMPT_LENS = (5, 8, 11, 13, 16, 19, 23, 27, 31, 34, 38, 43)  # ragged stream
 # before the measured region (otherwise rep 1 is compile-polluted)
 WARMUP_REQUESTS = len(PROMPT_LENS)
 
+# mixed-arrival scenario: oversubscribed open-loop stream (queueing and
+# admission/decode interference dominate — the regime the unified dispatch
+# exists for). Prompts are long relative to max_new, as in real serving.
+# The head-to-head pair runs the host-sensible unified config (budget ≥
+# every prompt → all admissions take the fused dense tier, the right call
+# on a CPU-oracle host); a third engine with a TIGHT budget then pushes
+# most prompts through the ragged chunked-pack tier so a regression in
+# the packed path is visible and gated on its own rows.
+MIXED_REQUESTS = 32
+MIXED_MAX_NEW = 8
+MIXED_PROMPT_RANGE = (12, 89)
+MIXED_BUDGET = 96  # == max_len: whole prompts fused (CPU-favored tier)
+MIXED_CHUNK_BUDGET = 32  # forces ≥33-token prompts through ragged packs
+MIXED_MEAN_IAT_S = 0.003  # bursty: far below the per-request service time
+
+
+def _model():
+    cfg = get_arch("codeqwen1.5-7b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
 
 def run(csv: bool = True) -> list[tuple[str, float, str]]:
     rows = []
 
     # ---- measured: the real engine on this host, reduced arch
-    cfg = get_arch("codeqwen1.5-7b").reduced()
-    model = LM(cfg)
-    params = model.init(jax.random.key(0))
+    cfg, model, params = _model()
     eng = ServeEngine(model, params, batch_slots=4, max_len=96)
     rng = np.random.default_rng(0)
 
@@ -76,6 +105,22 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     )
     rows.append(
         (
+            # recording-host-gated latency rows ('serve_engine' prefix):
+            # only compared against a baseline from the same machine
+            "serve_engine_ttft_p99_s",
+            best.ttft_p99,
+            "steady-state drain TTFT p99 (pre-submitted stream: includes queueing)",
+        )
+    )
+    rows.append(
+        (
+            "serve_engine_tpot_p50_s",
+            best.tpot_p50,
+            "steady-state drain per-request mean inter-token time, p50",
+        )
+    )
+    rows.append(
+        (
             # '_wall' suffix keeps this row OUT of the regression gate: jit
             # compile time is too machine-noisy for a ±20% wall-clock check
             "serve_engine_cold_start_wall",
@@ -107,25 +152,160 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+def _mixed_stream(cfg, seed: int = 42):
+    """One deterministic arrival schedule; fresh Request objects per call
+    (the engine mutates them)."""
+    arr = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(MIXED_REQUESTS):
+        t += float(arr.exponential(MIXED_MEAN_IAT_S))
+        s = int(arr.integers(*MIXED_PROMPT_RANGE))
+        out.append(
+            (
+                t,
+                Request(
+                    rid=i,
+                    prompt=arr.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+                    max_new=MIXED_MAX_NEW,
+                ),
+            )
+        )
+    return out
+
+
+def run_mixed(csv: bool = True) -> list[tuple[str, float, str]]:
+    """Mixed-arrival head-to-head: legacy vs unified on the same stream."""
+    cfg, model, params = _model()
+    rows = []
+    stats_by = {}
+    configs = (
+        ("legacy", False, MIXED_BUDGET),
+        ("unified", True, MIXED_BUDGET),
+        # chunked-tier coverage: most prompts stream through ragged packs
+        ("chunked", True, MIXED_CHUNK_BUDGET),
+    )
+    for name, unified, budget in configs:
+        eng = ServeEngine(
+            model, params, batch_slots=4, max_len=96,
+            unified=unified, prefill_budget=budget,
+        )
+        # prewarm + warmup drain cover every dispatch variant and prefill
+        # bucket this engine can hit, so the timed region measures serving,
+        # not XLA (one compile inside a live arrival stream stalls every
+        # queued request's TTFT). The warmup must include a > budget prompt
+        # so the ragged chunked tier's buckets are warm too.
+        eng.prewarm()
+        rng = np.random.default_rng(1)
+        for i, s in enumerate(
+            np.linspace(*MIXED_PROMPT_RANGE, 12).astype(int)
+        ):
+            eng.submit(
+                Request(
+                    rid=-1 - i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=int(s)).astype(
+                        np.int32
+                    ),
+                    max_new=MIXED_MAX_NEW,
+                )
+            )
+        eng.run()
+        # best-of-2 by throughput (all latency rows from the same run, for
+        # self-consistency): single-shot arrival streams are too noisy on a
+        # shared 2-vCPU host to commit as a ±20% gate baseline
+        stats = None
+        for _ in range(2):
+            s = eng.run(arrivals=_mixed_stream(cfg))
+            if stats is None or s.tokens_per_sec > stats.tokens_per_sec:
+                stats = s
+        stats_by[name] = stats
+        note = (
+            f"{stats.total_requests} reqs, {stats.ticks} ticks, "
+            f"{stats.prefill_compiles} compiles in timed region"
+        )
+        if name == "chunked":
+            # the chunked config exists to make the ragged pack path's
+            # throughput VISIBLE in the per-PR artifact trajectory (like
+            # every *_mixed_* row it is report-only — open-loop scenarios
+            # are too run-volatile for the ±20% gate); its latency profile
+            # is additionally a config artifact (a tight budget stretches
+            # admissions by design), so only tok/s is emitted
+            rows.append(
+                (
+                    f"serve_engine_mixed_{name}_tok_per_s",
+                    stats.tokens_per_sec,
+                    note + f" (ragged packed-prefill tier, budget {MIXED_CHUNK_BUDGET})",
+                )
+            )
+            continue
+        rows += [
+            (f"serve_engine_mixed_{name}_tok_per_s", stats.tokens_per_sec, note),
+            (f"serve_engine_mixed_{name}_ttft_p50_s", stats.ttft_p50, "arrival->first token"),
+            (f"serve_engine_mixed_{name}_ttft_p99_s", stats.ttft_p99, "arrival->first token, tail"),
+            (f"serve_engine_mixed_{name}_tpot_p50_s", stats.tpot_p50, "mean inter-token time"),
+            (f"serve_engine_mixed_{name}_tpot_p99_s", stats.tpot_p99, "mean inter-token time, tail"),
+        ]
+    rows.append(
+        (
+            "serve_engine_mixed_speedup",
+            stats_by["unified"].tokens_per_sec
+            / max(stats_by["legacy"].tokens_per_sec, 1e-9),
+            "unified ragged dispatch vs legacy engine, same arrival stream",
+        )
+    )
+    rows.append(
+        (
+            # deliberately NOT named *_speedup: a ratio of two p99 tails
+            # compounds their noise well past the ±20% gate, so this row is
+            # reported/persisted but never gated — the component
+            # *_ttft_p99_s rows gate individually against their baselines
+            "serve_engine_mixed_ttft_p99_gain",
+            stats_by["legacy"].ttft_p99 / max(stats_by["unified"].ttft_p99, 1e-9),
+            "TTFT p99 reduction factor (legacy/unified); report-only",
+        )
+    )
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
+def _write_json(path: str, rows, benchmark: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "benchmark": benchmark,
+        "devices": jax.device_count(),
+        "jax": jax.__version__,
+        "rows": [{"name": n, "value": v, "note": d} for n, v, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {len(rows)} rows -> {path}")
+
+
 def main() -> None:
     """CLI entry point (the CI bench-smoke job): CSV to stdout, optional JSON
-    artifact comparable across commits via benchmarks.check_regression."""
+    artifacts comparable across commits via benchmarks.check_regression."""
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default=None, metavar="PATH", help="write rows as JSON")
+    ap.add_argument("--json", default=None, metavar="PATH", help="write steady-state rows as JSON")
+    ap.add_argument(
+        "--mixed-json", default=None, metavar="PATH",
+        help="write mixed-arrival rows as JSON (also enables the scenario)",
+    )
+    ap.add_argument(
+        "--skip-steady", action="store_true",
+        help="run only the mixed-arrival scenario",
+    )
     args = ap.parse_args()
 
-    rows = run(csv=True)
-    if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        payload = {
-            "benchmark": "serving",
-            "devices": jax.device_count(),
-            "jax": jax.__version__,
-            "rows": [{"name": n, "value": v, "note": d} for n, v, d in rows],
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {len(rows)} rows -> {args.json}")
+    if not args.skip_steady:
+        rows = run(csv=True)
+        if args.json:
+            _write_json(args.json, rows, "serving")
+    if args.mixed_json is not None or args.skip_steady:
+        mixed = run_mixed(csv=True)
+        if args.mixed_json:
+            _write_json(args.mixed_json, mixed, "serving_mixed")
 
 
 if __name__ == "__main__":

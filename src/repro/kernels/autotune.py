@@ -39,6 +39,7 @@ DEFAULTS: dict[str, Config] = {
     "flash_attention": {"block_q": 128, "block_k": 128},
     "gqa_flash_attention": {"block_q": 128, "block_k": 128},
     "decode_attention": {"block_s": 256},
+    "ragged_attention": {"block_s": 256},
     "axpy": {"block": 1024},
     "dotp": {"block": 2048},
     "softmax": {"block_rows": 128},
@@ -64,6 +65,7 @@ CANDIDATES: dict[str, list[Config]] = {
         for (q, k) in [(64, 64), (128, 128), (128, 256), (256, 128), (256, 256)]
     ],
     "decode_attention": [{"block_s": s} for s in (128, 256, 512, 1024)],
+    "ragged_attention": [{"block_s": s} for s in (128, 256, 512, 1024)],
     "axpy": [{"block": b} for b in (256, 512, 1024, 2048, 4096)],
     "dotp": [{"block": b} for b in (512, 1024, 2048, 4096)],
     "softmax": [{"block_rows": r} for r in (32, 64, 128, 256)],

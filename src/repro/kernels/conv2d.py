@@ -5,11 +5,17 @@ row-tile is computed as ΣKH·KW small GEMMs — shifted input slices (VMEM)
 against the [C, O] weight plane for that tap, accumulated in f32. This keeps
 the MXU fed with [rows·W_out, C] @ [C, O] matmuls rather than VPU-only math.
 
-Grid: (batch, row-tiles). Pallas block index maps are in block units, so an
-overlapping (block_h + KH - 1)-tall halo block is not directly expressible;
-the whole image is staged per batch element (benchmark-scale images fit
-VMEM) and the halo'd row window is sliced inside the kernel. Larger images
-would use an explicit double-buffered DMA halo pipeline. Stride 1, VALID.
+Grid: (batch, row-tiles), ceil-divided — no host-side padding. Pallas block
+index maps are in block units, so an overlapping (block_h + KH - 1)-tall
+halo block is not directly expressible; the whole image AND the whole
+output plane are staged per batch element (benchmark-scale images fit VMEM)
+and both the halo'd input window and the output rows are sliced inside the
+kernel. A ragged tail tile is anchored at the image edge instead of masked:
+its halo slice starts at ``h_out - block_h`` (always in bounds), recomputing
+a few rows the previous tile already produced — the overlapping rows get
+identical values, so the rewrite is idempotent and no shifted-row hazard
+exists. Larger images would use an explicit double-buffered DMA halo
+pipeline. Stride 1, VALID.
 """
 
 from __future__ import annotations
@@ -22,14 +28,19 @@ from jax.experimental import pallas as pl
 
 
 def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, block_h: int):
-    # x_ref: [1, H, W, C] (whole image); o_ref: [1, block_h, W_out, O]
+    # x_ref: [1, H, W, C] (whole image); o_ref: [1, H_out, W_out, O] (whole
+    # output plane — rows are written via a dynamic slice so the tail tile
+    # can anchor at the edge)
     ri = pl.program_id(1)
     w_in = x_ref.shape[2]
     c = x_ref.shape[3]
     o = w_ref.shape[3]
+    h_out = o_ref.shape[1]
     w_out = w_in - kw + 1
+    # tail tile: anchor at the last valid start (overlap-recompute, not mask)
+    start = jnp.minimum(ri * block_h, h_out - block_h)
     x_tile = jax.lax.dynamic_slice(
-        x_ref[0], (ri * block_h, 0, 0), (block_h + kh - 1, w_in, c)
+        x_ref[0], (start, 0, 0), (block_h + kh - 1, w_in, c)
     )
     acc = jnp.zeros((block_h, w_out, o), jnp.float32)
     for i in range(kh):
@@ -41,7 +52,7 @@ def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, block_h: int):
                 tap,
                 preferred_element_type=jnp.float32,
             ).reshape(block_h, w_out, o)
-    o_ref[0, ...] = acc.astype(o_ref.dtype)
+    o_ref[0, pl.ds(start, block_h)] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
@@ -54,13 +65,15 @@ def conv2d(
 ) -> jax.Array:
     """x: [B, H, W, C]; w: [KH, KW, C, O]; VALID, stride 1.
 
-    block_h must divide H - KH + 1 (``ops.conv2d`` pads arbitrary shapes)."""
+    Arbitrary H: the grid ceil-divides and the tail tile overlaps the
+    previous one (``block_h`` must not exceed H - KH + 1; ``ops.conv2d``
+    clamps it)."""
     b, h, wd, c = x.shape
     kh, kw, c2, o = w.shape
     assert c == c2
     h_out, w_out = h - kh + 1, wd - kw + 1
-    assert h_out % block_h == 0, (h_out, block_h)
-    grid = (b, h_out // block_h)
+    assert block_h <= h_out, (h_out, block_h)
+    grid = (b, pl.cdiv(h_out, block_h))
     return pl.pallas_call(
         functools.partial(_conv2d_kernel, kh=kh, kw=kw, block_h=block_h),
         grid=grid,
@@ -69,7 +82,7 @@ def conv2d(
             pl.BlockSpec((kh, kw, c, o), lambda bi, ri: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, block_h, w_out, o), lambda bi, ri: (bi, ri, 0, 0)
+            (1, h_out, w_out, o), lambda bi, ri: (bi, 0, 0, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, o), x.dtype),
         interpret=interpret,

@@ -31,6 +31,7 @@ from repro.kernels import (
     fft as _fft_k,
     flash_attention as _flash_k,
     matmul as _matmul_k,
+    ragged_attention as _ragged_k,
     rmsnorm as _rmsnorm_k,
     softmax as _softmax_k,
 )
@@ -184,14 +185,10 @@ def conv2d(x, w, *, mode: Mode = "auto", block_h: Optional[int] = None):
     if block_h is None:
         block_h = _blocks("conv2d", x.shape, x.dtype, m)["block_h"]
     bh = min(block_h, h_out)
-    # conv2d keeps the padded-wrapper path: its in-kernel halo slice clamps
-    # at the image edge, so a masked tail tile would read shifted rows. Not
-    # an LM hot path — the pad only fires for ragged H anyway.
-    pad = (-h_out) % bh
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    out = _conv2d_k.conv2d(x, w, block_h=bh, interpret=(m == "interpret"))
-    return out[:, :h_out]
+    # pad-free: the grid ceil-divides and the kernel anchors the tail tile's
+    # halo slice at the image edge (shifted-tile recompute), so ragged H
+    # dispatches straight through like every other kernel
+    return _conv2d_k.conv2d(x, w, block_h=bh, interpret=(m == "interpret"))
 
 
 def flash_attention(
@@ -287,3 +284,42 @@ def decode_attention(
             interpret=(m == "interpret"),
         )
     return out.reshape(b, h, d)
+
+
+def ragged_attention(
+    q, k, v, tok_slot, tok_pos, *, window: int = 0, mode: Mode = "auto",
+    block_s: Optional[int] = None, valid=None,
+):
+    """Packed variable-length attention: a flat token batch (decode
+    singletons + prefill chunks from any mix of sequences) against the
+    batched cache. The unified serving dispatch routes every tick through
+    this one op instead of choosing between prefill and decode programs.
+
+    q: [T, H, d] packed query tokens; k/v: [B, S_max, KV, d] (decode-cache
+    layout, possibly lower-precision storage) with the packed tokens' K/V
+    already scattered at (tok_slot, tok_pos); tok_slot/tok_pos: [T] int32.
+    ``valid`` optionally passes a precomputed ``ref.ragged_valid_mask``
+    (descriptor-only, so one mask serves every layer of a packed step); the
+    Pallas kernel derives its masks in-kernel and ignores it.
+    Returns [T, H, d]."""
+    t, h, d = q.shape
+    s_max, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    qg = q.reshape(t, kvh, g, d)
+    m = _resolve(mode)
+    if m == "ref":
+        out = ref.ragged_attention(
+            qg, k, v, tok_slot, tok_pos, window=window, valid=valid
+        )
+    else:
+        if block_s is None:
+            block_s = _blocks("ragged_attention", k.shape, q.dtype, m)["block_s"]
+        # no pre-cast of the cache: the kernel upcasts per-tile (f8/bf16
+        # storage reads stay at storage width in HBM)
+        out = _ragged_k.ragged_attention(
+            qg, k, v, tok_slot, tok_pos,
+            window=window, block_s=min(block_s, s_max),
+            interpret=(m == "interpret"),
+        )
+    return out.reshape(t, h, d)

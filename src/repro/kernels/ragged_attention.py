@@ -1,0 +1,155 @@
+"""Packed variable-length (ragged) attention kernel: a flat ``[T]`` token
+batch — decode singletons and prefill chunks from different sequences mixed
+freely — against the batched ``[B, S_max, KV, hd]`` decode cache.
+
+This is the unified-dispatch serving hot path: ONE kernel serves every mix
+of admission prefill chunks and decode steps, so the engine never has to
+choose between stalling decode for a B=1 prefill and starving admissions.
+Each packed token ``t`` carries a descriptor pair read via scalar prefetch:
+
+* ``tok_slot[t]`` — which cache slot (batch row) the token belongs to;
+* ``tok_pos[t]``  — its absolute sequence position. The token's K/V have
+  already been scattered into the cache at ``(tok_slot, tok_pos)`` (the
+  dispatch layer fuses that scatter), so key position ``p`` of the slot is
+  valid iff ``p <= tok_pos`` — exactly the ``decode_attention`` convention,
+  generalized from "one token per slot" to "any tokens, any slots". A
+  prefill chunk is just consecutive tokens of one slot with increasing
+  ``tok_pos``: the per-token bound makes the chunk causally exact, and
+  chunk-vs-chunk boundaries need no special cases.
+
+The grid is (token, KV head, S tiles); the query-head group rides inside
+the block as a ``[G, hd]`` tile, and ``tok_slot`` indexes the cache fetch in
+the BlockSpec index map — the packed batch never materializes a gathered
+``[T, S_max, KV, hd]`` cache view. Tiles entirely past ``tok_pos`` (or
+before the sliding window) are skipped via ``pl.when``, so decode tokens of
+short sequences stay cheap inside a long-cache pack.
+
+Padding tokens (pack ragged-to-bucket tail) should point at slot 0 with
+``tok_pos >= S_max``: every tile stays live but the output row is ignored
+by the caller, and the out-of-bounds scatter was already dropped upstream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import _online_softmax_update
+
+NEG_INF = -1e30
+
+
+def _ragged_kernel(
+    slot_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+    block_s: int, s_steps: int, window: int
+):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # this token's absolute position; keys at p <= pos are valid (its own
+    # K/V were scattered at pos before the kernel ran)
+    pos = pos_ref[pl.program_id(0)]
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # [bs, d]
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (d**-0.5)
+        kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= pos
+        if window:
+            valid &= kpos > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        # zero rows of v that can't contribute (overhang reads are undefined)
+        vpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v_ok = vpos <= pos
+        if window:
+            v_ok &= vpos > pos - window
+        v = jnp.where(v_ok, v, 0.0)
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    # skip tiles entirely past the token's position (and before the window)
+    live = si * block_s <= pos
+    if window:
+        live &= (si + 1) * block_s > pos - window
+    pl.when(live)(_compute)
+
+    @pl.when(si == s_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_s", "interpret")
+)
+def ragged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    *,
+    window: int = 0,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [T, KV, G, d] packed queries; k/v: [B, S_max, KV, d] batched cache;
+    tok_slot/tok_pos: [T] int32 per-token descriptors.
+
+    Returns [T, KV, G, d] attention outputs for every packed token."""
+    t, kvh, g, d = q.shape
+    s_max = k.shape[1]
+    s_steps = pl.cdiv(s_max, block_s)
+    grid = (t, kvh, s_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ti, hi, si, slots, poss: (ti, hi, 0, 0)),
+            # the slot indirection lives in the index map: each token's K/V
+            # tiles stream straight from its cache row, no [T, S, KV, d]
+            # gather ever exists
+            pl.BlockSpec(
+                (1, block_s, 1, d),
+                lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_s, 1, d),
+                lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda ti, hi, si, slots, poss: (ti, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    tok_slot = jnp.asarray(tok_slot, jnp.int32)
+    tok_pos = jnp.asarray(tok_pos, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(
+            _ragged_kernel, block_s=block_s, s_steps=s_steps, window=window
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, kvh, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tok_slot, tok_pos, q, k, v)

@@ -117,6 +117,75 @@ def decode_attention(
     return jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(q.dtype))
 
 
+def ragged_valid_mask(
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    b: int,
+    s_max: int,
+    window: int = 0,
+) -> jax.Array:
+    """[T, B, S_max] bool: which cache entries each packed token may attend.
+
+    Key position p of slot ``tok_slot[t]`` is valid iff p <= tok_pos[t]
+    (windowed by p > tok_pos[t] - window) — the per-token generalization of
+    the ``decode_attention`` convention. Descriptor-only, so the serving
+    path computes it ONCE per pack and reuses it across every layer."""
+    kpos = jnp.arange(s_max)[None, :]
+    pos = jnp.asarray(tok_pos)[:, None]
+    valid_s = kpos <= pos  # [T, S]
+    if window:
+        valid_s &= kpos > pos - window
+    slot_hit = jnp.asarray(tok_slot)[:, None] == jnp.arange(b)[None, :]  # [T, B]
+    return slot_hit[:, :, None] & valid_s[:, None, :]
+
+
+def ragged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    *,
+    window: int = 0,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Packed variable-length attention oracle (the unified-dispatch path).
+
+    q: [T, KV, G, d] packed query tokens (decode singletons and prefill
+    chunks mixed); k/v: [B, S_max, KV, d] batched cache with the packed
+    tokens' K/V already scattered at (tok_slot, tok_pos); tok_slot/tok_pos:
+    [T] int32; ``valid`` optionally passes a precomputed
+    :func:`ragged_valid_mask`. Returns [T, KV, G, d] in f32 softmax math,
+    cast back to q.dtype.
+
+    Full-cross formulation: every packed token scores against EVERY slot's
+    cache in one batched matmul per KV head, and the B-1 wrong slots are
+    masked away before a softmax over the joint (slot, position) axes —
+    only the token's own slot survives, so this IS the per-slot softmax.
+    B is small in serving (a handful of cache slots), so the B× extra MACs
+    are far cheaper on CPU than a per-token cache gather followed by T tiny
+    batched dots, and the whole oracle is two dot_generals + one where.
+    """
+    t, kvh, g, d = q.shape
+    b, s_max = k.shape[0], k.shape[1]
+    scale = d**-0.5
+    if valid is None:
+        valid = ragged_valid_mask(tok_slot, tok_pos, b, s_max, window)
+    # explicit [KV]-batched [T·G, d] @ [d, B·S] matmuls: XLA CPU lowers this
+    # shape well at every pack size (the equivalent 5-D einsum does not)
+    qf = q.transpose(1, 0, 2, 3).reshape(kvh, t * g, d).astype(jnp.float32)
+    kf = k.transpose(2, 0, 1, 3).reshape(kvh, b * s_max, d).astype(jnp.float32)
+    scores = jnp.einsum("hqd,hsd->hqs", qf, kf) * scale  # [KV, T*G, B*S]
+    valid_tg = jnp.broadcast_to(
+        valid.reshape(t, 1, b * s_max), (t, g, b * s_max)
+    ).reshape(t * g, b * s_max)
+    scores = jnp.where(valid_tg[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    vf = v.transpose(2, 0, 1, 3).reshape(kvh, b * s_max, d).astype(jnp.float32)
+    out = jnp.einsum("hqs,hsd->hqd", probs, vf)  # [KV, T*G, d]
+    return out.reshape(kvh, t, g, d).transpose(1, 0, 2, 3).astype(q.dtype)
+
+
 def fft_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-stage Stockham radix-2 twiddle table [log2(n), n//2] (re, im).
 

@@ -304,6 +304,65 @@ def attention_decode(
     return out, cache_k, cache_v
 
 
+def attention_packed(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    valid: Optional[jax.Array] = None,
+    pack_slots: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Packed variable-length step: any mix of decode singletons and prefill
+    chunks as ONE flat token batch (the unified serving dispatch).
+
+    x: [T, d] packed hidden states; cache_k/v: [B, S_max, KV, hd];
+    tok_slot/tok_pos: [T] int32 — token t belongs to cache slot
+    ``tok_slot[t]`` at absolute position ``tok_pos[t]``; ``valid``
+    optionally passes the precomputed per-pack attention mask (shared by
+    every layer). The new K/V are scattered at (slot, pos) in one fused
+    scatter (out-of-bounds positions — the pack's bucket padding — are
+    dropped), then every token attends with its own causal bound
+    ``p <= tok_pos[t]``: a prefill chunk is causally exact against both the
+    already-cached prefix and its own earlier tokens written by the same
+    scatter. Returns (out [T, d], new_k, new_v).
+
+    With ``pack_slots`` ([P] int32, P ≪ B), ``tok_slot`` holds indices INTO
+    ``pack_slots`` and attention runs against only those P gathered cache
+    rows — the oracle's masked full-cross score plane then scales with the
+    slots actually packed (a handful of admitting sequences), not the whole
+    slot pool. Scatters still land in the full cache.
+    """
+    q = jnp.einsum("td,dhk->thk", x, params["wq"])
+    k = jnp.einsum("td,dhk->thk", x, params["wk"])
+    v = jnp.einsum("td,dhk->thk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    pos = jnp.asarray(tok_pos, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    glob_slot = tok_slot if pack_slots is None else pack_slots[tok_slot]
+    # one fused scatter for the whole pack replaces the per-admission
+    # full-cache insert: O(T) rows written, never a cache-sized copy
+    cache_k = cache_k.at[glob_slot, pos].set(k.astype(cache_k.dtype), mode="drop")
+    cache_v = cache_v.at[glob_slot, pos].set(v.astype(cache_v.dtype), mode="drop")
+
+    if pack_slots is None:
+        att_k, att_v = cache_k, cache_v
+    else:  # P-row sub-cache view: attention work scales with the pack
+        att_k, att_v = cache_k[pack_slots], cache_v[pack_slots]
+    o = ops.ragged_attention(
+        q, att_k, att_v, tok_slot, pos,
+        window=cfg.sliding_window, valid=valid,
+    )  # [T, H, hd]
+    out = jnp.einsum("thk,hkd->td", o, params["wo"])
+    return out, cache_k, cache_v
+
+
 def _scatter_step(cache: jax.Array, new: jax.Array, cur_len: jax.Array) -> jax.Array:
     """Write new [B,1,...] into cache [B,S,...] at position cur_len (per-batch).
 

@@ -522,6 +522,105 @@ class LM:
         out, new_cache = fn(blk["mamba"], cfg, h, cache_l)
         return x + out, new_cache
 
+    # ------------------------------------------------------------ packed step
+
+    @property
+    def supports_packed(self) -> bool:
+        """Whether the unified ragged prefill+decode dispatch applies: the
+        packed path needs a positional KV cache it can scatter into at
+        arbitrary (slot, position). SSM/hybrid recurrent state and the MLA
+        latent cache keep the exact-length prefill + per-step decode path."""
+        return self.cfg.family in ("dense", "moe") and self.cfg.mla is None
+
+    def _block_packed(
+        self, blk: Params, x: jax.Array, cache_l: Params,
+        tok_slot: jax.Array, tok_pos: jax.Array, valid: Optional[jax.Array],
+        pack_slots: Optional[jax.Array],
+    ) -> tuple[jax.Array, Params]:
+        """One layer over a packed [T] token batch. cache_l has no L axis."""
+        cfg = self.cfg
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        a, ck, cv = attn_mod.attention_packed(
+            blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
+            tok_slot, tok_pos, valid, pack_slots,
+        )
+        x = x + a
+        h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+        if "moe" in blk:
+            out, _ = moe_mod.moe_apply(
+                blk["moe"], cfg, h[None], mesh_info=self.mesh_info
+            )
+            x = x + out[0]
+        else:
+            x = x + mlp_apply(blk["mlp"], h)
+        return x, {"k": ck, "v": cv}
+
+    def packed_step(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,
+        tok_slot: jax.Array,
+        tok_pos: jax.Array,
+        out_rows: Optional[jax.Array] = None,
+        pack_slots: Optional[jax.Array] = None,
+    ) -> tuple[jax.Array, Params]:
+        """Unified ragged prefill+decode step: one flat [T] token batch where
+        each token carries its own (cache slot, absolute position) — decode
+        slots contribute one token, admitting prompts a prefill chunk.
+
+        tokens/tok_slot/tok_pos: [T] int32. Requires ``supports_packed``.
+        Returns (logits [T, V], new_cache) — or logits [len(out_rows), V]
+        when ``out_rows`` selects the packed rows to unembed (the serving
+        engine only samples a chunk's final token, so the [T, V] logits for
+        every mid-chunk row are dead weight). With ``pack_slots`` ([P]
+        int32), ``tok_slot`` holds indices into it and attention reads only
+        those P cache rows (see ``attention_packed``). Padding tokens (a
+        pack rounded up to its bucket) should use ``tok_pos >= max_len``:
+        their cache writes are dropped and their logits rows are garbage to
+        ignore.
+        """
+        cfg = self.cfg
+        assert self.supports_packed, cfg.family
+        x = embed_tokens(params["embed"], tokens)  # [T, d]
+        # the attention mask depends only on the pack descriptors — compute
+        # it once and share it across every layer
+        from repro.kernels import ref as _ref
+
+        k_leaf = cache["k"]  # [L, B, S_max, KV, hd]
+        n_rows = k_leaf.shape[1] if pack_slots is None else len(pack_slots)
+        valid = _ref.ragged_valid_mask(
+            tok_slot, tok_pos, n_rows, k_leaf.shape[2], cfg.sliding_window
+        )
+
+        def body(xx, xs):
+            blk, cl = xs
+            xx, ncl = self._block_packed(
+                blk, xx, cl, tok_slot, tok_pos, valid, pack_slots
+            )
+            return xx, ncl
+
+        if cfg.family == "moe" and cfg.first_k_dense:
+            kd = cfg.first_k_dense
+            dense_cache = jax.tree.map(lambda c: c[:kd], cache)
+            moe_cache = jax.tree.map(lambda c: c[kd:], cache)
+            x, nd = jax.lax.scan(body, x, (params["dense_blocks"], dense_cache))
+            x, nm = jax.lax.scan(body, x, (params["moe_blocks"], moe_cache))
+            new_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), nd, nm
+            )
+        else:
+            blocks = params["blocks"] if cfg.family == "dense" else params["moe_blocks"]
+            x, new_cache = jax.lax.scan(body, x, (blocks, cache))
+
+        if out_rows is not None:
+            x = x[out_rows]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, new_cache
+
+    # ------------------------------------------------------------ decode step
+
     def decode_step(
         self, params: Params, cache: Params, batch: dict, cur_len: jax.Array
     ) -> tuple[jax.Array, Params]:

@@ -1,34 +1,42 @@
-"""Batched serving engine with continuous batching (slot-based).
+"""Batched serving engine with continuous batching (slot-based) and a
+unified ragged prefill+decode dispatch (merge-mode serving).
 
 A fixed pool of ``batch_slots`` cache slots; requests are admitted into free
-slots via single-sequence prefill (scattered into the batched cache at the
-slot index), and every engine tick advances ALL active slots one token with
-one jitted fused tick (per-slot ``cur_len`` vector — the decode paths mask
-per-slot). Finished slots free immediately and the next waiting request is
-admitted: classic continuous batching, sized down.
+slots and every engine tick advances work with one jitted fused dispatch.
+Two dispatch shapes exist, chosen per tick from the workload mix — the
+temporal analogue of Spatzformer's split/merge reconfiguration:
 
-Hot-path structure (what makes a serving token cheap here):
+* **packed tick** (merge mode — any admission in flight): a flat
+  ``[T_bucket]`` token batch packs up to ``prefill_budget`` prompt tokens
+  from the admitting requests (Sarathi-style chunked prefill) through
+  ``LM.packed_step`` → the ragged varlen attention kernel with per-token
+  ``(slot, position)`` descriptors; new K/V are scattered at (slot, pos) in
+  one fused O(T) write — no B=1 prefill, no full-cache insert copy, no
+  blocking logits transfer + host sample per admission (a completing
+  chunk's first token is sampled on device from its final prompt row). In
+  the SAME loop iteration every decoding slot advances through a fused
+  decode chunk, so decode NEVER stalls behind an admission. A handful of T
+  buckets replaces the per-prompt-length prefill compile zoo.
+* **decode chunk** (split mode — steady state, no admission work): decode +
+  device-side sampling (greedy argmax / gumbel-max per-slot temperature)
+  + the per-slot ``cur_len`` advance fused and scanned ``k`` steps deep,
+  where ``k`` (bucketed to powers of two up to ``max_chunk``) is the
+  largest chunk in which no slot can finish — termination depends only on
+  counts, so the host knows ``k`` in advance and chunking is
+  output-invariant. A steady-state chunk ships zero host arrays to the
+  device, so merge-mode reconfigurability costs the split-mode steady
+  state nothing (the paper's C3 parity).
 
-* ONE jitted dispatch per CHUNK of ticks: decode + device-side sampling
-  (greedy argmax / gumbel-max per-slot temperature over the [B, V] logits)
-  + the per-slot ``cur_len`` advance are fused and scanned ``k`` steps
-  deep, where ``k`` (bucketed to {1,2,4,8}) is the largest chunk in which
-  no slot can finish — termination depends only on counts, so the host
-  knows ``k`` in advance and chunking is output-invariant. A steady-state
-  chunk ships zero host arrays to the device and no [B, V] logits to the
-  host, and the per-dispatch overhead amortizes ``k``-fold;
+Shared hot-path structure:
+
 * tick state (last tokens, cur_len, PRNG key) is device-resident; host
   bookkeeping tracks counts only and harvests tick t-1's token values while
   tick t computes (termination depends on counts, never on token values);
-  admission/finish events update the device state through small "override
-  lane" arrays that are cached device zeros between events;
-* the decode cache is donated to each chunk — the engine never holds two
-  copies of the KV cache;
-* prefill lengths are bucketed to powers of two for attention-only archs
-  (causal masking + per-slot cur_len make right-padding invisible), so a
-  stream of ragged prompts hits a handful of compiled prefills instead of
-  one per distinct length. SSM/hybrid archs keep exact-length prefill —
-  right-padding would pollute the recurrent state.
+* the decode cache is donated through every dispatch — the engine never
+  holds two copies of the KV cache;
+* SSM/hybrid/MLA archs (no positional KV cache to scatter into) keep the
+  legacy path: exact-length (SSM) or pow2-bucketed (attention) B=1 prefill
+  with per-slot insert, plus the same fused decode chunks.
 """
 
 from __future__ import annotations
@@ -65,10 +73,33 @@ class ServeStats:
     wall_seconds: float = 0.0
     ticks: int = 0
     prefill_compiles: int = 0
+    # per-request latency samples for the requests finished in this run:
+    # TTFT = first token available - submitted; TPOT = mean inter-token time
+    ttfts: list[float] = field(default_factory=list)
+    tpots: list[float] = field(default_factory=list)
 
     @property
     def tokens_per_sec(self) -> float:
         return self.total_tokens / max(self.wall_seconds, 1e-9)
+
+    def _pct(self, xs: list[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttfts, 50)
+
+    @property
+    def ttft_p99(self) -> float:
+        return self._pct(self.ttfts, 99)
+
+    @property
+    def tpot_p50(self) -> float:
+        return self._pct(self.tpots, 50)
+
+    @property
+    def tpot_p99(self) -> float:
+        return self._pct(self.tpots, 99)
 
 
 def _bucket_len(s: int, max_len: int) -> int:
@@ -77,6 +108,25 @@ def _bucket_len(s: int, max_len: int) -> int:
     while b < s:
         b *= 2
     return min(b, max_len) if b > s else b
+
+
+# packed-tick size buckets: a 1.5x ladder keeps padding waste ≤ ~33% while a
+# handful of compiled T variants covers every workload mix
+_T_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128)
+
+# max admitting slots per pack (the P in the sub-cache gather); admissions
+# beyond it join the next tick's pack
+_PACK_WIDTH = 2
+
+
+def _bucket_tokens(t: int) -> int:
+    for b in _T_BUCKETS:
+        if t <= b:
+            return b
+    b = _T_BUCKETS[-1]
+    while b < t:
+        b *= 2
+    return b
 
 
 class ServeEngine:
@@ -88,33 +138,57 @@ class ServeEngine:
         batch_slots: int = 4,
         max_len: int = 256,
         seed: int = 0,
+        unified: Optional[bool] = None,
+        prefill_budget: int = 64,
+        max_chunk: int = 8,
     ):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
+        # unified ragged dispatch needs a positional KV cache (dense/moe,
+        # non-MLA); other families keep the legacy prefill+insert path
+        self.unified = model.supports_packed if unified is None else unified
+        if self.unified and not model.supports_packed:
+            raise ValueError(
+                f"family {model.cfg.family!r}/mla has no packed path"
+            )
+        self.prefill_budget = max(int(prefill_budget), 1)
+        self.max_chunk = max(int(max_chunk), 1)
         self.cache = model.init_cache(batch_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_len = np.zeros(batch_slots, np.int32)  # host mirror (counts)
-        self.waiting: list[Request] = []
+        self.slot_fed = np.zeros(batch_slots, np.int32)  # prompt tokens fed
+        self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self.rng = np.random.default_rng(seed)
         self._prefill_cache = {}
-        # the cache is donated through both consumers — the engine never
+        self._prefilling: list[int] = []  # slots mid-prefill, admission order
+        self._packed_shapes: set[int] = set()  # compiled T buckets
+        self._admit_shapes: set[int] = set()  # compiled fused-admission buckets
+        self._done_now: list[Request] = []  # requests finished in this run()
+        # the cache is donated through all consumers — the engine never
         # holds two copies of the KV cache
         self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
         self._tick = jax.jit(
-            self._tick_fn, donate_argnums=(1,), static_argnames=("n_steps",)
+            self._tick_fn, donate_argnums=(1,),
+            static_argnames=("n_steps", "has_temp"),
+        )
+        self._packed = jax.jit(
+            self._packed_fn, donate_argnums=(1,), static_argnames=("has_temp",)
+        )
+        self._admit_prog = jax.jit(
+            self._admit_fn, donate_argnums=(1,), static_argnames=("has_temp",)
         )
         # device-resident tick state: sampled tokens, per-slot lengths, PRNG
         self._last_tok = jnp.zeros(batch_slots, jnp.int32)
         self._cur_len = jnp.zeros(batch_slots, jnp.int32)
         self._rng_key = jax.random.key(seed)
-        # event-driven device arrays (re-uploaded only when slots change)
-        self._active = jnp.zeros(batch_slots, bool)
+        # event-driven device arrays (re-uploaded only when slots change):
+        # lanes rows are (ov_mask, ov_tok, ov_len, active) — one combined
+        # upload instead of five tiny ones
+        self._lanes_idle = jnp.zeros((4, batch_slots), jnp.int32)
         self._temps = jnp.zeros(batch_slots, jnp.float32)
-        self._zero_mask = jnp.zeros(batch_slots, bool)
-        self._zero_i32 = jnp.zeros(batch_slots, jnp.int32)
         self._ov_mask_h = np.zeros(batch_slots, bool)  # staged override lanes
         self._ov_tok_h = np.zeros(batch_slots, np.int32)
         self._ov_len_h = np.zeros(batch_slots, np.int32)
@@ -135,6 +209,19 @@ class ServeEngine:
         return jax.tree.map(leaf, cache, one_cache)
 
     @staticmethod
+    def _sample_or_greedy(logits, temps, key, has_temp: bool):
+        """Shared sampling tail of every dispatch kind: gumbel-max at
+        per-slot temperature when ``has_temp``, else plain argmax with no
+        PRNG split (the greedy fast path skips threefry entirely). The
+        split-per-sample discipline is what keeps chunking output-invariant
+        — change it here, not in the callers. Returns (tokens, key)."""
+        if has_temp:
+            key, sub = jax.random.split(key)
+            return ServeEngine._sample_batch_fn(logits, temps, sub), key
+        tok = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return tok, key
+
+    @staticmethod
     def _sample_batch_fn(logits, temps, key):
         """One device-side sample for every slot. logits: [B, V] (any float
         dtype), temps: [B] f32. Greedy slots take argmax; temperature slots
@@ -146,36 +233,96 @@ class ServeEngine:
         sampled = jnp.argmax(scaled, axis=-1).astype(jnp.int32)
         return jnp.where(temps > 0, sampled, greedy)
 
-    def _tick_fn(self, params, cache, last_tok, cur_len, ov_mask, ov_tok, ov_len,
-                 active, temps, key, n_steps: int = 1):
-        """One fused engine dispatch: fold the admission override lanes into
-        the device state, then run ``n_steps`` decode+sample steps as a
+    def _tick_fn(self, params, cache, last_tok, cur_len, lanes, temps, key,
+                 n_steps: int = 1, has_temp: bool = True):
+        """One fused decode-chunk dispatch: fold the admission override lanes
+        into the device state, then run ``n_steps`` decode+sample steps as a
         device-side scan. Everything stays on device; the per-dispatch
         overhead (and, without donation, the KV-cache copy) amortizes over
-        the whole chunk. Returns toks [n_steps, B].
+        the whole chunk. ``lanes`` is ONE [4, B] int32 array — rows
+        (ov_mask, ov_tok, ov_len, active) — because every tiny host→device
+        upload costs real wall time on small hosts. Returns toks
+        [n_steps, B].
+
+        ``has_temp=False`` is the all-greedy fast path: plain argmax, no
+        per-step PRNG split and no gumbel draw (threefry is a real cost on
+        small hosts). Inactive slots keep their ``last_tok`` (mid-prefill
+        slots ride the batch inertly — their sampled garbage must not
+        clobber a first token the packed dispatch just wrote).
 
         Chunking never changes results: the host only chooses ``n_steps``
         such that no slot can finish (and hence no admission can land)
         inside the chunk, and the PRNG split chain per step is identical to
         n_steps=1 dispatches.
         """
-        last_tok = jnp.where(ov_mask, ov_tok, last_tok)
-        cur_len = jnp.where(ov_mask, ov_len, cur_len)
-        adv = active.astype(jnp.int32)
+        ov_mask = lanes[0].astype(bool)
+        active = lanes[3].astype(bool)
+        last_tok = jnp.where(ov_mask, lanes[1], last_tok)
+        cur_len = jnp.where(ov_mask, lanes[2], cur_len)
+        adv = lanes[3]
 
         def step(carry, _):
             tok, cl, cache, key = carry
             logits, cache = self.model.decode_step(
                 params, cache, {"tokens": tok[:, None]}, cl
             )
-            key, sub = jax.random.split(key)
-            tok = self._sample_batch_fn(logits[:, 0], temps, sub)
+            new, key = self._sample_or_greedy(logits[:, 0], temps, key, has_temp)
+            tok = jnp.where(active, new, tok)
             return (tok, cl + adv, cache, key), tok
 
         (last_tok, cur_len, cache, key), toks = jax.lax.scan(
             step, (last_tok, cur_len, cache, key), None, length=n_steps
         )
         return toks, last_tok, cur_len, cache, key
+
+    def _packed_fn(self, params, cache, last_tok, desc, meta, temps, key,
+                   has_temp: bool = True):
+        """One ragged prefill dispatch: a flat [T_bucket] pack of prompt
+        chunk tokens from every admitting slot runs through the packed
+        model step; a slot whose prompt COMPLETES in this pack samples its
+        first token from its final prompt position, device-side, alongside
+        everyone else's work — the legacy engine's blocking logits transfer
+        + host sample per admission disappears.
+
+        The host-built arrays arrive as TWO int32 uploads (tiny device_puts
+        dominate small-host dispatch): ``desc`` [3, T_bucket] rows
+        (chunk token, local slot, position), ``meta`` [3B + pack width]
+        = new_len | sample_idx | sample_mask | pack_slots, where new_len is
+        the host-computed per-slot cache count after this pack (the host
+        knows every count in advance). Returns (sampled [B], last_tok,
+        cur_len, cache, key)."""
+        b = self.B
+        new_len = meta[:b]
+        sample_idx = meta[b : 2 * b]
+        sample_mask = meta[2 * b : 3 * b].astype(bool)
+        pack_slots = meta[3 * b :]
+        logits, cache = self.model.packed_step(
+            params, cache, desc[0], desc[1], desc[2],
+            out_rows=sample_idx, pack_slots=pack_slots,
+        )
+        sampled, key = self._sample_or_greedy(logits, temps, key, has_temp)
+        last_tok = jnp.where(sample_mask, sampled, last_tok)
+        return sampled, last_tok, new_len, cache, key
+
+    def _admit_fn(self, params, cache, toks, slot, last_pos, last_tok,
+                  cur_len, temp, key, has_temp: bool = False):
+        """One fused async admission (unified mode, prompt ≤ budget): dense
+        prefill + cache insert + the first token sampled on device from the
+        last REAL prompt position + tick-state update, all in ONE dispatch
+        that nothing waits on. The legacy path's blocking logits transfer +
+        host-side sample per admission — the pipeline bubble that stalls
+        every decode slot — does not exist here; the newly admitted slot
+        starts decoding in the same loop iteration."""
+        logits, one_cache = self.model.prefill(
+            params, {"tokens": toks}, self.max_len
+        )
+        cache = self._insert_fn(cache, one_cache, slot)
+        row = logits[0, last_pos]  # [V]
+        toks1, key = self._sample_or_greedy(row[None], temp[None], key, has_temp)
+        tok = toks1[0]
+        last_tok = last_tok.at[slot].set(tok)
+        cur_len = cur_len.at[slot].set(last_pos + 1)
+        return tok, last_tok, cur_len, cache, key
 
     def _prefill_one(self, req: Request, slot: int, stats: Optional[ServeStats]) -> np.ndarray:
         s = len(req.prompt)
@@ -196,7 +343,7 @@ class ServeEngine:
         return np.asarray(logits[0, s - 1])  # last REAL position's logits
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        """Host-side single sample (prefill first-token path)."""
+        """Host-side single sample (legacy prefill first-token path)."""
         if temperature <= 0:
             return int(np.argmax(logits))
         z = np.asarray(logits, np.float64) / temperature
@@ -206,113 +353,424 @@ class ServeEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def _harvest(self, entry) -> None:
-        """Blockingly pull one chunk's sampled tokens and credit the slots'
-        requests. Called one chunk behind the dispatch, so this host transfer
-        overlaps the next chunk's device compute."""
-        tok_dev, items = entry
-        toks = np.asarray(tok_dev)  # [n_steps, B]
-        for slot, req in items:
-            req.generated.extend(int(t) for t in toks[:, slot])
+        """Blockingly pull one dispatch's sampled tokens and credit the
+        slots' requests. Called one dispatch behind, so this host transfer
+        overlaps the next dispatch's device compute. Packed entries also
+        stamp first-token availability (TTFT) — the value provably exists
+        on the host at harvest time."""
+        kind, tok_dev, items = entry
+        toks = np.asarray(tok_dev)
+        now = time.perf_counter()
+
+        def stamp(req):
+            # done_at was stamped at dispatch-enqueue (counts-only
+            # bookkeeping); pull it forward to when the values actually
+            # reached the host so TPOT never goes negative and the final
+            # chunk's device compute is not silently excluded
+            if req.done_at is not None:
+                req.done_at = max(req.done_at, now)
+
+        if kind == "admit":  # fused admission: one scalar first token
+            slot, req = items
+            req.generated.append(int(toks))
+            if req.first_token_at is None:
+                req.first_token_at = now
+            stamp(req)
+        elif kind == "packed":  # [B] one sample per flagged slot
+            for slot, req, is_first in items:
+                req.generated.append(int(toks[slot]))
+                if is_first and req.first_token_at is None:
+                    req.first_token_at = now
+                stamp(req)
+        else:  # decode chunk: [n_steps, B]
+            for slot, req in items:
+                req.generated.extend(int(t) for t in toks[:, slot])
+                stamp(req)
 
     def _flush_events(self):
-        """Upload pending slot changes; returns this tick's override lanes."""
+        """Upload pending slot changes; returns this tick's [4, B] lanes."""
         if not self._dirty:
-            return self._zero_mask, self._zero_i32, self._zero_i32
-        self._active = jnp.asarray(
-            np.asarray([r is not None for r in self.slot_req]), bool
-        )
+            return self._lanes_idle
+        lanes = np.zeros((4, self.B), np.int32)
+        # one-shot override rows: fresh numpy every flush — CPU device_put
+        # of a numpy array can be zero-copy/deferred, so handing jax a live
+        # staging buffer the host later mutates races the in-flight
+        # dispatch (observed as override lanes reading zeros mid-run)
+        lanes[0] = self._ov_mask_h
+        lanes[1] = self._ov_tok_h
+        lanes[2] = self._ov_len_h
+        # active == DECODING: a mid-prefill slot rides decode chunks inertly
+        # (no cur_len advance, last_tok preserved) until its pack completes
+        lanes[3] = [
+            r is not None and self.slot_fed[i] >= len(r.prompt)
+            for i, r in enumerate(self.slot_req)
+        ]
         self._temps = jnp.asarray(
             np.asarray(
                 [r.temperature if r is not None else 0.0 for r in self.slot_req],
                 np.float32,
             )
         )
-        # hand jax PRIVATE copies: CPU device_put of a numpy array can be
-        # zero-copy/deferred, so converting the live staging arrays and then
-        # mutating them below (or at the next admission) races the in-flight
-        # dispatch — observed as override lanes reading zeros mid-run
-        ov = (
-            jnp.asarray(self._ov_mask_h.copy()),
-            jnp.asarray(self._ov_tok_h.copy()),
-            jnp.asarray(self._ov_len_h.copy()),
-        )
+        # the overrides apply exactly once; later idle ticks reuse a cached
+        # ov-zeroed copy with the same active row
+        idle = lanes.copy()
+        idle[:3] = 0
+        self._lanes_idle = jnp.asarray(idle)
         self._ov_mask_h[:] = False
         self._dirty = False
-        return ov
+        return jnp.asarray(lanes)
 
     # ------------------------------------------------------------------ API
 
+    def prewarm(self, sampling: bool = False) -> None:
+        """Compile every dispatch variant this engine can hit, before any
+        request arrives (production serving compiles once, then serves):
+        the decode-chunk scan depths up to ``max_chunk`` and — in unified
+        mode — every packed T bucket up to ``prefill_budget`` plus the
+        fused-admission prompt buckets. A compile landing inside a live
+        arrival stream stalls every queued request's TTFT; this moves all
+        of them off the serving path. ``sampling=True`` additionally
+        compiles the temperature (``has_temp``) variants — greedy-only
+        deployments skip them, a mixed-sampling deployment should not let
+        its first temperature request pay the compile. Call on an IDLE
+        engine (before serving): the dummy fused-admission dispatches
+        overwrite slot 0's cache row."""
+        key = jax.random.key(0)
+        temp_variants = (False, True) if sampling else (False,)
+        k = 1
+        while k <= self.max_chunk:
+            for ht in temp_variants:
+                toks, _lt, _cl, self.cache, _k = self._tick(
+                    self.params, self.cache, self._last_tok, self._cur_len,
+                    self._lanes_idle, self._temps, key, n_steps=k, has_temp=ht,
+                )
+                jax.block_until_ready(toks)
+            k *= 2
+        if not self.unified:
+            return
+        # the EXACT T-bucket ladder _bucket_tokens can produce, including
+        # the doubling tail beyond _T_BUCKETS for very large budgets
+        top = _bucket_tokens(self.prefill_budget)
+        tb_ladder = [b for b in _T_BUCKETS if b <= top]
+        b = _T_BUCKETS[-1]
+        while b < top:
+            b *= 2
+            tb_ladder.append(b)
+        for tb in tb_ladder:
+            if tb in self._packed_shapes:
+                continue
+            # an all-padding pack: scatters dropped (pos = max_len), no
+            # slot sampled, cur_len passed through unchanged
+            desc = np.zeros((3, tb), np.int32)
+            desc[2] = self.max_len
+            meta = np.concatenate(
+                [
+                    self.slot_len,
+                    np.zeros(2 * self.B, np.int32),
+                    np.zeros(_PACK_WIDTH, np.int32),
+                ]
+            )
+            for ht in temp_variants:
+                toks, _lt, _cl, self.cache, _k = self._packed(
+                    self.params, self.cache, self._last_tok,
+                    jnp.asarray(desc), jnp.asarray(meta),
+                    jnp.zeros(self.B, jnp.float32), key, has_temp=ht,
+                )
+                jax.block_until_ready(toks)
+            self._packed_shapes.add(tb)
+        # the EXACT prompt buckets _admit_unified can produce: every power
+        # of two up to the fused-tier limit, plus the max_len-capped bucket
+        # a non-pow2 max_len introduces
+        top_prompt = min(self.prefill_budget, self.max_len - 1)
+        sizes = [top_prompt]
+        b = 1
+        while b <= top_prompt:
+            sizes.append(b)
+            b *= 2
+        for sb in sorted({_bucket_len(s, self.max_len) for s in sizes}):
+            if sb in self._admit_shapes:
+                continue
+            for ht in temp_variants:
+                tok, _lt, _cl, self.cache, _k = self._admit_prog(
+                    self.params, self.cache, jnp.zeros((1, sb), jnp.int32),
+                    jnp.int32(0), jnp.int32(sb - 1), self._last_tok,
+                    self._cur_len, jnp.float32(0.0), key, has_temp=ht,
+                )
+                jax.block_until_ready(tok)
+            self._admit_shapes.add(sb)
+
     def submit(self, req: Request) -> None:
+        assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
         req.submitted_at = time.perf_counter()
         self.waiting.append(req)
 
+    def _finish(self, req: Request, slot: int, stats: Optional[ServeStats]) -> None:
+        req.done_at = time.perf_counter()
+        self.finished.append(req)
+        self._done_now.append(req)
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        if stats is not None:
+            stats.total_requests += 1
+        self._dirty = True
+
     def _admit(self, stats: Optional[ServeStats] = None) -> None:
+        """Legacy admission: synchronous B=1 prefill + cache insert."""
         for slot in range(self.B):
-            if self.slot_req[slot] is None and self.waiting:
-                req = self.waiting.pop(0)
+            while self.slot_req[slot] is None and self.waiting:
+                req = self.waiting.popleft()
                 last_logits = self._prefill_one(req, slot, stats)
                 tok = self._sample(last_logits, req.temperature)
                 req.generated.append(tok)
                 req.n_generated = len(req.generated)
                 req.first_token_at = time.perf_counter()
+                if req.n_generated >= req.max_new:
+                    # nothing left to decode (max_new=1): finish without
+                    # ever occupying the slot
+                    req.done_at = req.first_token_at
+                    self.finished.append(req)
+                    self._done_now.append(req)
+                    if stats is not None:
+                        stats.total_requests += 1
+                    continue
                 self.slot_req[slot] = req
                 self.slot_len[slot] = len(req.prompt)
+                self.slot_fed[slot] = len(req.prompt)
                 self._ov_mask_h[slot] = True
                 self._ov_tok_h[slot] = tok
                 self._ov_len_h[slot] = len(req.prompt)
                 self._dirty = True
 
-    def run(self) -> ServeStats:
-        """Drain all submitted requests; returns throughput stats."""
+    def _admit_unified(self, stats, pending: deque) -> None:
+        """Unified admission — two tiers, neither of which ever blocks the
+        host or stalls a decode slot:
+
+        * prompt ≤ ``prefill_budget``: ONE fused async dispatch (dense
+          prefill + insert + device-side first-token sample); the slot is
+          decoding by the next dispatch in the same loop iteration.
+        * longer prompts: bound to the slot and fed as ragged packed
+          chunks of ≤ budget tokens per tick (Sarathi-style), so a long
+          admission costs each tick only one bounded pack.
+        """
+        for slot in range(self.B):
+            while self.slot_req[slot] is None and self.waiting:
+                req = self.waiting.popleft()
+                s = len(req.prompt)
+                self.slot_req[slot] = req
+                self._dirty = True
+                if s > self.prefill_budget:  # chunked ragged tier
+                    self.slot_len[slot] = 0
+                    self.slot_fed[slot] = 0
+                    self._prefilling.append(slot)
+                    continue
+                sb = _bucket_len(s, self.max_len) if self._bucket_prefill else s
+                if sb not in self._admit_shapes:
+                    self._admit_shapes.add(sb)
+                    if stats is not None:
+                        stats.prefill_compiles += 1
+                toks = np.zeros((1, sb), np.int32)
+                toks[0, :s] = req.prompt
+                tok, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+                    self._admit_prog(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.int32(slot), jnp.int32(s - 1), self._last_tok,
+                        self._cur_len,
+                        jnp.float32(req.temperature), self._rng_key,
+                        has_temp=req.temperature > 0,
+                    )
+                )
+                self.slot_len[slot] = s
+                self.slot_fed[slot] = s
+                req.n_generated += 1  # first token (in flight; counts-only
+                pending.append(("admit", tok, (slot, req)))
+                if req.n_generated >= req.max_new:  # bookkeeping, as ever)
+                    self._finish(req, slot, stats)
+
+    # ------------------------------------------------------------ tick paths
+
+    def _packed_tick(self, stats: ServeStats, pending: deque) -> None:
+        """Build and dispatch one ragged prefill pack: up to
+        ``prefill_budget`` prompt tokens (FCFS across the admitting slots),
+        padded to a T bucket. Decode slots are untouched here — the run
+        loop rides a fused decode chunk alongside every pack, so admission
+        work and decode progress share each loop iteration instead of
+        queueing behind each other."""
+        entries: list[tuple[int, int, int]] = []  # (token, LOCAL slot, pos)
+        sample_idx = np.zeros(self.B, np.int32)
+        sample_mask = np.zeros(self.B, bool)
+        # the pack spans at most _PACK_WIDTH admitting slots: attention work
+        # (and the compile count — one variant) scales with the pack, not
+        # the slot pool; later admissions simply join the next tick's pack
+        pack_slots = np.zeros(_PACK_WIDTH, np.int32)
+        budget = self.prefill_budget
+        completed: list[int] = []
+        for local, i in enumerate(self._prefilling[:_PACK_WIDTH]):
+            if budget <= 0:
+                break
+            pack_slots[local] = i
+            req = self.slot_req[i]
+            fed = int(self.slot_fed[i])
+            n = min(budget, len(req.prompt) - fed)
+            budget -= n
+            for j in range(n):
+                entries.append((int(req.prompt[fed + j]), local, fed + j))
+            self.slot_fed[i] = fed + n
+            self.slot_len[i] = fed + n
+            if fed + n == len(req.prompt):
+                sample_idx[i] = len(entries) - 1  # the final prompt token
+                sample_mask[i] = True
+                completed.append(i)
+                self._prefilling.remove(i)
+                self._dirty = True  # becomes an active decoder
+        tb = _bucket_tokens(len(entries))
+        if tb not in self._packed_shapes:
+            self._packed_shapes.add(tb)
+            stats.prefill_compiles += 1
+        # TWO combined uploads, built fresh every tick (CPU device_put can
+        # be zero-copy, so jax must never see a buffer the host mutates
+        # later). Padding tokens scatter out of bounds (dropped) and attend
+        # slot 0 with an all-valid mask; their output rows are never sampled
+        desc = np.zeros((3, tb), np.int32)
+        desc[2] = self.max_len
+        for t, (tok, sl, pos) in enumerate(entries):
+            desc[0, t] = tok
+            desc[1, t] = sl
+            desc[2, t] = pos
+        meta = np.concatenate(
+            [self.slot_len, sample_idx, sample_mask.astype(np.int32), pack_slots]
+        )
+        temps = np.asarray(
+            [r.temperature if r is not None else 0.0 for r in self.slot_req],
+            np.float32,
+        )
+        has_temp = any(
+            self.slot_req[i].temperature > 0 for i in completed
+        )
+
+        toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+            self._packed(
+                self.params, self.cache, self._last_tok,
+                jnp.asarray(desc), jnp.asarray(meta), jnp.asarray(temps),
+                self._rng_key, has_temp=has_temp,
+            )
+        )
+        stats.ticks += 1
+
+        if completed:
+            items = []
+            for i in completed:
+                req = self.slot_req[i]
+                req.n_generated += 1  # the request's first token (not counted
+                items.append((i, req, True))  # in total_tokens, like legacy)
+            pending.append(("packed", toks, items))
+            for i in completed:
+                req = self.slot_req[i]
+                # no capacity check: admission guarantees prompt < max_len,
+                # so one decode write at position len(prompt) always fits
+                if req.n_generated >= req.max_new:
+                    self._finish(req, i, stats)
+
+    def _chunk_tick(self, stats: ServeStats, pending: deque, active: list[int]) -> None:
+        """One fused multi-step decode chunk: as long as no active slot can
+        finish inside the chunk, k decode steps are one dispatch (bucketed
+        to powers of two ≤ ``max_chunk`` so few tick variants compile)."""
+        rem = min(
+            min(
+                self.slot_req[i].max_new - self.slot_req[i].n_generated,
+                self.max_len - 1 - int(self.slot_len[i]),
+            )
+            for i in active
+        )
+        cap = max(1, min(rem, self.max_chunk))
+        k = 1
+        while k * 2 <= cap:
+            k *= 2
+        has_temp = any(self.slot_req[i].temperature > 0 for i in active)
+        lanes = self._flush_events()
+        toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+            self._tick(
+                self.params, self.cache, self._last_tok, self._cur_len,
+                lanes, self._temps, self._rng_key, n_steps=k,
+                has_temp=has_temp,
+            )
+        )
+        stats.ticks += k
+        pending.append(("chunk", toks, [(i, self.slot_req[i]) for i in active]))
+        # bookkeeping needs only COUNTS — token values are harvested a
+        # chunk later, overlapping this chunk's device compute
+        for i in active:
+            req = self.slot_req[i]
+            self.slot_len[i] += k
+            req.n_generated += k
+            stats.total_tokens += k
+            if req.n_generated >= req.max_new or self.slot_len[i] + 1 >= self.max_len:
+                self._finish(req, i, stats)
+
+    # ------------------------------------------------------------------- run
+
+    def run(self, arrivals=None) -> ServeStats:
+        """Drain all submitted requests; returns throughput + latency stats.
+
+        ``arrivals`` optionally simulates an open-loop request stream: an
+        iterable of ``(t_offset_seconds, Request)`` submitted once the run
+        clock passes each offset (mixed-arrival benchmarking)."""
         stats = ServeStats()
+        self._done_now = []
         t0 = time.perf_counter()
-        self._admit(stats)
+        arr: deque = deque(
+            sorted(arrivals, key=lambda a: a[0]) if arrivals else ()
+        )
         pending: deque = deque()
-        while any(r is not None for r in self.slot_req) or self.waiting:
+        while True:
+            now = time.perf_counter() - t0
+            while arr and arr[0][0] <= now:
+                t_off, req = arr.popleft()
+                self.submit(req)
+                # the TTFT clock starts at the SCHEDULED arrival, not at
+                # whenever the loop got around to polling the deque —
+                # otherwise time spent inside a blocking dispatch hides
+                # queueing delay from the latency stats
+                req.submitted_at = t0 + t_off
+            if not (
+                any(r is not None for r in self.slot_req) or self.waiting or arr
+            ):
+                break
+            if self.unified:
+                self._admit_unified(stats, pending)
+            else:
+                self._admit(stats)
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
             if not active:
-                self._admit(stats)
+                if arr:  # idle until the next scheduled arrival
+                    wait = arr[0][0] - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.001))
                 continue
-            # multi-step chunk: as long as no active slot can finish inside
-            # the chunk, k decode steps are one dispatch (bucketed to powers
-            # of two so at most 4 tick variants ever compile)
-            rem = min(
-                min(
-                    self.slot_req[i].max_new - self.slot_req[i].n_generated,
-                    self.max_len - 1 - int(self.slot_len[i]),
-                )
-                for i in active
-            )
-            k = 8 if rem >= 8 else (4 if rem >= 4 else (2 if rem >= 2 else 1))
-            ov_mask, ov_tok, ov_len = self._flush_events()
-            toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
-                self._tick(
-                    self.params, self.cache, self._last_tok, self._cur_len,
-                    ov_mask, ov_tok, ov_len, self._active, self._temps,
-                    self._rng_key, n_steps=k,
-                )
-            )
-            stats.ticks += k
-            pending.append((toks, [(i, self.slot_req[i]) for i in active]))
-            # bookkeeping needs only COUNTS — token values are harvested a
-            # chunk later, overlapping this chunk's device compute
-            for i in active:
-                req = self.slot_req[i]
-                self.slot_len[i] += k
-                req.n_generated += k
-                stats.total_tokens += k
-                full = self.slot_len[i] + 1 >= self.max_len
-                if req.n_generated >= req.max_new or full:
-                    req.done_at = time.perf_counter()
-                    self.finished.append(req)
-                    self.slot_req[i] = None
-                    self.slot_len[i] = 0
-                    stats.total_requests += 1
-                    self._dirty = True
-            if len(pending) > 1:
+            if self.unified and self._prefilling:
+                # merge mode: one ragged prefill pack, and — in the same
+                # loop iteration — a fused decode chunk for every decoding
+                # slot (including one whose prompt just completed in this
+                # very pack). Admission never stalls decode.
+                self._packed_tick(stats, pending)
+                decoding = [
+                    i for i, r in enumerate(self.slot_req)
+                    if r is not None and self.slot_fed[i] >= len(r.prompt)
+                ]
+                if decoding:
+                    self._chunk_tick(stats, pending, decoding)
+            else:
+                self._chunk_tick(stats, pending, active)
+            while len(pending) > 1:
                 self._harvest(pending.popleft())
-            self._admit(stats)
         while pending:
             self._harvest(pending.popleft())
         stats.wall_seconds = time.perf_counter() - t0
+        for req in self._done_now:
+            if req.first_token_at is not None:
+                stats.ttfts.append(req.first_token_at - req.submitted_at)
+                if req.done_at is not None and req.n_generated >= 2:
+                    stats.tpots.append(
+                        max(req.done_at - req.first_token_at, 0.0)
+                        / (req.n_generated - 1)
+                    )
         return stats

@@ -55,6 +55,48 @@ def test_softmax_rmsnorm_axpy_dotp_dispatch_no_pad():
         assert "pad" not in prims, prims
 
 
+@pytest.mark.parametrize("h", [10, 13])  # divisible and ragged H_out
+def test_conv2d_dispatch_issues_no_pad(h):
+    x = jnp.zeros((2, h, 9, 4), jnp.float32)
+    w = jnp.zeros((3, 3, 4, 8), jnp.float32)
+    prims = _top_level_primitives(
+        lambda a, b: ops.conv2d(a, b, mode="interpret", block_h=4), x, w
+    )
+    assert "pad" not in prims, prims
+
+
+@pytest.mark.parametrize("h", [10, 13])
+def test_conv2d_masked_grid_matches_ref(h):
+    """The shifted-tail-tile grid must stay exact on ragged H (the bug the
+    old padded wrapper worked around)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, h, 9, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 8)), jnp.float32)
+    got = ops.conv2d(x, w, mode="interpret", block_h=4)
+    import numpy.testing as npt
+
+    npt.assert_allclose(
+        np.asarray(got), np.asarray(ops.conv2d(x, w, mode="ref")),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_ragged_attention_dispatch_no_pad():
+    q = jnp.zeros((10, 6, 16), jnp.float32)  # ragged T
+    k = jnp.zeros((3, 40, 2, 16), jnp.float32)  # ragged S_max
+    slots = jnp.zeros((10,), jnp.int32)
+    poss = jnp.zeros((10,), jnp.int32)
+    prims = _top_level_primitives(
+        lambda a, b, c, d: ops.ragged_attention(
+            a, b, b, c, d, mode="interpret", block_s=16
+        ),
+        q, k, slots, poss,
+    )
+    assert "pad" not in prims, prims
+
+
 def test_decode_attention_dispatch_no_pad():
     q = jnp.zeros((3, 6, 16), jnp.float32)
     k = jnp.zeros((3, 40, 2, 16), jnp.float32)

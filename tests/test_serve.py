@@ -59,6 +59,161 @@ def test_engine_batched_isolation(small_model):
     assert got[2] == e2
 
 
+def _run_engine(m, p, prompts, *, max_new=6, slots=2, max_len=32,
+                temperatures=None, **kw):
+    eng = ServeEngine(m, p, batch_slots=slots, max_len=max_len, **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(
+            rid=i, prompt=pr, max_new=max_new,
+            temperature=0.0 if temperatures is None else temperatures[i],
+        ))
+    stats = eng.run()
+    return {r.rid: r.generated for r in eng.finished}, stats
+
+
+def test_unified_bit_identical_to_legacy_greedy(small_model):
+    """Unified ragged dispatch and the legacy prefill+insert engine must
+    produce bit-identical greedy token streams on the same ragged stream,
+    including mid-stream admissions (8 requests through 3 slots)."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(11)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (5, 23, 11, 31, 8, 17, 26, 3)
+    ]
+    legacy, _ = _run_engine(m, p, prompts, slots=3, max_len=64, unified=False)
+    uni, _ = _run_engine(m, p, prompts, slots=3, max_len=64, unified=True)
+    assert legacy == uni
+
+
+def test_chunked_vs_unchunked_equivalence(small_model):
+    """Output must not depend on either chunking knob under mid-stream
+    admissions: prefill budget (packed chunk size) and decode chunk depth
+    (k forced to 1) are pure scheduling choices."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(12)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (19, 7, 27, 13, 22)
+    ]
+    base, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                          unified=True, prefill_budget=64)  # one-shot prefill
+    chunked, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                             unified=True, prefill_budget=5)
+    assert base == chunked
+    legacy, _ = _run_engine(m, p, prompts, slots=2, max_len=48, unified=False)
+    legacy_k1, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                               unified=False, max_chunk=1)
+    assert legacy == legacy_k1
+
+
+@pytest.mark.parametrize("unified", [False, True])
+def test_prompt_at_capacity_boundary(small_model, unified):
+    """len(prompt) == max_len - 1: one decode write still fits, so the
+    request yields exactly min(max_new, 2) tokens on both engines."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(13)
+    max_len = 32
+    prompt = rng.integers(0, cfg.vocab_size, size=max_len - 1).astype(np.int32)
+    got, stats = _run_engine(m, p, [prompt], max_new=6, max_len=max_len,
+                             unified=unified)
+    assert len(got[0]) == 2
+    assert stats.total_requests == 1
+
+
+@pytest.mark.parametrize("unified", [False, True])
+def test_max_new_one(small_model, unified):
+    """max_new=1: exactly one token (the prefill sample), then finish —
+    the slot is never occupied by a decode that can't run."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(14)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 9, 12)
+    ]
+    got, stats = _run_engine(m, p, prompts, max_new=1, unified=unified)
+    assert all(len(v) == 1 for v in got.values())
+    assert stats.total_requests == 3
+    expect = {
+        i: _manual_greedy(cfg, m, p, pr, 1) for i, pr in enumerate(prompts)
+    }
+    assert got == expect
+
+
+def test_mixed_greedy_and_temperature_slots(small_model):
+    """Greedy and temperature requests share packed ticks and decode chunks;
+    the greedy streams must still match their solo runs exactly."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(15)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 10, 8, 12)
+    ]
+    temps = [0.0, 0.9, 0.0, 1.3]
+    got, _ = _run_engine(m, p, prompts, max_new=5, slots=2, unified=True,
+                         temperatures=temps)
+    assert all(len(v) == 5 for v in got.values())
+    for i in (0, 2):  # greedy slots: exact match vs solo manual decode
+        assert got[i] == _manual_greedy(cfg, m, p, prompts[i], 5)
+    for i in (1, 3):  # temperature slots: valid tokens
+        assert all(0 <= t < cfg.vocab_size for t in got[i])
+
+
+def test_stats_latency_tracking(small_model):
+    """TTFT/TPOT per-request samples and percentile properties."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(16)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 14, 9)
+    ]
+    for unified in (False, True):
+        _, stats = _run_engine(m, p, prompts, max_new=4, unified=unified)
+        assert len(stats.ttfts) == 3
+        assert len(stats.tpots) == 3
+        assert stats.ttft_p99 >= stats.ttft_p50 > 0
+        assert stats.tpot_p99 >= stats.tpot_p50 > 0
+
+
+def test_arrival_schedule(small_model):
+    """Open-loop arrivals: requests submitted once the run clock passes
+    their offsets; everything drains and TTFT excludes pre-arrival time."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(17)
+    arrivals = [
+        (i * 0.003, Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=5 + 3 * i).astype(np.int32),
+            max_new=3,
+        ))
+        for i in range(4)
+    ]
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    stats = eng.run(arrivals=arrivals)
+    assert stats.total_requests == 4
+    assert sorted(r.rid for r in eng.finished) == [0, 1, 2, 3]
+    assert all(len(r.generated) == 3 for r in eng.finished)
+
+
+def test_prewarm_covers_all_dispatch_variants(small_model):
+    """After prewarm(), no compile may land inside the serving region —
+    including the max_len-capped prompt bucket a non-pow2 max_len
+    introduces (96 here) and sub-8 prompt buckets."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(18)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=96, unified=True,
+                      prefill_budget=96)
+    eng.prewarm()
+    for i, s in enumerate((3, 70, 90)):  # buckets 4, 96, 96
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            max_new=3,
+        ))
+    stats = eng.run()
+    assert stats.total_requests == 3
+    assert stats.prefill_compiles == 0, stats.prefill_compiles
+
+
 def test_continuous_batching_reuses_slots(small_model):
     cfg, m, p = small_model
     rng = np.random.default_rng(3)
