@@ -44,7 +44,9 @@ _MACHINE_DEPENDENT = ("cpu_measured", "serve_engine")
 # reshuffles the whole schedule — observed 1.0x-1.35x swings of the SAME
 # code). Reported and persisted for the per-PR trajectory, never gated;
 # the steady-state best-of-N rows are the enforceable serving gate.
-_REPORT_ONLY = ("_mixed_",)
+# "_cluster_" rows (split-vs-merge multi-replica runs + reconfigure cost)
+# are open-loop AND thread-scheduling dependent — same treatment.
+_REPORT_ONLY = ("_mixed_", "_cluster_")
 
 
 def host_fingerprint() -> dict:

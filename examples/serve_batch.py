@@ -25,6 +25,10 @@ def main() -> None:
     model = LM(cfg)
     params = model.init(jax.random.key(0))
     engine = ServeEngine(model, params, batch_slots=args.slots, max_len=128)
+    # production serving compiles once, then serves: every dispatch variant
+    # (incl. the temperature samplers half the requests below need) is
+    # built before the first request
+    engine.prewarm(sampling=True)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -40,6 +44,8 @@ def main() -> None:
     print(f"arch={cfg.name} slots={args.slots}")
     print(f"served {stats.total_requests} requests, {stats.total_tokens} decode tokens "
           f"in {stats.wall_seconds:.2f}s -> {stats.tokens_per_sec:,.1f} tok/s")
+    print(f"TTFT p50={stats.ttft_p50*1e3:.0f}ms p99={stats.ttft_p99*1e3:.0f}ms  "
+          f"TPOT p50={stats.tpot_p50*1e3:.1f}ms p99={stats.tpot_p99*1e3:.1f}ms")
     for r in engine.finished[:3]:
         print(f"  req {r.rid}: ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms "
               f"tokens={r.generated[:8]}...")

@@ -9,6 +9,13 @@
 
 The mode is a runtime property (paper: "the operational mode can also change
 at runtime") — see :mod:`repro.core.reconfigure` for the live-state reshard.
+
+The SAME two modes drive the serving cluster (:mod:`repro.serve.cluster`):
+SPLIT is one independent engine replica per device behind a
+join-shortest-queue router (the router is the scalar control core), MERGE is
+one tensor-parallel engine over every device (the fused vector fabric), and
+``ServeCluster.reconfigure`` is the runtime switch whose measured cost plays
+the paper's CSR-write number.
 """
 
 from __future__ import annotations
@@ -19,6 +26,13 @@ import enum
 class Mode(str, enum.Enum):
     SPLIT = "split"
     MERGE = "merge"
+
+    @classmethod
+    def parse(cls, value: "Mode | str") -> "Mode":
+        """Accepts a ``Mode`` or its string value (CLI flags, configs)."""
+        if isinstance(value, Mode):
+            return value
+        return cls(str(value).lower())
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.value

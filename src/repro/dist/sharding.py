@@ -113,6 +113,16 @@ def single_device_mesh_info() -> MeshInfo:
     return MeshInfo(Mesh(grid, ("data", MODEL_AXIS)), batch_axes=("data",))
 
 
+def serving_mesh_info(devices: Optional[Any] = None) -> MeshInfo:
+    """Merged serving fabric: ONE ``(data=1, model=N)`` view over the given
+    devices — the whole cluster becomes a single tensor-parallel engine
+    (the serving analogue of Spatzformer's merge mode: one controller, all
+    lanes fused). Degenerates gracefully to the single-device view."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    grid = np.array(devs).reshape(1, len(devs))
+    return MeshInfo(Mesh(grid, ("data", MODEL_AXIS)), batch_axes=("data",))
+
+
 # =============================================================================
 # partition rules
 # =============================================================================
@@ -253,3 +263,63 @@ def batch_shardings(tree: Any, info: MeshInfo) -> Any:
 def replicated(info: MeshInfo) -> NamedSharding:
     """Fully-replicated sharding on this view (scalars, metrics)."""
     return info.named(P())
+
+
+# =============================================================================
+# serving shardings (merge-mode tensor-parallel engine)
+# =============================================================================
+
+
+# cache leaves whose dim 2 is the SEQUENCE axis ([L, B, S, ...]): the
+# attention K/V pools, the hybrid shared-block pools, and the MLA latent/
+# rope caches (see LM.init_cache). Everything else is recurrent state with
+# no positional axis.
+_SEQ_CACHE_KEYS = frozenset({"k", "v", "attn_k", "attn_v", "ckv", "krope"})
+
+
+def serve_cache_shardings(cache_shape: Any, info: MeshInfo) -> Any:
+    """KV-cache placement for the SERVING slot pool — ``[L, B_slots, S_max,
+    KV, hd]`` / MLA ``[L, B_slots, S_max, rank]`` leaves plus SSM state
+    ``[L, B_slots, ...]``.
+
+    Differs from training-time ``LM.cache_shardings`` on purpose: the
+    serving engine scatters single rows at arbitrary ``(slot, pos)`` every
+    tick, so the slot (B) and sequence (S) dims are NEVER sharded — a
+    model-axis split of either would turn every O(1) cache write into a
+    cross-shard exchange. Positional caches (leaf names in
+    ``_SEQ_CACHE_KEYS``) partition only dims past the sequence axis: KV
+    heads first (clean head parallelism, matching ``spec_for_param``'s
+    attention rule), head_dim/latent-rank as the fallback. Recurrent SSM
+    leaves take their widest trailing dim ≥ dim 2. The layer stack dim 0 is
+    never sharded.
+    """
+    ms = info.model_size
+
+    def leaf_spec(path, leaf):
+        parts: list[Any] = [None] * leaf.ndim
+        if ms > 1 and leaf.ndim >= 2:
+            name = getattr(path[-1], "key", None) if path else None
+            if name in _SEQ_CACHE_KEYS:
+                # [L, B, S, ...]: only dims PAST the sequence axis are
+                # eligible — (kv_)heads first on 5-D, head_dim/rank last
+                order = [d for d in (leaf.ndim - 2, leaf.ndim - 1) if d >= 3]
+            else:
+                # SSM conv/recurrent state [L, B, ...]: widest trailing dim
+                order = sorted(
+                    range(2, leaf.ndim), key=lambda d: leaf.shape[d], reverse=True
+                )
+            for d in order:
+                if _divisible(leaf.shape[d], ms):
+                    parts[d] = MODEL_AXIS
+                    break
+        return info.named(P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def serve_state_shardings(tree: Any, info: MeshInfo) -> Any:
+    """Per-slot engine state (last tokens, cur_len, override lanes, PRNG
+    key): pure control state, replicated on every shard — the merged
+    fabric runs under one controller, so every device sees the identical
+    slot bookkeeping."""
+    return jax.tree.map(lambda _: replicated(info), tree)

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import AxisType
 
-from repro.dist.sharding import MeshInfo
+from repro.core.modes import Mode
+from repro.dist.sharding import MeshInfo, serving_mesh_info
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,3 +26,18 @@ def mesh_info_for(mesh) -> MeshInfo:
     if "pod" in mesh.axis_names:
         return MeshInfo(mesh, batch_axes=("pod", "data"))
     return MeshInfo(mesh, batch_axes=("data",))
+
+
+def serving_mesh_infos(mode: Mode | str, devices=None) -> list[MeshInfo]:
+    """Map SPLIT/MERGE onto the SERVING fabric (`repro.serve.ServeCluster`).
+
+    SPLIT: one degenerate ``(data=1, model=1)`` view per device — each an
+    independent engine replica. MERGE: one fused ``(data=1, model=N)`` view
+    — a single tensor-parallel engine spanning every device. These are the
+    two topologies ``--cluster-mode`` chooses between in
+    ``repro.launch.serve``.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if Mode.parse(mode) is Mode.MERGE:
+        return [serving_mesh_info(devs)]
+    return [serving_mesh_info([d]) for d in devs]

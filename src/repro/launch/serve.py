@@ -1,8 +1,12 @@
-"""Serving launcher: batched decode with the continuous-batching engine.
+"""Serving launcher: continuous batching on one engine or a reconfigurable
+split/merge multi-device cluster.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
       --requests 16 --slots 4 --max-new 32
+
+  # multi-device (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
+  ... -m repro.launch.serve --arch codeqwen1.5-7b --reduced --cluster-mode split
 """
 
 from __future__ import annotations
@@ -13,8 +17,20 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeCluster, ServeEngine
+
+
+def _resolve_auto(n_devices: int, n_requests: int, slots: int) -> str:
+    """``--cluster-mode auto``: match the fabric to the workload (the
+    paper's whole point). Many independent requests over several devices
+    want split (concurrent latency-sensitive streams, one replica each);
+    otherwise merge the fabric into one wide engine so a few large
+    requests see every device."""
+    if n_devices <= 1:
+        return "single"
+    return "split" if n_requests >= 2 * slots else "merge"
 
 
 def main() -> None:
@@ -28,6 +44,26 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--cluster-mode", choices=("single", "split", "merge", "auto"),
+        default="single",
+        help="single: one engine on the default device; split: one engine "
+        "replica per device behind the JSQ router; merge: one tensor-"
+        "parallel engine over every device; auto: pick by workload shape",
+    )
+    eng_sel = ap.add_mutually_exclusive_group()
+    eng_sel.add_argument(
+        "--unified", dest="unified", action="store_true", default=None,
+        help="force the unified ragged prefill+decode dispatch",
+    )
+    eng_sel.add_argument(
+        "--legacy", dest="unified", action="store_false",
+        help="force the legacy synchronous-prefill engine",
+    )
+    ap.add_argument(
+        "--no-prewarm", action="store_true",
+        help="skip prewarm(): compiles land inside the timed region",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -35,13 +71,31 @@ def main() -> None:
         cfg = cfg.reduced()
     model = LM(cfg)
     params = model.init(jax.random.key(args.seed))
-    engine = ServeEngine(
-        model, params, batch_slots=args.slots, max_len=args.max_len, seed=args.seed
+
+    mode = args.cluster_mode
+    if mode == "auto":
+        mode = _resolve_auto(len(jax.devices()), args.requests, args.slots)
+        print(f"cluster-mode auto -> {mode}")
+    common = dict(
+        batch_slots=args.slots, max_len=args.max_len, seed=args.seed,
+        unified=args.unified,
     )
+    if mode == "single":
+        target = ServeEngine(model, params, **common)
+        desc = "single-device engine"
+    else:
+        target = ServeCluster(model, params, mode=Mode.parse(mode), **common)
+        desc = f"{target!r}"
+
+    # production serving compiles once, then serves: every dispatch variant
+    # is built BEFORE the timed region unless explicitly disabled
+    if not args.no_prewarm:
+        target.prewarm(sampling=args.temperature > 0)
+
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2 + 1, args.prompt_len + 1))
-        engine.submit(
+        target.submit(
             Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
@@ -49,18 +103,13 @@ def main() -> None:
                 temperature=args.temperature,
             )
         )
-    stats = engine.run()
-    lat = [
-        (r.first_token_at - r.submitted_at, r.done_at - r.submitted_at)
-        for r in engine.finished
-    ]
-    ttft = sum(l[0] for l in lat) / len(lat)
-    e2e = sum(l[1] for l in lat) / len(lat)
+    stats = target.run()
     print(
-        f"arch={cfg.name} requests={stats.total_requests} "
+        f"arch={cfg.name} [{desc}] requests={stats.total_requests} "
         f"decoded_tokens={stats.total_tokens} ticks={stats.ticks}\n"
         f"throughput={stats.tokens_per_sec:,.1f} tok/s  "
-        f"mean TTFT={ttft*1e3:.1f}ms  mean e2e={e2e*1e3:.1f}ms"
+        f"TTFT p50={stats.ttft_p50*1e3:.1f}ms p99={stats.ttft_p99*1e3:.1f}ms  "
+        f"TPOT p50={stats.tpot_p50*1e3:.2f}ms p99={stats.tpot_p99*1e3:.2f}ms"
     )
 
 

@@ -64,6 +64,29 @@ def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
     return x.reshape(b, s, kv * groups, hd)
 
 
+def _head_constraint(x: jax.Array, mesh_info, head_axis: int) -> jax.Array:
+    """Pin ``x``'s head dim onto the tensor-parallel ``model`` axis.
+
+    The serving cluster's merge mode shards attention head-parallel: q/k/v
+    projections and the KV cache split on their (kv_)head dim, with
+    head_dim as the GQA fallback when the head count doesn't divide the TP
+    degree — the same preference order as ``spec_for_param`` /
+    ``serve_cache_shardings``, so constraining here never fights the
+    placement the params and cache arrived with. No-op off-mesh.
+    """
+    if mesh_info is None or mesh_info.model_size <= 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    ms = mesh_info.model_size
+    for ax in (head_axis, x.ndim - 1):
+        if x.shape[ax] % ms == 0 and x.shape[ax] >= ms:
+            parts: list = [None] * x.ndim
+            parts[ax] = "model"
+            return mesh_info.constraint(x, P(*parts))
+    return x
+
+
 def _group_q(q: jax.Array, kv_heads: int) -> jax.Array:
     """[B, Sq, H, hd] -> [B, Sq, KV, G, hd] (head-major grouping: query head
     h belongs to KV head h // G)."""
@@ -272,17 +295,26 @@ def attention_decode(
     cache_k: jax.Array,
     cache_v: jax.Array,
     cur_len: jax.Array,
+    mesh_info=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step.
 
     x: [B, 1, d]; cache_k/v: [B, S_max, KV, hd]; cur_len: [] or [B] tokens
-    already in the cache. Returns (out [B,1,d], new_k, new_v).
+    already in the cache. Returns (out [B,1,d], new_k, new_v). With
+    ``mesh_info`` the step runs head-sharded over the ``model`` axis
+    (merge-mode serving): q and the KV cache split on their head dims, the
+    per-shard partial outputs of the ``wo`` contraction all-reduce.
     """
     b, _, d = x.shape
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = _head_constraint(q, mesh_info, 2)
+    k = _head_constraint(k, mesh_info, 2)
+    v = _head_constraint(v, mesh_info, 2)
+    cache_k = _head_constraint(cache_k, mesh_info, 2)
+    cache_v = _head_constraint(cache_v, mesh_info, 2)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)
@@ -314,6 +346,7 @@ def attention_packed(
     tok_pos: jax.Array,
     valid: Optional[jax.Array] = None,
     pack_slots: Optional[jax.Array] = None,
+    mesh_info=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Packed variable-length step: any mix of decode singletons and prefill
     chunks as ONE flat token batch (the unified serving dispatch).
@@ -338,6 +371,11 @@ def attention_packed(
     q = jnp.einsum("td,dhk->thk", x, params["wq"])
     k = jnp.einsum("td,dhk->thk", x, params["wk"])
     v = jnp.einsum("td,dhk->thk", x, params["wv"])
+    q = _head_constraint(q, mesh_info, 1)
+    k = _head_constraint(k, mesh_info, 1)
+    v = _head_constraint(v, mesh_info, 1)
+    cache_k = _head_constraint(cache_k, mesh_info, 2)
+    cache_v = _head_constraint(cache_v, mesh_info, 2)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)

@@ -503,7 +503,8 @@ class LM:
             new_cache = {"ckv": ckv, "krope": krope}
         else:
             a, ck, cv = attn_mod.attention_decode(
-                blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len
+                blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len,
+                mesh_info=self.mesh_info,
             )
             new_cache = {"k": ck, "v": cv}
         x = x + a
@@ -543,6 +544,7 @@ class LM:
         a, ck, cv = attn_mod.attention_packed(
             blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
             tok_slot, tok_pos, valid, pack_slots,
+            mesh_info=self.mesh_info,
         )
         x = x + a
         h = rms_norm(x, blk["norm2"], cfg.norm_eps)
@@ -690,7 +692,8 @@ class LM:
                 xx, ngmc = jax.lax.scan(inner, xx, (gblk, gmc))
                 h = rms_norm(xx, shared["norm1"], cfg.norm_eps)
                 a, nak, nav = attn_mod.attention_decode(
-                    shared["attn"], cfg, h, ak, av, cur_len
+                    shared["attn"], cfg, h, ak, av, cur_len,
+                    mesh_info=self.mesh_info,
                 )
                 xx = xx + a
                 h = rms_norm(xx, shared["norm2"], cfg.norm_eps)

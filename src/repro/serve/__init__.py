@@ -1,3 +1,27 @@
+from repro.serve.backend import (
+    DefaultBackend,
+    DeviceBackend,
+    PlacementBackend,
+    ShardedBackend,
+)
+from repro.serve.cluster import (
+    ClusterStats,
+    ReconfigureReport,
+    Router,
+    ServeCluster,
+)
 from repro.serve.engine import Request, ServeEngine, ServeStats
 
-__all__ = ["ServeEngine", "Request", "ServeStats"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "ServeStats",
+    "ServeCluster",
+    "ClusterStats",
+    "ReconfigureReport",
+    "Router",
+    "PlacementBackend",
+    "DefaultBackend",
+    "DeviceBackend",
+    "ShardedBackend",
+]

@@ -1,0 +1,446 @@
+"""ServeCluster: the split/merge reconfigurable multi-device serving fabric.
+
+Spatzformer's cluster-level thesis, lifted to serving (DESIGN.md maps the
+temporal, single-device version; this module adds the spatial one):
+
+* **SPLIT** — one independent :class:`~repro.serve.engine.ServeEngine`
+  replica per mesh device, each pinned via a
+  :class:`~repro.serve.backend.DeviceBackend` and driven by its own
+  controller thread, behind a :class:`Router` doing join-shortest-queue
+  with per-tenant affinity. Two latency-sensitive tenants proceed
+  concurrently — the paper's two independent cores, the router playing the
+  scalar control core.
+* **MERGE** — ONE engine whose params and ``[L, B, S_max, KV, hd]`` KV
+  cache are tensor-parallel over the ``model`` axis
+  (``dist.sharding.spec_for_param`` / ``serve_cache_shardings``, attention
+  heads partitioned — see ``models/attention._head_constraint``), its
+  tick/admit/packed programs GSPMD-partitioned across every device: the
+  fused fabric under one controller for large uniform work.
+* **reconfigure(mode)** — drain in-flight chunks, re-place params/cache on
+  the target fabric, resume; the wall-clock cost is measured and reported
+  (:class:`ReconfigureReport`) like the paper's CSR-write cost. A
+  previously-built fabric is kept warm, so switching BACK is just an
+  engine reset — the second half of "reconfiguration is cheap and off the
+  hot path".
+
+Both modes serve any greedy request stream with bit-identical outputs to a
+plain single-device engine (pinned by ``tests/test_multidev.py``): the
+cluster changes WHERE work runs, never what is computed.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+
+from repro.common.utils import pytree_bytes
+from repro.core.modes import Mode
+from repro.dist.sharding import serving_mesh_info
+from repro.models.model import LM
+from repro.serve.backend import DeviceBackend, ShardedBackend
+from repro.serve.engine import Request, ServeEngine, ServeStats, percentile
+
+
+# =============================================================================
+# router (split mode's scalar control core)
+# =============================================================================
+
+
+class Router:
+    """Join-shortest-queue request routing with per-tenant affinity.
+
+    Queue length is the cumulative admitted cost (prompt + decode tokens)
+    per replica — routing happens at submit time, so balance is over
+    assigned work, not instantaneous occupancy. A request carrying a
+    ``tenant`` sticks to the replica its tenant first landed on (KV/prefix
+    locality and per-tenant isolation beat perfect balance); tenant-less
+    requests always take the shortest queue, ties to the lowest index.
+    """
+
+    def __init__(self, n_replicas: int) -> None:
+        self.n = n_replicas
+        self.load = [0.0] * n_replicas
+        self.assigned = [0] * n_replicas
+        self.tenant_home: dict[str, int] = {}
+
+    @staticmethod
+    def cost(req: Request) -> float:
+        return float(len(req.prompt) + req.max_new)
+
+    def route(self, req: Request) -> int:
+        if req.tenant is not None and req.tenant in self.tenant_home:
+            i = self.tenant_home[req.tenant]
+        else:
+            i = min(range(self.n), key=lambda j: (self.load[j], j))
+            if req.tenant is not None:
+                self.tenant_home[req.tenant] = i
+        self.load[i] += self.cost(req)
+        self.assigned[i] += 1
+        return i
+
+    def unassign(self, replica: int, req: Request) -> None:
+        """Credit back a routed-but-unserved request (it is about to be
+        carried across a reconfigure and re-routed): without this, carried
+        requests would double-count in the JSQ load and the per-replica
+        ``assigned`` telemetry."""
+        self.load[replica] -= self.cost(req)
+        self.assigned[replica] -= 1
+
+
+# =============================================================================
+# stats
+# =============================================================================
+
+
+@dataclass
+class ReconfigureReport:
+    """Cost of one mode switch — the paper's CSR-write number.
+
+    ``drain_seconds`` is the time spent finishing in-flight chunks after
+    the switch was requested; ``place_seconds`` the re-placement of
+    params/cache onto the target fabric (``bytes_moved`` counts what was
+    placed; 0 and ``cached=True`` for a warm switch back to an
+    already-built fabric, where only the engine state resets)."""
+
+    from_mode: str
+    to_mode: str
+    drain_seconds: float
+    place_seconds: float
+    bytes_moved: int
+    cached: bool
+
+    @property
+    def seconds(self) -> float:
+        return self.drain_seconds + self.place_seconds
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        kind = "warm" if self.cached else "cold"
+        return (
+            f"reconfigure {self.from_mode}->{self.to_mode} ({kind}): "
+            f"{self.seconds*1e3:.1f}ms (drain {self.drain_seconds*1e3:.1f} + "
+            f"place {self.place_seconds*1e3:.1f}), "
+            f"{self.bytes_moved/1e6:.2f} MB placed"
+        )
+
+
+@dataclass
+class SegmentStats:
+    """One constant-mode stretch of a cluster run."""
+
+    mode: str
+    replicas: list[ServeStats]
+
+    @property
+    def wall_seconds(self) -> float:
+        return max((r.wall_seconds for r in self.replicas), default=0.0)
+
+
+@dataclass
+class ClusterStats:
+    """Aggregate over every segment/replica of one ``ServeCluster.run``."""
+
+    mode: str  # e.g. "split" or "split->merge"
+    segments: list[SegmentStats]
+    reconfigures: list[ReconfigureReport] = field(default_factory=list)
+
+    def _each(self, attr: str) -> list:
+        return [getattr(r, attr) for s in self.segments for r in s.replicas]
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(self._each("total_tokens"))
+
+    @property
+    def total_requests(self) -> int:
+        return sum(self._each("total_requests"))
+
+    @property
+    def ticks(self) -> int:
+        return sum(self._each("ticks"))
+
+    @property
+    def prefill_compiles(self) -> int:
+        return sum(self._each("prefill_compiles"))
+
+    @property
+    def wall_seconds(self) -> float:
+        # replicas within a segment run concurrently (max); segments and
+        # reconfigurations are sequential (sum). A reconfigure's DRAIN
+        # already lives inside the preceding segment's wall — only the
+        # re-placement extends the clock.
+        return sum(s.wall_seconds for s in self.segments) + sum(
+            r.place_seconds for r in self.reconfigures
+        )
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.total_tokens / max(self.wall_seconds, 1e-9)
+
+    @property
+    def ttfts(self) -> list[float]:
+        return [t for xs in self._each("ttfts") for t in xs]
+
+    @property
+    def tpots(self) -> list[float]:
+        return [t for xs in self._each("tpots") for t in xs]
+
+    @property
+    def ttft_p50(self) -> float:
+        return percentile(self.ttfts, 50)
+
+    @property
+    def ttft_p99(self) -> float:
+        return percentile(self.ttfts, 99)
+
+    @property
+    def tpot_p50(self) -> float:
+        return percentile(self.tpots, 50)
+
+    @property
+    def tpot_p99(self) -> float:
+        return percentile(self.tpots, 99)
+
+
+# =============================================================================
+# cluster
+# =============================================================================
+
+
+class ServeCluster:
+    """Reconfigurable multi-device serving: split replicas or one merged
+    tensor-parallel engine over the same devices, switchable at runtime.
+
+    Construction places the initial mode's fabric; ``submit``/``run``
+    mirror :class:`ServeEngine` (``run`` returns :class:`ClusterStats`).
+    ``reconfigure(mode)`` switches fabrics between runs;
+    ``run(reconfigure_schedule=[(t, mode), ...])`` switches mid-stream —
+    the cluster drains in-flight work at each switch point, re-homes, and
+    resumes with the remaining arrivals.
+    """
+
+    def __init__(
+        self,
+        model: LM,
+        params,
+        *,
+        mode: Mode | str = Mode.SPLIT,
+        devices: Optional[Sequence] = None,
+        batch_slots: int = 4,
+        max_len: int = 256,
+        seed: int = 0,
+        unified: Optional[bool] = None,
+        prefill_budget: int = 64,
+        max_chunk: int = 8,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.devices = list(devices) if devices is not None else list(jax.devices())
+        assert self.devices, "ServeCluster needs at least one device"
+        self.seed = seed
+        self._engine_kw = dict(
+            batch_slots=batch_slots,
+            max_len=max_len,
+            unified=unified,
+            prefill_budget=prefill_budget,
+            max_chunk=max_chunk,
+        )
+        self.router = Router(len(self.devices))
+        self.finished: list[Request] = []
+        self.reconfigures: list[ReconfigureReport] = []
+        self._fabrics: dict[Mode, list[ServeEngine]] = {}
+        self.mode = Mode.parse(mode)
+        self._ensure_fabric(self.mode)
+
+    # ----------------------------------------------------------------- fabric
+
+    @property
+    def engines(self) -> list[ServeEngine]:
+        return self._fabrics[self.mode]
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def _ensure_fabric(self, mode: Mode) -> tuple[bool, int]:
+        """Build (or warm-reset) the engines for ``mode``.
+
+        Returns ``(cached, bytes_placed)``: a cached fabric only resets its
+        engines' tick state (compiled programs and placement survive)."""
+        if mode in self._fabrics:
+            for e in self._fabrics[mode]:
+                e.reset()
+            return True, 0
+        if mode is Mode.MERGE:
+            info = serving_mesh_info(self.devices)
+            if info.model_size > 1:
+                # a fresh LM view carrying the mesh: decode/packed attention
+                # runs head-sharded (models/attention._head_constraint)
+                model = LM(self.model.cfg, mesh_info=info)
+                backend = ShardedBackend(info)
+            else:  # one device: merge degenerates to a pinned plain engine
+                model, backend = self.model, DeviceBackend(self.devices[0])
+            engines = [
+                ServeEngine(
+                    model, self.params, seed=self.seed, backend=backend,
+                    **self._engine_kw,
+                )
+            ]
+        else:
+            engines = [
+                ServeEngine(
+                    self.model, self.params, seed=self.seed + i,
+                    backend=DeviceBackend(d), **self._engine_kw,
+                )
+                for i, d in enumerate(self.devices)
+            ]
+        jax.block_until_ready([e.params for e in engines])
+        jax.block_until_ready([e.cache for e in engines])
+        self._fabrics[mode] = engines
+        placed = sum(pytree_bytes(e.params) + pytree_bytes(e.cache) for e in engines)
+        return False, placed
+
+    def prewarm(self, sampling: bool = False) -> None:
+        """Compile every dispatch variant of the CURRENT mode's fabric off
+        the serving path (replica prewarms run concurrently in split mode)."""
+        engines = self.engines
+        if len(engines) == 1:
+            engines[0].prewarm(sampling)
+            return
+        with ThreadPoolExecutor(len(engines)) as ex:
+            list(ex.map(lambda e: e.prewarm(sampling), engines))
+
+    # ------------------------------------------------------------------ admit
+
+    def submit(self, req: Request) -> int:
+        """Route and enqueue one request; returns the replica index."""
+        engines = self.engines
+        if self.mode is Mode.MERGE:  # one fused engine, no routing
+            engines[0].submit(req)
+            return 0
+        # split mode always routes — even a degenerate 1-replica fabric
+        # keeps its JSQ/affinity telemetry truthful
+        i = self.router.route(req)
+        engines[i].submit(req)
+        return i
+
+    # ------------------------------------------------------------ reconfigure
+
+    def reconfigure(self, mode: Mode | str, drain_seconds: float = 0.0) -> ReconfigureReport:
+        """Switch the serving fabric: collect undrained requests, re-place
+        (or warm-reset) the target mode's engines, re-route the carried
+        requests, and report the measured cost. Engines must be idle (no
+        in-flight slots) — ``run()`` drains before returning, and the
+        scheduled mid-stream path measures its drain into the report."""
+        mode = Mode.parse(mode)
+        carried: list[Request] = []
+        routed = self.mode is not Mode.MERGE  # split queues went through JSQ
+        for idx, e in enumerate(self.engines):
+            assert all(r is None for r in e.slot_req), (
+                "reconfigure() with in-flight slots; run() must drain first"
+            )
+            for r in e.waiting:
+                if routed:  # re-routed below — give the JSQ load back
+                    self.router.unassign(idx, r)
+                carried.append(r)
+            e.waiting.clear()
+        carried.sort(key=lambda r: r.submitted_at)
+        old = self.mode
+        t0 = time.perf_counter()
+        cached, placed = self._ensure_fabric(mode)
+        place_s = time.perf_counter() - t0
+        self.mode = mode
+        for r in carried:
+            t = r.submitted_at  # preserve the TTFT clock across the switch
+            self.submit(r)
+            r.submitted_at = t
+        rep = ReconfigureReport(
+            str(old), str(mode), drain_seconds, place_s, placed, cached
+        )
+        self.reconfigures.append(rep)
+        return rep
+
+    # -------------------------------------------------------------------- run
+
+    def _run_segment(self, seg_arrivals: list) -> SegmentStats:
+        engines = self.engines
+        if self.mode is Mode.MERGE:
+            stats = [engines[0].run(arrivals=seg_arrivals or None)]
+        else:
+            per: list[list] = [[] for _ in engines]
+            for t, req in seg_arrivals:
+                per[self.router.route(req)].append((t, req))
+            if len(engines) == 1:  # degenerate split: no threads needed
+                stats = [engines[0].run(arrivals=(per[0] or None))]
+            else:
+                # one controller thread per replica — the paper's "each core
+                # driven by its own scalar core"; jax dispatch is thread-safe
+                # across disjoint engines
+                with ThreadPoolExecutor(len(engines)) as ex:
+                    futs = [
+                        ex.submit(e.run, arrivals=(pl or None))
+                        for e, pl in zip(engines, per)
+                    ]
+                    stats = [f.result() for f in futs]
+        for e in engines:
+            self.finished.extend(e.finished)
+            e.finished = []
+        return SegmentStats(str(self.mode), stats)
+
+    def run(self, arrivals=None, reconfigure_schedule=None) -> ClusterStats:
+        """Drain all submitted work (+ an optional open-loop ``arrivals``
+        schedule), optionally switching modes mid-stream.
+
+        ``reconfigure_schedule``: ``[(t_offset_seconds, mode), ...]`` —
+        at each offset the cluster stops admitting, drains in-flight
+        chunks, reconfigures, and resumes with the remaining arrivals.
+        Arrival offsets stay anchored to the ORIGINAL stream clock: a
+        segment's offsets are re-based by the wall time already consumed
+        (serving + drain + re-placement), going negative when the switch
+        overran an arrival — the engine then submits it immediately with
+        its true scheduled ``submitted_at``, so reconfiguration latency
+        SHOWS UP in TTFT instead of hiding behind a restarted clock (the
+        same no-hiding rule as the engine's own arrival handling)."""
+        schedule = sorted(reconfigure_schedule or [], key=lambda x: x[0])
+        arr = sorted(arrivals or [], key=lambda a: a[0])
+        segments: list[SegmentStats] = []
+        reports: list[ReconfigureReport] = []
+        elapsed = 0.0  # true wall time consumed before the current segment
+        for idx in range(len(schedule) + 1):
+            if idx < len(schedule):
+                t_switch, nxt = schedule[idx]
+                seg_arr = [(t - elapsed, r) for t, r in arr if t < t_switch]
+                arr = [(t, r) for t, r in arr if t >= t_switch]
+            else:
+                t_switch, nxt = None, None
+                seg_arr = [(t - elapsed, r) for t, r in arr]
+            seg = self._run_segment(seg_arr)
+            segments.append(seg)
+            if t_switch is None:
+                break
+            drain = max(0.0, seg.wall_seconds - max(t_switch - elapsed, 0.0))
+            rep = self.reconfigure(nxt, drain_seconds=drain)
+            reports.append(rep)
+            # drain already lives inside seg.wall_seconds; only the
+            # re-placement extends the clock beyond the segment
+            elapsed += seg.wall_seconds + rep.place_seconds
+        modes = [s.mode for s in segments]
+        # collapse only ADJACENT repeats: a split->merge->split round trip
+        # must read as such, not dedupe to "split->merge"
+        mode_label = "->".join(
+            m for i, m in enumerate(modes) if i == 0 or modes[i - 1] != m
+        )
+        return ClusterStats(
+            mode=mode_label,
+            segments=segments,
+            reconfigures=reports,
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"ServeCluster(mode={self.mode}, devices={len(self.devices)}, "
+            f"replicas={self.n_replicas})"
+        )

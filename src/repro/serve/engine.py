@@ -29,6 +29,11 @@ temporal analogue of Spatzformer's split/merge reconfiguration:
 
 Shared hot-path structure:
 
+* every host→device crossing (params/cache placement, tick state, the
+  per-tick staging uploads, program compilation) goes through a pluggable
+  :mod:`repro.serve.backend` — the same loop serves the default device, a
+  pinned split-mode replica, or a tensor-parallel mesh (merge-mode
+  cluster serving, :mod:`repro.serve.cluster`);
 * tick state (last tokens, cur_len, PRNG key) is device-resident; host
   bookkeeping tracks counts only and harvests tick t-1's token values while
   tick t computes (termination depends on counts, never on token values);
@@ -51,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.serve.backend import PlacementBackend, resolve_backend
 
 
 @dataclass
@@ -59,11 +65,18 @@ class Request:
     prompt: np.ndarray  # [S] int32
     max_new: int
     temperature: float = 0.0
+    tenant: Optional[str] = None  # cluster router affinity key (optional)
     generated: list[int] = field(default_factory=list)
     n_generated: int = 0  # tokens sampled so far (values may still be in flight)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Latency percentile with the empty-sample sentinel (0.0) — shared by
+    ServeStats and the cluster's ClusterStats so the two never diverge."""
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 @dataclass
@@ -82,24 +95,21 @@ class ServeStats:
     def tokens_per_sec(self) -> float:
         return self.total_tokens / max(self.wall_seconds, 1e-9)
 
-    def _pct(self, xs: list[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
     @property
     def ttft_p50(self) -> float:
-        return self._pct(self.ttfts, 50)
+        return percentile(self.ttfts, 50)
 
     @property
     def ttft_p99(self) -> float:
-        return self._pct(self.ttfts, 99)
+        return percentile(self.ttfts, 99)
 
     @property
     def tpot_p50(self) -> float:
-        return self._pct(self.tpots, 50)
+        return percentile(self.tpots, 50)
 
     @property
     def tpot_p99(self) -> float:
-        return self._pct(self.tpots, 99)
+        return percentile(self.tpots, 99)
 
 
 def _bucket_len(s: int, max_len: int) -> int:
@@ -141,11 +151,17 @@ class ServeEngine:
         unified: Optional[bool] = None,
         prefill_budget: int = 64,
         max_chunk: int = 8,
+        backend: Optional[PlacementBackend] = None,
     ):
         self.model = model
-        self.params = params
+        # EVERY host→device crossing goes through the backend: the engine
+        # itself is placement-agnostic (single device, pinned replica
+        # device, or tensor-parallel mesh — see serve/backend.py)
+        self.backend = resolve_backend(backend)
+        self.params = self.backend.put_params(model, params)
         self.B = batch_slots
         self.max_len = max_len
+        self.seed = seed
         # unified ragged dispatch needs a positional KV cache (dense/moe,
         # non-MLA); other families keep the legacy prefill+insert path
         self.unified = model.supports_packed if unified is None else unified
@@ -155,7 +171,7 @@ class ServeEngine:
             )
         self.prefill_budget = max(int(prefill_budget), 1)
         self.max_chunk = max(int(max_chunk), 1)
-        self.cache = model.init_cache(batch_slots, max_len)
+        self.cache = self.backend.put_cache(model, model.init_cache(batch_slots, max_len))
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_len = np.zeros(batch_slots, np.int32)  # host mirror (counts)
         self.slot_fed = np.zeros(batch_slots, np.int32)  # prompt tokens fed
@@ -169,26 +185,28 @@ class ServeEngine:
         self._done_now: list[Request] = []  # requests finished in this run()
         # the cache is donated through all consumers — the engine never
         # holds two copies of the KV cache
-        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
-        self._tick = jax.jit(
+        self._insert = self.backend.jit(self._insert_fn, donate_argnums=(0,))
+        self._tick = self.backend.jit(
             self._tick_fn, donate_argnums=(1,),
             static_argnames=("n_steps", "has_temp"),
         )
-        self._packed = jax.jit(
+        self._packed = self.backend.jit(
             self._packed_fn, donate_argnums=(1,), static_argnames=("has_temp",)
         )
-        self._admit_prog = jax.jit(
+        self._admit_prog = self.backend.jit(
             self._admit_fn, donate_argnums=(1,), static_argnames=("has_temp",)
         )
         # device-resident tick state: sampled tokens, per-slot lengths, PRNG
-        self._last_tok = jnp.zeros(batch_slots, jnp.int32)
-        self._cur_len = jnp.zeros(batch_slots, jnp.int32)
-        self._rng_key = jax.random.key(seed)
+        self._last_tok = self.backend.put_state(jnp.zeros(batch_slots, jnp.int32))
+        self._cur_len = self.backend.put_state(jnp.zeros(batch_slots, jnp.int32))
+        self._rng_key = self.backend.put_state(jax.random.key(seed))
         # event-driven device arrays (re-uploaded only when slots change):
         # lanes rows are (ov_mask, ov_tok, ov_len, active) — one combined
         # upload instead of five tiny ones
-        self._lanes_idle = jnp.zeros((4, batch_slots), jnp.int32)
-        self._temps = jnp.zeros(batch_slots, jnp.float32)
+        self._lanes_idle = self.backend.put_state(
+            jnp.zeros((4, batch_slots), jnp.int32)
+        )
+        self._temps = self.backend.put_state(jnp.zeros(batch_slots, jnp.float32))
         self._ov_mask_h = np.zeros(batch_slots, bool)  # staged override lanes
         self._ov_tok_h = np.zeros(batch_slots, np.int32)
         self._ov_len_h = np.zeros(batch_slots, np.int32)
@@ -329,15 +347,15 @@ class ServeEngine:
         sb = _bucket_len(s, self.max_len) if self._bucket_prefill else s
         sb = max(sb, s)
         if sb not in self._prefill_cache:
-            self._prefill_cache[sb] = jax.jit(
+            self._prefill_cache[sb] = self.backend.jit(
                 lambda p, b: self.model.prefill(p, b, self.max_len)
             )
             if stats is not None:
                 stats.prefill_compiles += 1
-        toks = np.zeros(sb, np.int32)
-        toks[:s] = req.prompt
+        toks = np.zeros((1, sb), np.int32)
+        toks[0, :s] = req.prompt
         logits, one_cache = self._prefill_cache[sb](
-            self.params, {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+            self.params, {"tokens": self.backend.put_host(toks)}
         )
         self.cache = self._insert(self.cache, one_cache, jnp.int32(slot))
         return np.asarray(logits[0, s - 1])  # last REAL position's logits
@@ -405,7 +423,7 @@ class ServeEngine:
             r is not None and self.slot_fed[i] >= len(r.prompt)
             for i, r in enumerate(self.slot_req)
         ]
-        self._temps = jnp.asarray(
+        self._temps = self.backend.put_host(
             np.asarray(
                 [r.temperature if r is not None else 0.0 for r in self.slot_req],
                 np.float32,
@@ -415,10 +433,10 @@ class ServeEngine:
         # ov-zeroed copy with the same active row
         idle = lanes.copy()
         idle[:3] = 0
-        self._lanes_idle = jnp.asarray(idle)
+        self._lanes_idle = self.backend.put_host(idle)
         self._ov_mask_h[:] = False
         self._dirty = False
-        return jnp.asarray(lanes)
+        return self.backend.put_host(lanes)
 
     # ------------------------------------------------------------------ API
 
@@ -435,7 +453,7 @@ class ServeEngine:
         its first temperature request pay the compile. Call on an IDLE
         engine (before serving): the dummy fused-admission dispatches
         overwrite slot 0's cache row."""
-        key = jax.random.key(0)
+        key = self.backend.put_state(jax.random.key(0))
         temp_variants = (False, True) if sampling else (False,)
         k = 1
         while k <= self.max_chunk:
@@ -473,8 +491,9 @@ class ServeEngine:
             for ht in temp_variants:
                 toks, _lt, _cl, self.cache, _k = self._packed(
                     self.params, self.cache, self._last_tok,
-                    jnp.asarray(desc), jnp.asarray(meta),
-                    jnp.zeros(self.B, jnp.float32), key, has_temp=ht,
+                    self.backend.put_host(desc), self.backend.put_host(meta),
+                    self.backend.put_host(np.zeros(self.B, np.float32)),
+                    key, has_temp=ht,
                 )
                 jax.block_until_ready(toks)
             self._packed_shapes.add(tb)
@@ -492,12 +511,39 @@ class ServeEngine:
                 continue
             for ht in temp_variants:
                 tok, _lt, _cl, self.cache, _k = self._admit_prog(
-                    self.params, self.cache, jnp.zeros((1, sb), jnp.int32),
+                    self.params, self.cache,
+                    self.backend.put_host(np.zeros((1, sb), np.int32)),
                     jnp.int32(0), jnp.int32(sb - 1), self._last_tok,
                     self._cur_len, jnp.float32(0.0), key, has_temp=ht,
                 )
                 jax.block_until_ready(tok)
             self._admit_shapes.add(sb)
+
+    def reset(self) -> None:
+        """Return an IDLE engine to its just-constructed serving state.
+
+        Device tick state, override staging and slot bookkeeping are
+        re-zeroed; compiled programs and the (garbage-tolerant) KV cache
+        survive, so re-entering a previously-built cluster mode costs no
+        recompiles and no cache realloc — the warm half of the paper's
+        cheap CSR-write reconfiguration. Refuses to reset mid-flight."""
+        assert all(r is None for r in self.slot_req), "reset() on a busy engine"
+        self.slot_len[:] = 0
+        self.slot_fed[:] = 0
+        self.waiting.clear()
+        self.finished = []
+        self._prefilling.clear()
+        self._done_now = []
+        self.rng = np.random.default_rng(self.seed)
+        self._last_tok = self.backend.put_state(jnp.zeros(self.B, jnp.int32))
+        self._cur_len = self.backend.put_state(jnp.zeros(self.B, jnp.int32))
+        self._rng_key = self.backend.put_state(jax.random.key(self.seed))
+        self._lanes_idle = self.backend.put_state(jnp.zeros((4, self.B), jnp.int32))
+        self._temps = self.backend.put_state(jnp.zeros(self.B, jnp.float32))
+        self._ov_mask_h[:] = False
+        self._ov_tok_h[:] = 0
+        self._ov_len_h[:] = 0
+        self._dirty = False
 
     def submit(self, req: Request) -> None:
         assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
@@ -572,7 +618,7 @@ class ServeEngine:
                 toks[0, :s] = req.prompt
                 tok, self._last_tok, self._cur_len, self.cache, self._rng_key = (
                     self._admit_prog(
-                        self.params, self.cache, jnp.asarray(toks),
+                        self.params, self.cache, self.backend.put_host(toks),
                         jnp.int32(slot), jnp.int32(s - 1), self._last_tok,
                         self._cur_len,
                         jnp.float32(req.temperature), self._rng_key,
@@ -650,7 +696,8 @@ class ServeEngine:
         toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
             self._packed(
                 self.params, self.cache, self._last_tok,
-                jnp.asarray(desc), jnp.asarray(meta), jnp.asarray(temps),
+                self.backend.put_host(desc), self.backend.put_host(meta),
+                self.backend.put_host(temps),
                 self._rng_key, has_temp=has_temp,
             )
         )

@@ -1,9 +1,11 @@
-"""Multi-device behaviour via subprocess (8 XLA host devices).
+"""Multi-device behaviour via subprocess (XLA forced host devices).
 
 Covers: SPLIT/MERGE on a real 2-pod fabric, reshard-on-mode-switch, ring
-collectives vs oracles, q8 all-reduce, elastic pod-failure shrink, and a
-small-mesh multi-pod dry-run of REDUCED configs for every arch family.
-Grouped into two subprocess scripts to amortize interpreter startup.
+collectives vs oracles, q8 all-reduce, elastic pod-failure shrink, a
+small-mesh multi-pod dry-run of REDUCED configs for every arch family, and
+the split/merge SERVING cluster (bit-identity vs the single-device engine,
+mid-stream reconfigure, router fairness) under 2 and 4 forced host devices.
+Grouped into few subprocess scripts to amortize interpreter startup.
 """
 
 import os
@@ -125,3 +127,137 @@ print("MULTIDEV-DRYRUN-OK")
 """
     )
     assert "MULTIDEV-DRYRUN-OK" in out
+
+
+@pytest.mark.slow
+def test_serve_cluster_split_merge_2dev():
+    """2 forced host devices: the serving cluster's split mode (2 pinned
+    replicas + router) and merge mode (one 2-way tensor-parallel engine,
+    heads sharded) both serve the same greedy mixed stream BIT-IDENTICAL to
+    a plain single-device engine — including the ragged chunked-prefill
+    tier and a mid-stream reconfigure (drain → re-home → resume)."""
+    out = run_py(
+        r"""
+import repro  # noqa: F401
+import numpy as np, jax
+from repro.configs import get_arch
+from repro.core.modes import Mode
+from repro.models import LM
+from repro.serve import Request, ServeCluster, ServeEngine
+
+assert jax.device_count() == 2
+cfg = get_arch("codeqwen1.5-7b").reduced()
+m = LM(cfg)
+p = m.init(jax.random.key(0))
+
+def stream(seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+                    max_new=6)
+            for i, s in enumerate((5, 23, 11, 31, 8, 17, 26, 3))]
+
+eng = ServeEngine(m, p, batch_slots=3, max_len=64)
+for r in stream(): eng.submit(r)
+eng.run()
+ref = {r.rid: r.generated for r in eng.finished}
+
+cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=3, max_len=64)
+assert cl.n_replicas == 2
+for r in stream(): cl.submit(r)
+cl.run()
+assert {r.rid: r.generated for r in cl.finished} == ref, "split != single"
+
+rep = cl.reconfigure(Mode.MERGE)
+assert not rep.cached and rep.bytes_moved > 0
+assert cl.engines[0].backend.mesh_info.model_size == 2
+cl.finished.clear()
+for r in stream(): cl.submit(r)
+cl.run()
+assert {r.rid: r.generated for r in cl.finished} == ref, "merge != single"
+
+# chunked ragged tier under TP: tight budget forces packed prefills
+cl2 = ServeCluster(m, p, mode=Mode.MERGE, batch_slots=3, max_len=64,
+                   prefill_budget=5)
+for r in stream(): cl2.submit(r)
+cl2.run()
+assert {r.rid: r.generated for r in cl2.finished} == ref, "merge chunked != single"
+
+# mid-stream reconfigure: drain at t, re-home, resume
+cl.finished.clear()
+arrivals = [(i * 0.002, r) for i, r in enumerate(stream())]
+st = cl.run(arrivals=arrivals, reconfigure_schedule=[(0.006, Mode.SPLIT)])
+assert {r.rid: r.generated for r in cl.finished} == ref, "mid-stream != single"
+assert len(st.reconfigures) == 1 and st.reconfigures[0].cached
+assert st.mode == "merge->split"
+print("CLUSTER-2DEV-OK")
+""",
+        devices=2,
+    )
+    assert "CLUSTER-2DEV-OK" in out
+
+
+@pytest.mark.slow
+def test_serve_cluster_router_fairness_4dev():
+    """4 forced host devices: JSQ spreads uniform tenant-less traffic
+    evenly over 4 replicas; tenant affinity keeps each tenant on one
+    replica while distinct tenants spread; outputs stay bit-identical to
+    the single-device engine; 4-way TP merge serves the same stream."""
+    out = run_py(
+        r"""
+import repro  # noqa: F401
+import numpy as np, jax
+from repro.configs import get_arch
+from repro.core.modes import Mode
+from repro.models import LM
+from repro.serve import Request, ServeCluster, ServeEngine
+
+assert jax.device_count() == 4
+cfg = get_arch("codeqwen1.5-7b").reduced()
+m = LM(cfg)
+p = m.init(jax.random.key(0))
+
+def stream(tenants=None, n=12, seed=31):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+                    max_new=4,
+                    tenant=None if tenants is None else tenants[i % len(tenants)])
+            for i in range(n)]
+
+eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+for r in stream(): eng.submit(r)
+eng.run()
+ref = {r.rid: r.generated for r in eng.finished}
+
+# fairness: 12 uniform requests over 4 replicas -> 3 each
+cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
+assert cl.n_replicas == 4
+for r in stream(): cl.submit(r)
+cl.run()
+assert cl.router.assigned == [3, 3, 3, 3], cl.router.assigned
+assert {r.rid: r.generated for r in cl.finished} == ref, "split != single"
+
+# tenant affinity: each tenant pinned to one replica, tenants spread
+cl2 = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
+tenants = ["a", "b", "c", "d"]
+routed = {}
+for r in stream(tenants=tenants):
+    routed.setdefault(r.tenant, set()).add(cl2.submit(r))
+cl2.run()
+assert all(len(v) == 1 for v in routed.values()), routed
+assert len(set(next(iter(v)) for v in routed.values())) == 4, routed
+assert {r.rid: r.generated for r in cl2.finished} == ref, "tenants != single"
+
+# 4-way TP merge on the same stream
+rep = cl.reconfigure(Mode.MERGE)
+assert cl.engines[0].backend.mesh_info.model_size == 4
+cl.finished.clear()
+for r in stream(): cl.submit(r)
+cl.run()
+assert {r.rid: r.generated for r in cl.finished} == ref, "merge != single"
+print("CLUSTER-4DEV-OK")
+""",
+        devices=4,
+    )
+    assert "CLUSTER-4DEV-OK" in out

@@ -1,0 +1,197 @@
+"""ServeCluster: router logic, placement backends, and split/merge/
+reconfigure correctness on whatever devices exist.
+
+Single-device runs (the fast CI lane) exercise the full cluster machinery
+through degenerate fabrics (split = 1 replica, merge = model_size 1); the
+dedicated 2-device CI lane (XLA_FLAGS=--xla_force_host_platform_device_count=2)
+and the subprocess tests in test_multidev.py cover real multi-device
+split/merge tensor parallelism.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.modes import Mode
+from repro.models import LM
+from repro.serve import Request, Router, ServeCluster, ServeEngine
+from repro.serve.backend import DeviceBackend
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("codeqwen1.5-7b").reduced()
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    return cfg, m, p
+
+
+def _reqs(cfg, sizes, *, max_new=4, tenants=None, seed=21):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            max_new=max_new,
+            tenant=None if tenants is None else tenants[i % len(tenants)],
+        )
+        for i, s in enumerate(sizes)
+    ]
+
+
+def _engine_reference(m, p, reqs, **kw):
+    eng = ServeEngine(m, p, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.rid: r.generated for r in eng.finished}
+
+
+# ---------------------------------------------------------------- router
+
+
+def _route_all(router, reqs):
+    return [router.route(r) for r in reqs]
+
+
+def test_router_jsq_balances_uniform_load():
+    r = Router(4)
+    reqs = [Request(rid=i, prompt=np.zeros(8, np.int32), max_new=4) for i in range(16)]
+    _route_all(r, reqs)
+    assert r.assigned == [4, 4, 4, 4]
+    assert max(r.load) - min(r.load) == 0
+
+
+def test_router_jsq_prefers_shortest_queue():
+    r = Router(2)
+    big = Request(rid=0, prompt=np.zeros(100, np.int32), max_new=50)
+    small = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new=4) for i in (1, 2, 3)]
+    assert r.route(big) == 0
+    # the big request's cost keeps replica 0's queue longest: all the small
+    # ones land on replica 1 until its cumulative cost catches up
+    assert _route_all(r, small) == [1, 1, 1]
+
+
+def test_router_tenant_affinity_sticks():
+    r = Router(3)
+    reqs = _route_all(
+        r,
+        [
+            Request(rid=i, prompt=np.zeros(8, np.int32), max_new=4, tenant=t)
+            for i, t in enumerate(["a", "b", "a", "c", "a", "b"])
+        ],
+    )
+    homes = {"a": reqs[0], "b": reqs[1], "c": reqs[3]}
+    assert reqs == [homes["a"], homes["b"], homes["a"], homes["c"], homes["a"], homes["b"]]
+    assert len({homes["a"], homes["b"], homes["c"]}) == 3  # spread, not piled
+
+
+# ------------------------------------------------------------- backends
+
+
+def test_device_backend_bit_identical(small_model):
+    """An engine pinned to an explicit device serves the same stream with
+    the same tokens as the default placement."""
+    cfg, m, p = small_model
+    sizes = (5, 11, 8)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=32)
+    eng = ServeEngine(
+        m, p, batch_slots=2, max_len=32, backend=DeviceBackend(jax.devices()[-1])
+    )
+    for r in _reqs(cfg, sizes):
+        eng.submit(r)
+    eng.run()
+    assert {r.rid: r.generated for r in eng.finished} == ref
+
+
+def test_engine_reset_reusable(small_model):
+    """reset() returns an idle engine to a fresh-serving state: the same
+    stream replays to identical outputs with no recompiles."""
+    cfg, m, p = small_model
+    sizes = (6, 13, 9)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    for r in _reqs(cfg, sizes):
+        eng.submit(r)
+    eng.run()
+    first = {r.rid: r.generated for r in eng.finished}
+    eng.reset()
+    assert eng.finished == []
+    for r in _reqs(cfg, sizes):
+        eng.submit(r)
+    stats = eng.run()
+    assert {r.rid: r.generated for r in eng.finished} == first
+    assert stats.prefill_compiles == 0
+
+
+# ------------------------------------------------------- cluster modes
+
+
+@pytest.mark.parametrize("mode", [Mode.SPLIT, Mode.MERGE])
+def test_cluster_matches_single_engine(small_model, mode):
+    """Both cluster modes serve bit-identical greedy streams to a plain
+    engine, on however many devices this process has."""
+    cfg, m, p = small_model
+    sizes = (5, 23, 11, 8, 17)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=mode, batch_slots=2, max_len=48)
+    for r in _reqs(cfg, sizes):
+        cl.submit(r)
+    stats = cl.run()
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert stats.total_requests == len(sizes)
+    assert stats.total_tokens > 0 and stats.wall_seconds > 0
+
+
+def test_cluster_reconfigure_carries_waiting(small_model):
+    """Requests still queued at reconfigure() survive the switch (TTFT
+    clock intact) and serve correctly on the new fabric."""
+    cfg, m, p = small_model
+    sizes = (5, 9, 13, 7)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=32)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
+    reqs = _reqs(cfg, sizes)
+    for r in reqs:
+        cl.submit(r)
+    t_before = [r.submitted_at for r in reqs]
+    rep = cl.reconfigure(Mode.MERGE)
+    assert cl.mode is Mode.MERGE
+    assert rep.place_seconds >= 0 and not rep.cached
+    assert [r.submitted_at for r in reqs] == t_before
+    cl.run()
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    # warm switch back: fabric cached, nothing re-placed
+    rep2 = cl.reconfigure(Mode.SPLIT)
+    assert rep2.cached and rep2.bytes_moved == 0
+    assert len(cl.reconfigures) == 2
+
+
+def test_cluster_mid_stream_reconfigure(small_model):
+    """run(reconfigure_schedule=...) drains at the switch point, re-homes,
+    resumes — outputs stay bit-identical to an uninterrupted engine."""
+    cfg, m, p = small_model
+    sizes = (5, 23, 11, 8, 17, 7)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48)
+    arrivals = [(i * 0.002, r) for i, r in enumerate(_reqs(cfg, sizes))]
+    stats = cl.run(arrivals=arrivals, reconfigure_schedule=[(0.005, Mode.MERGE)])
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert len(stats.reconfigures) == 1
+    assert stats.mode == "split->merge"
+    assert stats.total_requests == len(sizes)
+    assert stats.wall_seconds >= stats.reconfigures[0].seconds
+
+
+def test_cluster_multi_device_split_uses_every_replica(small_model):
+    """With >1 device, split mode spreads tenant-less uniform requests
+    across every replica (JSQ fairness at the fabric level)."""
+    cfg, m, p = small_model
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (the 2-device CI cluster lane)")
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
+    n = 3 * cl.n_replicas
+    for r in _reqs(cfg, (8,) * n):
+        cl.submit(r)
+    cl.run()
+    assert cl.router.assigned == [3] * cl.n_replicas
+    assert len(cl.finished) == n

@@ -112,3 +112,38 @@ def test_analytic_counts_sane():
     d = count_cell(cfg, get_shape("decode_32k"), dp=16, tp=16)
     assert d.flops > 2 * cfg.num_params() * 128  # plus attention context
     assert d.flops < 6 * cfg.num_params() * 128
+
+
+def test_serve_cache_shardings_never_shard_slot_or_seq():
+    """Serving cache placement: positional caches (attention K/V, MLA
+    latent/rope) shard only PAST the sequence axis — KV heads first,
+    head_dim/rank fallback; slot (dim 1) and sequence (dim 2) stay whole
+    (the engine scatters rows at arbitrary (slot, pos) every tick).
+    Recurrent SSM leaves take their widest trailing dim."""
+    import jax
+
+    from repro.dist.sharding import serve_cache_shardings
+
+    class FakeInfo:
+        model_size = 2
+
+        def named(self, spec):
+            return spec
+
+    f32 = np.float32
+    cache = {
+        "k": jax.ShapeDtypeStruct((2, 4, 96, 2, 16), f32),  # KV heads divide
+        "v": jax.ShapeDtypeStruct((2, 4, 96, 1, 16), f32),  # GQA fallback: hd
+        "ckv": jax.ShapeDtypeStruct((2, 4, 96, 32), f32),  # MLA latent: rank
+        "krope": jax.ShapeDtypeStruct((2, 4, 96, 8), f32),
+        "attn_k": jax.ShapeDtypeStruct((1, 4, 96, 2, 16), f32),  # hybrid pool
+        "mamba": {"conv": jax.ShapeDtypeStruct((2, 4, 3, 64), f32)},  # widest
+    }
+    specs = serve_cache_shardings(cache, FakeInfo())
+    assert specs["k"] == P(None, None, None, "model", None)
+    assert specs["v"] == P(None, None, None, None, "model")
+    # the MLA regression: dim 2 is SEQUENCE — only the rank dim may shard
+    assert specs["ckv"] == P(None, None, None, "model")
+    assert specs["krope"] == P(None, None, None, "model")
+    assert specs["attn_k"] == P(None, None, None, "model", None)
+    assert specs["mamba"]["conv"] == P(None, None, None, "model")
