@@ -38,7 +38,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, ServeCluster, ServeEngine
+from repro.serve import Request, SamplingParams, ServeCluster, ServeEngine
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
 
@@ -87,7 +87,7 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
                 Request(
                     rid=rid0 + i,
                     prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-                    max_new=MAX_NEW,
+                    params=SamplingParams(max_new=MAX_NEW),
                 )
             )
 
@@ -159,6 +159,67 @@ def run(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+# sampled-decode scenario: the SAME steady-state drain shape as the gated
+# all-greedy row, but every request streams through the device-side fused
+# sampler (temperature + nucleus top-p, per-request seeds). Report-only
+# trajectory rows ("_sampled_" in check_regression): they track what the
+# masked renormalized sampler costs per PR, while the gate proper is the
+# UNCHANGED all-greedy row — the redesign's C3 parity claim is that smode 0
+# still skips threefry/bias/sort entirely.
+SAMPLED_TOP_P = 0.9
+SAMPLED_TEMP = 0.8
+
+
+def run_sampled(csv: bool = True) -> list[tuple[str, float, str]]:
+    """Steady-state drain with top-p sampling on every request."""
+    cfg, model, params = _model()
+    eng = ServeEngine(model, params, batch_slots=4, max_len=96)
+    # every sampler variant compiles off the timed path, like production
+    eng.prewarm(sampling=True)
+    rng = np.random.default_rng(0)
+
+    def submit(n: int, rid0: int) -> None:
+        for i in range(n):
+            s = PROMPT_LENS[i % len(PROMPT_LENS)]
+            eng.submit(
+                Request(
+                    rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+                    params=SamplingParams(
+                        max_new=MAX_NEW, temperature=SAMPLED_TEMP,
+                        top_p=SAMPLED_TOP_P, seed=rid0 + i,
+                    ),
+                )
+            )
+
+    submit(WARMUP_REQUESTS, rid0=-WARMUP_REQUESTS)
+    eng.run()
+    best = None
+    for rep in range(3):
+        submit(MEASURED_REQUESTS, rid0=rep * MEASURED_REQUESTS)
+        stats = eng.run()
+        if best is None or stats.tokens_per_sec > best.tokens_per_sec:
+            best = stats
+    rows = [
+        (
+            "serve_engine_sampled_topp_tok_per_s",
+            best.tokens_per_sec,
+            f"{best.total_requests} reqs, top_p={SAMPLED_TOP_P} "
+            f"temp={SAMPLED_TEMP} fused device sampler "
+            "(steady-state drain, best of 3; report-only trajectory row)",
+        ),
+        (
+            "serve_engine_sampled_topp_tpot_p50_s",
+            best.tpot_p50,
+            "sampled-decode mean inter-token time, p50 (report-only)",
+        ),
+    ]
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
 def _mixed_stream(cfg, seed: int = 42):
     """One deterministic arrival schedule; fresh Request objects per call
     (the engine mutates them)."""
@@ -174,7 +235,7 @@ def _mixed_stream(cfg, seed: int = 42):
                 Request(
                     rid=i,
                     prompt=arr.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-                    max_new=MIXED_MAX_NEW,
+                    params=SamplingParams(max_new=MIXED_MAX_NEW),
                 ),
             )
         )
@@ -213,7 +274,7 @@ def run_mixed(csv: bool = True) -> list[tuple[str, float, str]]:
                     prompt=rng.integers(0, cfg.vocab_size, size=int(s)).astype(
                         np.int32
                     ),
-                    max_new=MIXED_MAX_NEW,
+                    params=SamplingParams(max_new=MIXED_MAX_NEW),
                 )
             )
         eng.run()
@@ -312,7 +373,7 @@ def _cluster_stream(cfg, seed: int = 7):
                 Request(
                     rid=i,
                     prompt=arr.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-                    max_new=CLUSTER_MAX_NEW,
+                    params=SamplingParams(max_new=CLUSTER_MAX_NEW),
                     tenant=tenant,
                 ),
             )
@@ -354,7 +415,7 @@ def run_cluster(csv: bool = True) -> list[tuple[str, float, str]]:
                 Request(
                     rid=-1 - i,
                     prompt=rng.integers(0, cfg.vocab_size, size=int(s)).astype(np.int32),
-                    max_new=CLUSTER_MAX_NEW,
+                    params=SamplingParams(max_new=CLUSTER_MAX_NEW),
                 )
             )
         cl.run()
@@ -427,6 +488,11 @@ def main() -> None:
         help="run only the mixed-arrival scenario",
     )
     ap.add_argument(
+        "--sampled-json", default=None, metavar="PATH",
+        help="write sampled-decode (top-p stream) rows as JSON "
+        "(also enables the scenario; report-only trajectory rows)",
+    )
+    ap.add_argument(
         "--cluster", action="store_true",
         help="run ONLY the split-vs-merge cluster scenario (needs >= 2 devices)",
     )
@@ -446,6 +512,9 @@ def main() -> None:
         rows = run(csv=True)
         if args.json:
             _write_json(args.json, rows, "serving")
+    if args.sampled_json is not None:
+        sampled = run_sampled(csv=True)
+        _write_json(args.sampled_json, sampled, "serving_sampled")
     if args.mixed_json is not None or args.skip_steady:
         mixed = run_mixed(csv=True)
         if args.mixed_json:

@@ -16,7 +16,7 @@ from repro.configs import TrainConfig, get_arch
 from repro.core import Mode, MixedScheduler, SpatzformerCluster, VectorTask
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import LM
-from repro.serve import Request, ServeCluster
+from repro.serve import Request, SamplingParams, ServeCluster
 from repro.train import adamw_init, make_train_step
 
 
@@ -41,28 +41,43 @@ def make_tenant(arch: str, steps: int = 5):
 
 def serve_two_tenants() -> None:
     """Split-mode serving: one engine replica per device, each tenant's
-    requests pinned to its home replica by the router."""
+    requests pinned to its home replica by the router — and each tenant's
+    sampling policy configured ONCE as a cluster-level default
+    (SamplingParams), not per request: tenantA decodes greedily, tenantB
+    samples a seeded nucleus (top-p) stream."""
     cfg = get_arch("codeqwen1.5-7b").reduced()
     model = LM(cfg)
     params = model.init(jax.random.key(0))
-    cluster = ServeCluster(model, params, mode=Mode.SPLIT, batch_slots=2, max_len=64)
+    cluster = ServeCluster(
+        model, params, mode=Mode.SPLIT, batch_slots=2, max_len=64,
+        tenant_defaults={
+            "tenantA": SamplingParams(max_new=8),
+            "tenantB": SamplingParams(max_new=8, temperature=0.9, top_p=0.9, seed=7),
+        },
+    )
     print(cluster)
     rng = np.random.default_rng(0)
+    reqs = []
     for i in range(8):
-        cluster.submit(
+        reqs.append(
             Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 12))).astype(np.int32),
-                max_new=8,
                 tenant="tenantA" if i % 2 == 0 else "tenantB",
             )
         )
+        cluster.submit(reqs[-1])  # tenant default params attach here
     stats = cluster.run()
     homes = cluster.router.tenant_home
     print(
         f"  served {stats.total_requests} reqs ({stats.tokens_per_sec:,.1f} tok/s), "
         f"tenant homes: {dict(sorted(homes.items()))}, "
         f"per-replica requests: {cluster.router.assigned}"
+    )
+    print(
+        f"  req 0 [{reqs[0].tenant}] params: greedy -> {reqs[0].generated[:5]}\n"
+        f"  req 1 [{reqs[1].tenant}] params: top_p={reqs[1].params.top_p} "
+        f"seed={reqs[1].params.seed} -> {reqs[1].generated[:5]}"
     )
 
 

@@ -1,4 +1,6 @@
-"""Batched serving example: continuous-batching engine over a reduced arch.
+"""Batched serving example: the request-lifecycle API over a reduced arch —
+per-request SamplingParams (greedy / temperature / nucleus top-p), an
+incrementally streamed response, and a mid-stream cancellation.
 
     PYTHONPATH=src python examples/serve_batch.py --arch minicpm3-4b
 """
@@ -10,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import LM
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main() -> None:
@@ -26,28 +28,54 @@ def main() -> None:
     params = model.init(jax.random.key(0))
     engine = ServeEngine(model, params, batch_slots=args.slots, max_len=128)
     # production serving compiles once, then serves: every dispatch variant
-    # (incl. the temperature samplers half the requests below need) is
-    # built before the first request
+    # (incl. the fused temperature/top-k/top-p sampler variants the sampled
+    # requests below need) is built before the first request
     engine.prewarm(sampling=True)
 
+    # three request classes sharing the same fabric, reconfigured per
+    # request by SamplingParams — never by a recompile
+    variants = (
+        SamplingParams(max_new=args.max_new),  # greedy
+        SamplingParams(max_new=args.max_new, temperature=0.7, seed=1),
+        SamplingParams(max_new=args.max_new, temperature=0.9, top_p=0.9, seed=2),
+    )
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
+    handles = [
         engine.submit(
             Request(
                 rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 12))).astype(np.int32),
-                max_new=args.max_new,
-                temperature=0.0 if i % 2 == 0 else 0.7,
+                prompt=rng.integers(
+                    0, cfg.vocab_size, size=int(rng.integers(4, 12))
+                ).astype(np.int32),
+                params=variants[i % len(variants)],
             )
         )
-    stats = engine.run()
+        for i in range(args.requests)
+    ]
+
+    # stream request 0 token by token (iterating the handle drives the
+    # engine; every other request decodes alongside in the same ticks)...
+    print("req 0 (greedy) streams: ", end="", flush=True)
+    for i, tok in enumerate(handles[0]):
+        print(tok, end=" ", flush=True)
+        if i == 2 and len(handles) > 1:
+            handles[-1].cancel()  # ...and abort the last request mid-stream
+    print(f"[{handles[0].finish_reason}]")
+    print(f"req {handles[-1].rid} cancelled after "
+          f"{len(handles[-1].request.generated)} tokens "
+          f"[{handles[-1].finish_reason}]")
+
+    stats = engine.run()  # drain everything still in flight
+    streamed = engine.stream_stats  # the handle-driven portion of the work
+    done = stats.total_requests + streamed.total_requests
     print(f"arch={cfg.name} slots={args.slots}")
-    print(f"served {stats.total_requests} requests, {stats.total_tokens} decode tokens "
-          f"in {stats.wall_seconds:.2f}s -> {stats.tokens_per_sec:,.1f} tok/s")
-    print(f"TTFT p50={stats.ttft_p50*1e3:.0f}ms p99={stats.ttft_p99*1e3:.0f}ms  "
+    print(f"served {done} requests ({streamed.cancelled} cancelled), "
+          f"{stats.total_tokens + streamed.total_tokens} decode tokens")
+    print(f"drain throughput {stats.tokens_per_sec:,.1f} tok/s  "
           f"TPOT p50={stats.tpot_p50*1e3:.1f}ms p99={stats.tpot_p99*1e3:.1f}ms")
     for r in engine.finished[:3]:
-        print(f"  req {r.rid}: ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms "
+        ttft = "-" if r.first_token_at is None else f"{1e3*(r.first_token_at - r.submitted_at):.0f}ms"
+        print(f"  req {r.rid}: finish={r.finish_reason} ttft={ttft} "
               f"tokens={r.generated[:8]}...")
 
 

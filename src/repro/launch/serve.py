@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, ServeCluster, ServeEngine
+from repro.serve import Request, SamplingParams, ServeCluster, ServeEngine
 
 
 def _resolve_auto(n_devices: int, n_requests: int, slots: int) -> str:
@@ -42,7 +42,25 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=16)
+    # per-request sampling configuration (one SamplingParams for the whole
+    # synthetic stream; a real deployment would vary these per request)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0, help="0 disables")
+    ap.add_argument("--top-p", type=float, default=1.0, help="1.0 disables")
+    ap.add_argument(
+        "--sample-seed", type=int, default=None,
+        help="per-request PRNG seed base (request i uses seed+i); default: "
+        "engine-assigned",
+    )
+    ap.add_argument(
+        "--stop", type=int, nargs="*", default=(),
+        help="stop token id(s): streams terminate at (and include) the first hit",
+    )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="stream request 0's tokens incrementally through its "
+        "RequestHandle (the other requests decode alongside), then drain",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--cluster-mode", choices=("single", "split", "merge", "auto"),
@@ -88,25 +106,48 @@ def main() -> None:
         desc = f"{target!r}"
 
     # production serving compiles once, then serves: every dispatch variant
-    # is built BEFORE the timed region unless explicitly disabled
+    # — including the fused top-k/top-p sampler variants if any request will
+    # need them — is built BEFORE the timed region unless explicitly disabled
+    sampling = args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
     if not args.no_prewarm:
-        target.prewarm(sampling=args.temperature > 0)
+        target.prewarm(sampling=sampling)
 
     rng = np.random.default_rng(args.seed)
+    handles = []
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2 + 1, args.prompt_len + 1))
-        target.submit(
+        handles.append(target.submit(
             Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
-                max_new=args.max_new,
-                temperature=args.temperature,
+                params=SamplingParams(
+                    max_new=args.max_new,
+                    temperature=args.temperature,
+                    top_k=args.top_k,
+                    top_p=args.top_p,
+                    seed=None if args.sample_seed is None else args.sample_seed + i,
+                    stop=tuple(args.stop),
+                ),
             )
-        )
+        ))
+    if args.stream and handles:
+        # the handle iterator drives the engine; every other request makes
+        # progress in the same ticks — streaming is a view, not a mode
+        print("req 0 stream: ", end="", flush=True)
+        for tok in handles[0]:
+            print(tok, end=" ", flush=True)
+        print(f"[{handles[0].finish_reason}]")
     stats = target.run()
+    # in --stream mode part (or all) of the work was served by the handle-
+    # driven pump BEFORE run(), so report totals from the request objects
+    # and keep the timed-drain stats for throughput/latency
+    done = list(target.finished)
+    n_cancelled = sum(r.finish_reason == "cancelled" for r in done)
     print(
-        f"arch={cfg.name} [{desc}] requests={stats.total_requests} "
-        f"decoded_tokens={stats.total_tokens} ticks={stats.ticks}\n"
+        f"arch={cfg.name} [{desc}] requests={len(done) - n_cancelled} "
+        f"(+{n_cancelled} cancelled) "
+        f"generated_tokens={sum(len(r.generated) for r in done)}\n"
+        f"drain: {stats.total_tokens} decode tokens, {stats.ticks} ticks, "
         f"throughput={stats.tokens_per_sec:,.1f} tok/s  "
         f"TTFT p50={stats.ttft_p50*1e3:.1f}ms p99={stats.ttft_p99*1e3:.1f}ms  "
         f"TPOT p50={stats.tpot_p50*1e3:.2f}ms p99={stats.tpot_p99*1e3:.2f}ms"

@@ -1,3 +1,17 @@
+"""Public serving surface.
+
+The request API is :class:`Request` + :class:`SamplingParams` (frozen
+per-request sampling/termination config) → :meth:`ServeEngine.submit`
+returns a :class:`RequestHandle` (incremental token iterator +
+``cancel()``); :class:`ServeCluster` serves the same surface over a
+split/merge multi-device fabric with per-tenant default params.
+
+Deprecation shims: the pre-SamplingParams kwargs
+``Request(max_new=..., temperature=...)`` still work (they build the
+equivalent ``params`` and warn ``DeprecationWarning``); migrate to
+``Request(..., params=SamplingParams(...))``.
+"""
+
 from repro.serve.backend import (
     DefaultBackend,
     DeviceBackend,
@@ -10,16 +24,25 @@ from repro.serve.cluster import (
     Router,
     ServeCluster,
 )
-from repro.serve.engine import Request, ServeEngine, ServeStats
+from repro.serve.engine import Request, RequestHandle, ServeEngine, ServeStats
+from repro.serve.sampling import MAX_LOGIT_BIAS, SamplingParams, fused_sample
 
 __all__ = [
-    "ServeEngine",
+    # request lifecycle
     "Request",
+    "SamplingParams",
+    "RequestHandle",
+    "MAX_LOGIT_BIAS",
+    # engines
+    "ServeEngine",
     "ServeStats",
+    "fused_sample",
+    # cluster
     "ServeCluster",
     "ClusterStats",
     "ReconfigureReport",
     "Router",
+    # placement
     "PlacementBackend",
     "DefaultBackend",
     "DeviceBackend",

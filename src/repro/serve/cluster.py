@@ -33,7 +33,7 @@ from __future__ import annotations
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import jax
 
@@ -42,7 +42,14 @@ from repro.core.modes import Mode
 from repro.dist.sharding import serving_mesh_info
 from repro.models.model import LM
 from repro.serve.backend import DeviceBackend, ShardedBackend
-from repro.serve.engine import Request, ServeEngine, ServeStats, percentile
+from repro.serve.engine import (
+    Request,
+    RequestHandle,
+    ServeEngine,
+    ServeStats,
+    percentile,
+)
+from repro.serve.sampling import SamplingParams
 
 
 # =============================================================================
@@ -167,6 +174,10 @@ class ClusterStats:
         return sum(self._each("prefill_compiles"))
 
     @property
+    def cancelled(self) -> int:
+        return sum(self._each("cancelled"))
+
+    @property
     def wall_seconds(self) -> float:
         # replicas within a segment run concurrently (max); segments and
         # reconfigurations are sequential (sum). A reconfigure's DRAIN
@@ -235,6 +246,7 @@ class ServeCluster:
         unified: Optional[bool] = None,
         prefill_budget: int = 64,
         max_chunk: int = 8,
+        tenant_defaults: Optional[Mapping[str, SamplingParams]] = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -251,6 +263,15 @@ class ServeCluster:
         self.router = Router(len(self.devices))
         self.finished: list[Request] = []
         self.reconfigures: list[ReconfigureReport] = []
+        # per-tenant default SamplingParams: a request submitted WITHOUT
+        # explicit sampling config inherits its tenant's default at routing
+        # time, before any engine sees it — so the defaults survive
+        # split/merge switches and mid-stream reconfigure re-routing
+        # unchanged (params are resolved once, at first submit)
+        self.tenant_defaults: dict[str, SamplingParams] = dict(tenant_defaults or {})
+        # which engine currently owns each live request (handles route
+        # cancellation through this; reconfigure() re-homes the entries)
+        self._where: dict[Request, ServeEngine] = {}
         self._fabrics: dict[Mode, list[ServeEngine]] = {}
         self.mode = Mode.parse(mode)
         self._ensure_fabric(self.mode)
@@ -315,17 +336,61 @@ class ServeCluster:
 
     # ------------------------------------------------------------------ admit
 
-    def submit(self, req: Request) -> int:
-        """Route and enqueue one request; returns the replica index."""
+    def submit(self, req: Request) -> RequestHandle:
+        """Apply the tenant's default SamplingParams (if the request came
+        without explicit config), route, and enqueue; returns a
+        :class:`RequestHandle` owned by the cluster — its ``cancel()``
+        follows the request to whichever engine currently holds it, across
+        split/merge switches and mid-stream reconfiguration."""
+        if req.tenant is not None and req.tenant in self.tenant_defaults:
+            req.apply_default_params(self.tenant_defaults[req.tenant])
         engines = self.engines
         if self.mode is Mode.MERGE:  # one fused engine, no routing
-            engines[0].submit(req)
-            return 0
-        # split mode always routes — even a degenerate 1-replica fabric
-        # keeps its JSQ/affinity telemetry truthful
-        i = self.router.route(req)
-        engines[i].submit(req)
-        return i
+            i = 0
+        else:
+            # split mode always routes — even a degenerate 1-replica fabric
+            # keeps its JSQ/affinity telemetry truthful
+            i = self.router.route(req)
+        handle = engines[i].submit(req)
+        handle._owner = self
+        handle.replica = i
+        self._where[req] = engines[i]
+        return handle
+
+    def cancel(self, req: Request) -> None:
+        """Abort a request wherever it currently lives (handle plumbing).
+        Cancelling a request that already finished is a no-op, matching
+        the engine-level semantics (a client-side timeout racing normal
+        completion must not crash)."""
+        eng = self._where.get(req)
+        if eng is None:
+            if req.finish_reason is not None:
+                return  # completed (and pruned from the ownership map)
+            raise KeyError(f"request {req.rid} was never submitted to this cluster")
+        eng.cancel(req)
+
+    def _handle_pump(self, req: Request) -> None:
+        """Progress hook for a blocked handle iterator: drive the owning
+        engine when this thread can, politely poll when a controller
+        thread owns it (split-mode replicas run under their own threads)."""
+        eng = self._where.get(req)
+        if eng is None or eng._running:
+            time.sleep(2e-4)
+            return
+        eng._handle_pump(req)
+        if req.complete:
+            self._handle_done(req)
+
+    def _handle_done(self, req: Request) -> None:
+        """Drop a COMPLETE request from the ownership map — a purely
+        handle-streamed request never passes through _run_segment's prune,
+        and without this a run()-less cluster grows the map without bound.
+        Only once complete (values harvested), never merely
+        count-finished: the final chunk's tokens are still in flight when
+        ``finish_reason`` lands, and the iterator needs the engine mapping
+        to pump them home."""
+        if req.complete:
+            self._where.pop(req, None)
 
     # ------------------------------------------------------------ reconfigure
 
@@ -355,7 +420,7 @@ class ServeCluster:
         self.mode = mode
         for r in carried:
             t = r.submitted_at  # preserve the TTFT clock across the switch
-            self.submit(r)
+            self.submit(r)  # re-homes _where, so live handles follow
             r.submitted_at = t
         rep = ReconfigureReport(
             str(old), str(mode), drain_seconds, place_s, placed, cached
@@ -367,12 +432,23 @@ class ServeCluster:
 
     def _run_segment(self, seg_arrivals: list) -> SegmentStats:
         engines = self.engines
+        # arrival-stream requests take the same intake path as submit():
+        # tenant default params attach and the ownership map learns their
+        # engine (so handle.cancel() reaches a request that arrived
+        # mid-stream, and per-tenant policy is honoured either way)
+        for _, req in seg_arrivals:
+            if req.tenant is not None and req.tenant in self.tenant_defaults:
+                req.apply_default_params(self.tenant_defaults[req.tenant])
         if self.mode is Mode.MERGE:
+            for _, req in seg_arrivals:
+                self._where[req] = engines[0]
             stats = [engines[0].run(arrivals=seg_arrivals or None)]
         else:
             per: list[list] = [[] for _ in engines]
             for t, req in seg_arrivals:
-                per[self.router.route(req)].append((t, req))
+                i = self.router.route(req)
+                per[i].append((t, req))
+                self._where[req] = engines[i]
             if len(engines) == 1:  # degenerate split: no threads needed
                 stats = [engines[0].run(arrivals=(per[0] or None))]
             else:
@@ -385,9 +461,24 @@ class ServeCluster:
                         for e, pl in zip(engines, per)
                     ]
                     stats = [f.result() for f in futs]
-        for e in engines:
+        for e, st in zip(engines, stats):
+            # work served OUTSIDE run() — handle-driven streaming and idle
+            # cancellations — landed in the engine's stream-stats; fold
+            # every counter into this segment (and zero them) so
+            # ClusterStats reports the whole session, not just the drains
+            ss = e.stream_stats
+            st.total_tokens += ss.total_tokens
+            st.total_requests += ss.total_requests
+            st.ticks += ss.ticks
+            st.prefill_compiles += ss.prefill_compiles
+            st.cancelled += ss.cancelled
+            ss.total_tokens = ss.total_requests = ss.ticks = 0
+            ss.prefill_compiles = ss.cancelled = 0
             self.finished.extend(e.finished)
             e.finished = []
+        # drop completed requests from the ownership map (cancellation can
+        # no longer reach them; keeps the map from growing unboundedly)
+        self._where = {r: e for r, e in self._where.items() if r.finish_reason is None}
         return SegmentStats(str(self.mode), stats)
 
     def run(self, arrivals=None, reconfigure_schedule=None) -> ClusterStats:

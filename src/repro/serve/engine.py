@@ -18,14 +18,34 @@ temporal analogue of Spatzformer's split/merge reconfiguration:
   decode chunk, so decode NEVER stalls behind an admission. A handful of T
   buckets replaces the per-prompt-length prefill compile zoo.
 * **decode chunk** (split mode — steady state, no admission work): decode +
-  device-side sampling (greedy argmax / gumbel-max per-slot temperature)
-  + the per-slot ``cur_len`` advance fused and scanned ``k`` steps deep,
-  where ``k`` (bucketed to powers of two up to ``max_chunk``) is the
-  largest chunk in which no slot can finish — termination depends only on
-  counts, so the host knows ``k`` in advance and chunking is
-  output-invariant. A steady-state chunk ships zero host arrays to the
-  device, so merge-mode reconfigurability costs the split-mode steady
-  state nothing (the paper's C3 parity).
+  device-side sampling + the per-slot ``cur_len`` advance fused and
+  scanned ``k`` steps deep, where ``k`` (bucketed to powers of two up to
+  ``max_chunk``) is the largest chunk in which no slot can finish —
+  count-based termination depends only on counts, so the host knows ``k``
+  in advance and chunking is output-invariant. A steady-state chunk ships
+  zero host arrays to the device, so merge-mode reconfigurability costs
+  the split-mode steady state nothing (the paper's C3 parity).
+
+Sampling is request-level configuration (:mod:`repro.serve.sampling`):
+every request carries a frozen :class:`SamplingParams` (temperature,
+top-k, top-p, seed, max_new, stop ids, logit bias); the per-slot parameter
+rows live device-resident and are re-uploaded only on slot-change events,
+and each dispatch runs one of a finite zoo of compiled sampler variants
+(``smode``) chosen per tick by a host ``if`` over the active slots. Every
+draw is keyed ``fold_in(key(request_seed), position)`` — no shared PRNG
+chain — so seeded streams are reproducible across chunk sizes, across the
+legacy/unified engines, and across cluster modes, and a neighbour slot
+being admitted or cancelled never perturbs anyone else's tokens. The
+all-greedy fast path (smode 0) skips threefry/bias/sort entirely and is
+bit-identical to the pre-SamplingParams engine.
+
+Request lifecycle: :meth:`ServeEngine.submit` returns a
+:class:`RequestHandle` — an incremental token iterator with ``cancel()``;
+``run()`` is rebuilt on the same per-iteration step machinery
+(:meth:`ServeEngine.step`). Stop tokens are detected at harvest time (the
+host-side value crossing that already exists), so count-based chunk
+sizing — and with it chunking invariance — survives value-dependent
+termination at the cost of at most one discarded in-flight chunk.
 
 Shared hot-path structure:
 
@@ -34,9 +54,9 @@ Shared hot-path structure:
   :mod:`repro.serve.backend` — the same loop serves the default device, a
   pinned split-mode replica, or a tensor-parallel mesh (merge-mode
   cluster serving, :mod:`repro.serve.cluster`);
-* tick state (last tokens, cur_len, PRNG key) is device-resident; host
-  bookkeeping tracks counts only and harvests tick t-1's token values while
-  tick t computes (termination depends on counts, never on token values);
+* tick state (last tokens, cur_len) is device-resident; host bookkeeping
+  tracks counts only and harvests tick t-1's token values while tick t
+  computes (count-based termination never waits on token values);
 * the decode cache is donated through every dispatch — the engine never
   holds two copies of the KV cache;
 * SSM/hybrid/MLA archs (no positional KV cache to scatter into) keep the
@@ -46,10 +66,12 @@ Shared hot-path structure:
 
 from __future__ import annotations
 
+import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,20 +79,149 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serve.backend import PlacementBackend, resolve_backend
+from repro.serve.sampling import (
+    SMODE_GREEDY,
+    SamplingParams,
+    bias_row,
+    fused_sample,
+    param_rows,
+)
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    """One serving request. Identity-based equality/hash: a Request is a
+    live lifecycle object (queues, slot tables, handle maps key on it),
+    not a value.
+
+    Sampling/termination configuration lives in ``params``
+    (:class:`SamplingParams`). The bare ``max_new=``/``temperature=``
+    kwargs are the pre-SamplingParams surface, kept as deprecation shims:
+    they build (and stay mirrored from) ``params`` so old callers and the
+    router's cost model keep working."""
+
     rid: int
     prompt: np.ndarray  # [S] int32
-    max_new: int
-    temperature: float = 0.0
+    max_new: Optional[int] = None  # deprecated: use params=SamplingParams(...)
+    temperature: Optional[float] = None  # deprecated: use params=...
+    params: Optional[SamplingParams] = None
     tenant: Optional[str] = None  # cluster router affinity key (optional)
     generated: list[int] = field(default_factory=list)
     n_generated: int = 0  # tokens sampled so far (values may still be in flight)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    finish_reason: Optional[str] = None  # "length" | "stop" | "cancelled"
+
+    def __post_init__(self):
+        explicit = (
+            self.params is not None
+            or self.max_new is not None
+            or self.temperature is not None
+        )
+        if self.params is None:
+            if self.max_new is not None or self.temperature is not None:
+                warnings.warn(
+                    "Request(max_new=..., temperature=...) is deprecated; "
+                    "pass params=SamplingParams(max_new=..., temperature=...)",
+                    DeprecationWarning,
+                    stacklevel=3,
+                )
+            self.params = SamplingParams(
+                temperature=self.temperature if self.temperature is not None else 0.0,
+                max_new=self.max_new if self.max_new is not None else 16,
+            )
+        elif self.max_new is not None or self.temperature is not None:
+            raise ValueError("pass either params= or the legacy kwargs, not both")
+        # whether the caller configured sampling at all: a cluster's
+        # per-tenant default only fills requests that did not
+        self._explicit_params = explicit
+        self._sync_mirrors()
+
+    def _sync_mirrors(self) -> None:
+        self.max_new = self.params.max_new
+        self.temperature = self.params.temperature
+
+    def apply_default_params(self, params: SamplingParams) -> None:
+        """Fill in a default ``SamplingParams`` (e.g. a cluster's per-tenant
+        default) — a no-op when the caller configured the request."""
+        if self._explicit_params:
+            return
+        self.params = params
+        self._explicit_params = True
+        self._sync_mirrors()
+
+    @property
+    def complete(self) -> bool:
+        """Finished AND every token value harvested to the host."""
+        return (
+            self.finish_reason is not None
+            and len(self.generated) >= self.n_generated
+        )
+
+
+class RequestHandle:
+    """Streaming view of one submitted request: an incremental token
+    iterator plus ``cancel()``. Tokens become visible as the engine
+    harvests them (one dispatch behind the device, by design); iterating
+    from the submitting thread *drives* the engine (``step()``) when
+    nothing else is, and politely polls when a controller thread (cluster
+    split mode) owns the serving loop."""
+
+    def __init__(self, request: Request, owner) -> None:
+        self.request = request
+        self._owner = owner  # ServeEngine or ServeCluster
+        self.replica = None  # split-mode routing target (set by ServeCluster)
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def params(self) -> SamplingParams:
+        return self.request.params
+
+    @property
+    def done(self) -> bool:
+        return self.request.complete
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.request.finish_reason
+
+    def cancel(self) -> None:
+        """Abort the request: dequeue it if waiting, free its slot if
+        decoding. In-flight token values are discarded; no other slot's
+        output is perturbed (sampling keys are per-request, never shared)."""
+        self._owner.cancel(self.request)
+
+    def tokens(self) -> Iterator[int]:
+        """Yield generated token ids incrementally until the request
+        finishes (length/stop) or is cancelled."""
+        i = 0
+        while True:
+            if i < len(self.request.generated):
+                yield self.request.generated[i]
+                i += 1
+            elif self.done:
+                # completion may have been a side effect of a batch-mate's
+                # streaming — give the owner its bookkeeping hook (the
+                # cluster prunes its request→engine ownership map here)
+                done_hook = getattr(self._owner, "_handle_done", None)
+                if done_hook is not None:
+                    done_hook(self.request)
+                return
+            else:
+                self._owner._handle_pump(self.request)
+
+    __iter__ = tokens
+
+    def result(self) -> list[int]:
+        """Block (driving the engine if needed) until complete; returns the
+        full generated token list."""
+        for _ in self.tokens():
+            pass
+        return self.request.generated
 
 
 def percentile(xs: list[float], q: float) -> float:
@@ -83,6 +234,7 @@ def percentile(xs: list[float], q: float) -> float:
 class ServeStats:
     total_tokens: int = 0
     total_requests: int = 0
+    cancelled: int = 0  # requests aborted via handle.cancel()
     wall_seconds: float = 0.0
     ticks: int = 0
     prefill_compiles: int = 0
@@ -183,34 +335,69 @@ class ServeEngine:
         self._packed_shapes: set[int] = set()  # compiled T buckets
         self._admit_shapes: set[int] = set()  # compiled fused-admission buckets
         self._done_now: list[Request] = []  # requests finished in this run()
+        # streaming/cancellation plumbing: pending holds dispatched-but-
+        # unharvested entries, cancels is the cross-thread abort inbox
+        self._pending: deque = deque()
+        self._cancels: list[Request] = []
+        self._cancel_lock = threading.Lock()
+        # serializes state-machine drivers: run() loop iterations, step()
+        # (handle-driven streaming), and inline cancellation application —
+        # a cancel that read _running=False just as run() starts blocks
+        # here until the in-flight iteration finishes instead of mutating
+        # the slot table underneath it. Uncontended acquire per tick is
+        # noise next to a ~ms dispatch.
+        self._drive_lock = threading.RLock()
+        self._running = False  # a run() loop (possibly another thread) drives
+        self._stream_stats = ServeStats()  # accumulator for step()-driven serving
         # the cache is donated through all consumers — the engine never
         # holds two copies of the KV cache
         self._insert = self.backend.jit(self._insert_fn, donate_argnums=(0,))
         self._tick = self.backend.jit(
             self._tick_fn, donate_argnums=(1,),
-            static_argnames=("n_steps", "has_temp"),
+            static_argnames=("n_steps", "smode"),
         )
         self._packed = self.backend.jit(
-            self._packed_fn, donate_argnums=(1,), static_argnames=("has_temp",)
+            self._packed_fn, donate_argnums=(1,), static_argnames=("smode",)
         )
         self._admit_prog = self.backend.jit(
-            self._admit_fn, donate_argnums=(1,), static_argnames=("has_temp",)
+            self._admit_fn, donate_argnums=(1,), static_argnames=("smode",)
         )
-        # device-resident tick state: sampled tokens, per-slot lengths, PRNG
+        # the legacy first-token path jits the SAME fused sampler on a
+        # one-row batch: host and device sampling cannot drift apart.
+        # sampf = [temperature, top_p] f32, sampi = [top_k, seed] i32 —
+        # one combined upload each instead of four scalar device_puts
+        self._sample1 = self.backend.jit(
+            lambda row, sampf, sampi, pos, bt, bv, smode: fused_sample(
+                row[None], sampf[:1], sampi[:1], sampf[1:], sampi[1:],
+                pos[None], bt, bv, smode=smode,
+            )[0],
+            static_argnames=("smode",),
+        )
+        # device-resident tick state: sampled tokens, per-slot lengths
         self._last_tok = self.backend.put_state(jnp.zeros(batch_slots, jnp.int32))
         self._cur_len = self.backend.put_state(jnp.zeros(batch_slots, jnp.int32))
-        self._rng_key = self.backend.put_state(jax.random.key(seed))
         # event-driven device arrays (re-uploaded only when slots change):
         # lanes rows are (ov_mask, ov_tok, ov_len, active) — one combined
-        # upload instead of five tiny ones
+        # upload instead of five tiny ones — and the per-slot sampling
+        # parameter rows (temperature/top_p, top_k/seed, logit-bias pairs)
         self._lanes_idle = self.backend.put_state(
             jnp.zeros((4, batch_slots), jnp.int32)
         )
-        self._temps = self.backend.put_state(jnp.zeros(batch_slots, jnp.float32))
+        self._put_sp(*param_rows([None] * batch_slots, np.zeros(batch_slots)))
+        # cached all-zero sampler operands: every greedy (smode 0) dispatch
+        # reuses these device-resident constants — the sampler arguments are
+        # DEAD in the compiled greedy program, so the all-greedy hot path
+        # must not pay fresh uploads for them (tiny device_puts dominate
+        # small-host dispatch; C3 parity for the gated steady-state row)
+        self._sp0 = (self._spf, self._spi, self._btok, self._bval)
+        self._samp0f = self.backend.put_state(jnp.zeros(2, jnp.float32))
+        self._samp0i = self.backend.put_state(jnp.zeros(2, jnp.int32))
+        self._bias1_0t = self._btok[:1]
+        self._bias1_0v = self._bval[:1]
         self._ov_mask_h = np.zeros(batch_slots, bool)  # staged override lanes
         self._ov_tok_h = np.zeros(batch_slots, np.int32)
         self._ov_len_h = np.zeros(batch_slots, np.int32)
-        self._dirty = False  # overrides/active/temps pending upload
+        self._dirty = False  # overrides/active/sampling rows pending upload
         # right-padded prefill is only safe when nothing recurrent sees the
         # pad tokens: attention masks them (causal + cur_len), SSM states don't
         self._bucket_prefill = model.cfg.family in ("dense", "moe")
@@ -226,33 +413,37 @@ class ServeEngine:
 
         return jax.tree.map(leaf, cache, one_cache)
 
-    @staticmethod
-    def _sample_or_greedy(logits, temps, key, has_temp: bool):
-        """Shared sampling tail of every dispatch kind: gumbel-max at
-        per-slot temperature when ``has_temp``, else plain argmax with no
-        PRNG split (the greedy fast path skips threefry entirely). The
-        split-per-sample discipline is what keeps chunking output-invariant
-        — change it here, not in the callers. Returns (tokens, key)."""
-        if has_temp:
-            key, sub = jax.random.split(key)
-            return ServeEngine._sample_batch_fn(logits, temps, sub), key
-        tok = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
-        return tok, key
+    def _put_sp(self, spf, spi, btok, bval) -> None:
+        """Place the per-slot sampling parameter rows on device."""
+        self._spf = self.backend.put_host(spf)
+        self._spi = self.backend.put_host(spi)
+        self._btok = self.backend.put_host(btok)
+        self._bval = self.backend.put_host(bval)
+        # rows stay fresh until a NEW request occupies a slot (a freed
+        # slot's stale row is harmless: inactive slots' draws are masked)
+        self._sp_fresh = True
 
-    @staticmethod
-    def _sample_batch_fn(logits, temps, key):
-        """One device-side sample for every slot. logits: [B, V] (any float
-        dtype), temps: [B] f32. Greedy slots take argmax; temperature slots
-        take gumbel-max (categorical) at their own temperature."""
-        logits = logits.astype(jnp.float32)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        gumbel = jax.random.gumbel(key, logits.shape, jnp.float32)
-        scaled = logits / jnp.maximum(temps, 1e-6)[:, None] + gumbel
-        sampled = jnp.argmax(scaled, axis=-1).astype(jnp.int32)
-        return jnp.where(temps > 0, sampled, greedy)
+    def _sp_rows(self):
+        """Host-built per-slot sampling rows for the CURRENT slot pool."""
+        return param_rows(
+            [r.params if r is not None else None for r in self.slot_req],
+            [getattr(r, "_seed", 0) if r is not None else 0 for r in self.slot_req],
+        )
 
-    def _tick_fn(self, params, cache, last_tok, cur_len, lanes, temps, key,
-                 n_steps: int = 1, has_temp: bool = True):
+    def _bind(self, req: Request) -> None:
+        """Resolve per-request derived sampling state once, at admission:
+        the effective seed (engine-assigned when the caller left it None)
+        and the precomputed stop set / sampler variant."""
+        if getattr(req, "_bound", False):
+            return
+        p = req.params
+        req._seed = p.seed if p.seed is not None else int(self.rng.integers(1 << 31))
+        req._stop = frozenset(p.stop)
+        req._smode = p.smode
+        req._bound = True
+
+    def _tick_fn(self, params, cache, last_tok, cur_len, lanes, spf, spi,
+                 btok, bval, n_steps: int = 1, smode: int = 0):
         """One fused decode-chunk dispatch: fold the admission override lanes
         into the device state, then run ``n_steps`` decode+sample steps as a
         device-side scan. Everything stays on device; the per-dispatch
@@ -262,16 +453,17 @@ class ServeEngine:
         upload costs real wall time on small hosts. Returns toks
         [n_steps, B].
 
-        ``has_temp=False`` is the all-greedy fast path: plain argmax, no
-        per-step PRNG split and no gumbel draw (threefry is a real cost on
-        small hosts). Inactive slots keep their ``last_tok`` (mid-prefill
-        slots ride the batch inertly — their sampled garbage must not
-        clobber a first token the packed dispatch just wrote).
+        ``smode=0`` is the all-greedy fast path: plain argmax, no PRNG key
+        folds and no gumbel draw (threefry is a real cost on small hosts).
+        Inactive slots keep their ``last_tok`` (mid-prefill slots ride the
+        batch inertly — their sampled garbage must not clobber a first
+        token the packed dispatch just wrote).
 
         Chunking never changes results: the host only chooses ``n_steps``
-        such that no slot can finish (and hence no admission can land)
-        inside the chunk, and the PRNG split chain per step is identical to
-        n_steps=1 dispatches.
+        such that no slot can count-finish (and hence no admission can
+        land) inside the chunk, and every sample's PRNG key is a pure
+        function of (request seed, position) — identical to n_steps=1
+        dispatches by construction.
         """
         ov_mask = lanes[0].astype(bool)
         active = lanes[3].astype(bool)
@@ -280,21 +472,24 @@ class ServeEngine:
         adv = lanes[3]
 
         def step(carry, _):
-            tok, cl, cache, key = carry
+            tok, cl, cache = carry
             logits, cache = self.model.decode_step(
                 params, cache, {"tokens": tok[:, None]}, cl
             )
-            new, key = self._sample_or_greedy(logits[:, 0], temps, key, has_temp)
+            new = fused_sample(
+                logits[:, 0], spf[0], spi[0], spf[1], spi[1], cl,
+                btok, bval, smode=smode,
+            )
             tok = jnp.where(active, new, tok)
-            return (tok, cl + adv, cache, key), tok
+            return (tok, cl + adv, cache), tok
 
-        (last_tok, cur_len, cache, key), toks = jax.lax.scan(
-            step, (last_tok, cur_len, cache, key), None, length=n_steps
+        (last_tok, cur_len, cache), toks = jax.lax.scan(
+            step, (last_tok, cur_len, cache), None, length=n_steps
         )
-        return toks, last_tok, cur_len, cache, key
+        return toks, last_tok, cur_len, cache
 
-    def _packed_fn(self, params, cache, last_tok, desc, meta, temps, key,
-                   has_temp: bool = True):
+    def _packed_fn(self, params, cache, last_tok, desc, meta, spf, spi,
+                   btok, bval, smode: int = 0):
         """One ragged prefill dispatch: a flat [T_bucket] pack of prompt
         chunk tokens from every admitting slot runs through the packed
         model step; a slot whose prompt COMPLETES in this pack samples its
@@ -302,13 +497,14 @@ class ServeEngine:
         everyone else's work — the legacy engine's blocking logits transfer
         + host sample per admission disappears.
 
-        The host-built arrays arrive as TWO int32 uploads (tiny device_puts
-        dominate small-host dispatch): ``desc`` [3, T_bucket] rows
-        (chunk token, local slot, position), ``meta`` [3B + pack width]
-        = new_len | sample_idx | sample_mask | pack_slots, where new_len is
-        the host-computed per-slot cache count after this pack (the host
-        knows every count in advance). Returns (sampled [B], last_tok,
-        cur_len, cache, key)."""
+        The host-built arrays arrive as combined int32 uploads (tiny
+        device_puts dominate small-host dispatch): ``desc`` [3, T_bucket]
+        rows (chunk token, local slot, position), ``meta`` [3B + pack
+        width] = new_len | sample_idx | sample_mask | pack_slots, where
+        new_len is the host-computed per-slot cache count after this pack
+        (the host knows every count in advance); the sampled first token's
+        PRNG position is its final prompt index, ``new_len - 1``. Returns
+        (sampled [B], last_tok, cur_len, cache)."""
         b = self.B
         new_len = meta[:b]
         sample_idx = meta[b : 2 * b]
@@ -318,17 +514,20 @@ class ServeEngine:
             params, cache, desc[0], desc[1], desc[2],
             out_rows=sample_idx, pack_slots=pack_slots,
         )
-        sampled, key = self._sample_or_greedy(logits, temps, key, has_temp)
+        sampled = fused_sample(
+            logits, spf[0], spi[0], spf[1], spi[1], new_len - 1,
+            btok, bval, smode=smode,
+        )
         last_tok = jnp.where(sample_mask, sampled, last_tok)
-        return sampled, last_tok, new_len, cache, key
+        return sampled, last_tok, new_len, cache
 
     def _admit_fn(self, params, cache, toks, slot, last_pos, last_tok,
-                  cur_len, temp, key, has_temp: bool = False):
+                  cur_len, sampf, sampi, btok, bval, smode: int = 0):
         """One fused async admission (unified mode, prompt ≤ budget): dense
         prefill + cache insert + the first token sampled on device from the
         last REAL prompt position + tick-state update, all in ONE dispatch
-        that nothing waits on. The legacy path's blocking logits transfer +
-        host-side sample per admission — the pipeline bubble that stalls
+        that nothing waits on. The legacy path's blocking logits transfer
+        + host-side sample per admission — the pipeline bubble that stalls
         every decode slot — does not exist here; the newly admitted slot
         starts decoding in the same loop iteration."""
         logits, one_cache = self.model.prefill(
@@ -336,13 +535,15 @@ class ServeEngine:
         )
         cache = self._insert_fn(cache, one_cache, slot)
         row = logits[0, last_pos]  # [V]
-        toks1, key = self._sample_or_greedy(row[None], temp[None], key, has_temp)
-        tok = toks1[0]
+        tok = fused_sample(
+            row[None], sampf[:1], sampi[:1], sampf[1:], sampi[1:],
+            last_pos[None], btok, bval, smode=smode,
+        )[0]
         last_tok = last_tok.at[slot].set(tok)
         cur_len = cur_len.at[slot].set(last_pos + 1)
-        return tok, last_tok, cur_len, cache, key
+        return tok, last_tok, cur_len, cache
 
-    def _prefill_one(self, req: Request, slot: int, stats: Optional[ServeStats]) -> np.ndarray:
+    def _prefill_one(self, req: Request, slot: int, stats: Optional[ServeStats]):
         s = len(req.prompt)
         sb = _bucket_len(s, self.max_len) if self._bucket_prefill else s
         sb = max(sb, s)
@@ -358,52 +559,114 @@ class ServeEngine:
             self.params, {"tokens": self.backend.put_host(toks)}
         )
         self.cache = self._insert(self.cache, one_cache, jnp.int32(slot))
-        return np.asarray(logits[0, s - 1])  # last REAL position's logits
+        return logits[0, s - 1]  # last REAL position's logits (device row)
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        """Host-side single sample (legacy prefill first-token path)."""
-        if temperature <= 0:
-            return int(np.argmax(logits))
-        z = np.asarray(logits, np.float64) / temperature
-        z -= z.max()
-        p = np.exp(z)
-        p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
+    def _admit_samp(self, req: Request):
+        """Per-request admission sampler operands ``(sampf, sampi, btok,
+        bval)``. A greedy request reuses the cached device-resident zeros —
+        its compiled program never reads them, so the all-greedy admission
+        path uploads NOTHING beyond what the pre-SamplingParams engine did."""
+        if req._smode == SMODE_GREEDY:
+            return self._samp0f, self._samp0i, self._bias1_0t, self._bias1_0v
+        p = req.params
+        bt, bv = bias_row(p)
+        return (
+            self.backend.put_host(np.asarray([p.temperature, p.top_p], np.float32)),
+            self.backend.put_host(np.asarray([p.top_k, req._seed], np.int32)),
+            self.backend.put_host(bt[None]),
+            self.backend.put_host(bv[None]),
+        )
+
+    def _sample_first(self, row, req: Request) -> int:
+        """Legacy-path first-token sample: the SAME fused sampler as every
+        device dispatch, jitted on a one-row batch (blocking — the legacy
+        admission is synchronous by definition). The row is cast to f32
+        BEFORE the jit boundary so the program prewarm() compiled (an f32
+        dummy row) serves every model dtype — a bf16 arch must not pay a
+        sampler compile at its first sampled admission."""
+        sampf, sampi, bt, bv = self._admit_samp(req)
+        return int(
+            self._sample1(
+                row.astype(jnp.float32), sampf, sampi,
+                jnp.int32(len(req.prompt) - 1), bt, bv, smode=req._smode,
+            )
+        )
+
+    # --------------------------------------------------------- token harvest
+
+    def _credit(self, req: Request, tok: int, now: float,
+                stats: Optional[ServeStats], first: bool = False) -> None:
+        """Append one harvested token value to its request, detecting stop
+        tokens at the host crossing that already exists. The stop token is
+        itself emitted and counted into ``n_generated`` — exactly like the
+        final token of a ``max_new`` window — and any in-flight values past
+        it (or past a cancellation) are discarded here, so ``generated``
+        is always the final visible prefix (a streaming iterator never
+        sees a token that later disappears). A discarded decode value is
+        also refunded from ``stats.total_tokens`` (it was counted at
+        dispatch), so reported throughput only counts emitted tokens."""
+        if req.finish_reason in ("stop", "cancelled") or (
+            len(req.generated) >= req.n_generated
+        ):
+            # overrun values past a stop/cancel; first tokens (admit/packed
+            # entries) were never in total_tokens, decode values were
+            if stats is not None and not first:
+                stats.total_tokens -= 1
+            return
+        req.generated.append(tok)
+        if first and req.first_token_at is None:
+            req.first_token_at = now
+        if tok in req._stop:
+            # stop wins over a simultaneous max_new boundary: the request
+            # ended at this token either way, and the reason says why
+            req.finish_reason = "stop"
+            req.n_generated = len(req.generated)
+            req.done_at = now
+
+    @staticmethod
+    def _stamp(req: Request, now: float) -> None:
+        # done_at was stamped at dispatch-enqueue (counts-only
+        # bookkeeping); pull it forward to when the values actually
+        # reached the host so TPOT never goes negative and the final
+        # chunk's device compute is not silently excluded
+        if req.done_at is not None:
+            req.done_at = max(req.done_at, now)
 
     def _harvest(self, entry) -> None:
         """Blockingly pull one dispatch's sampled tokens and credit the
         slots' requests. Called one dispatch behind, so this host transfer
         overlaps the next dispatch's device compute. Packed entries also
         stamp first-token availability (TTFT) — the value provably exists
-        on the host at harvest time."""
-        kind, tok_dev, items = entry
+        on the host at harvest time. The entry carries the stats object
+        that counted its dispatch, so a discard refund always lands on the
+        counter that was incremented — even when a chunk dispatched under
+        step()-driven streaming is harvested inside a later run()."""
+        kind, tok_dev, items, stats = entry
         toks = np.asarray(tok_dev)
         now = time.perf_counter()
 
-        def stamp(req):
-            # done_at was stamped at dispatch-enqueue (counts-only
-            # bookkeeping); pull it forward to when the values actually
-            # reached the host so TPOT never goes negative and the final
-            # chunk's device compute is not silently excluded
-            if req.done_at is not None:
-                req.done_at = max(req.done_at, now)
-
         if kind == "admit":  # fused admission: one scalar first token
             slot, req = items
-            req.generated.append(int(toks))
-            if req.first_token_at is None:
-                req.first_token_at = now
-            stamp(req)
+            self._credit(req, int(toks), now, stats, first=True)
+            self._stamp(req, now)
         elif kind == "packed":  # [B] one sample per flagged slot
             for slot, req, is_first in items:
-                req.generated.append(int(toks[slot]))
-                if is_first and req.first_token_at is None:
-                    req.first_token_at = now
-                stamp(req)
+                self._credit(req, int(toks[slot]), now, stats, first=is_first)
+                self._stamp(req, now)
         else:  # decode chunk: [n_steps, B]
             for slot, req in items:
-                req.generated.extend(int(t) for t in toks[:, slot])
-                stamp(req)
+                if not req._stop and len(req.generated) + len(toks) <= req.n_generated:
+                    # no stop set and no overrun: bulk-extend (the all-greedy
+                    # steady state takes this path for every chunk)
+                    req.generated.extend(int(t) for t in toks[:, slot])
+                else:
+                    for t in toks[:, slot]:
+                        self._credit(req, int(t), now, stats)
+                self._stamp(req, now)
+
+    def _drain_pending(self) -> None:
+        while self._pending:
+            self._harvest(self._pending.popleft())
 
     def _flush_events(self):
         """Upload pending slot changes; returns this tick's [4, B] lanes."""
@@ -423,12 +686,14 @@ class ServeEngine:
             r is not None and self.slot_fed[i] >= len(r.prompt)
             for i, r in enumerate(self.slot_req)
         ]
-        self._temps = self.backend.put_host(
-            np.asarray(
-                [r.temperature if r is not None else 0.0 for r in self.slot_req],
-                np.float32,
-            )
-        )
+        # the per-slot sampling rows are DEAD in every smode-0 program: an
+        # all-greedy slot pool skips the rebuild entirely, and a flush
+        # whose only change is a freed slot (rows still fresh) skips it too
+        # — _packed_tick may also have rebuilt them earlier this iteration
+        if not self._sp_fresh and any(
+            r is not None and r._smode for r in self.slot_req
+        ):
+            self._put_sp(*self._sp_rows())
         # the overrides apply exactly once; later idle ticks reuse a cached
         # ov-zeroed copy with the same active row
         idle = lanes.copy()
@@ -448,23 +713,31 @@ class ServeEngine:
         fused-admission prompt buckets. A compile landing inside a live
         arrival stream stalls every queued request's TTFT; this moves all
         of them off the serving path. ``sampling=True`` additionally
-        compiles the temperature (``has_temp``) variants — greedy-only
-        deployments skip them, a mixed-sampling deployment should not let
-        its first temperature request pay the compile. Call on an IDLE
-        engine (before serving): the dummy fused-admission dispatches
-        overwrite slot 0's cache row."""
-        key = self.backend.put_state(jax.random.key(0))
-        temp_variants = (False, True) if sampling else (False,)
+        compiles every sampler variant (gumbel temperature + masked
+        top-k/top-p) of each dispatch — greedy-only deployments skip them,
+        a mixed-sampling deployment should not let its first temperature
+        or nucleus request pay the compile. Call on an IDLE engine (before
+        serving): the dummy fused-admission dispatches overwrite slot 0's
+        cache row."""
+        smodes = (0, 1, 2) if sampling else (0,)
         k = 1
         while k <= self.max_chunk:
-            for ht in temp_variants:
-                toks, _lt, _cl, self.cache, _k = self._tick(
+            for sm in smodes:
+                toks, _lt, _cl, self.cache = self._tick(
                     self.params, self.cache, self._last_tok, self._cur_len,
-                    self._lanes_idle, self._temps, key, n_steps=k, has_temp=ht,
+                    self._lanes_idle, self._spf, self._spi, self._btok,
+                    self._bval, n_steps=k, smode=sm,
                 )
                 jax.block_until_ready(toks)
             k *= 2
         if not self.unified:
+            if sampling:  # the legacy first-token path's sampler variants
+                row = self.backend.put_host(np.zeros(self.model.cfg.vocab_size, np.float32))
+                for sm in smodes:
+                    jax.block_until_ready(self._sample1(
+                        row, self._samp0f, self._samp0i, jnp.int32(0),
+                        self._bias1_0t, self._bias1_0v, smode=sm,
+                    ))
             return
         # the EXACT T-bucket ladder _bucket_tokens can produce, including
         # the doubling tail beyond _T_BUCKETS for very large budgets
@@ -488,12 +761,11 @@ class ServeEngine:
                     np.zeros(_PACK_WIDTH, np.int32),
                 ]
             )
-            for ht in temp_variants:
-                toks, _lt, _cl, self.cache, _k = self._packed(
+            for sm in smodes:
+                toks, _lt, _cl, self.cache = self._packed(
                     self.params, self.cache, self._last_tok,
                     self.backend.put_host(desc), self.backend.put_host(meta),
-                    self.backend.put_host(np.zeros(self.B, np.float32)),
-                    key, has_temp=ht,
+                    self._spf, self._spi, self._btok, self._bval, smode=sm,
                 )
                 jax.block_until_ready(toks)
             self._packed_shapes.add(tb)
@@ -509,12 +781,13 @@ class ServeEngine:
         for sb in sorted({_bucket_len(s, self.max_len) for s in sizes}):
             if sb in self._admit_shapes:
                 continue
-            for ht in temp_variants:
-                tok, _lt, _cl, self.cache, _k = self._admit_prog(
+            for sm in smodes:
+                tok, _lt, _cl, self.cache = self._admit_prog(
                     self.params, self.cache,
                     self.backend.put_host(np.zeros((1, sb), np.int32)),
                     jnp.int32(0), jnp.int32(sb - 1), self._last_tok,
-                    self._cur_len, jnp.float32(0.0), key, has_temp=ht,
+                    self._cur_len, self._samp0f, self._samp0i,
+                    self._bias1_0t, self._bias1_0v, smode=sm,
                 )
                 jax.block_until_ready(tok)
             self._admit_shapes.add(sb)
@@ -534,24 +807,85 @@ class ServeEngine:
         self.finished = []
         self._prefilling.clear()
         self._done_now = []
+        self._pending.clear()
+        self._cancels.clear()
+        self._stream_stats = ServeStats()
         self.rng = np.random.default_rng(self.seed)
         self._last_tok = self.backend.put_state(jnp.zeros(self.B, jnp.int32))
         self._cur_len = self.backend.put_state(jnp.zeros(self.B, jnp.int32))
-        self._rng_key = self.backend.put_state(jax.random.key(self.seed))
         self._lanes_idle = self.backend.put_state(jnp.zeros((4, self.B), jnp.int32))
-        self._temps = self.backend.put_state(jnp.zeros(self.B, jnp.float32))
+        self._put_sp(*param_rows([None] * self.B, np.zeros(self.B)))
         self._ov_mask_h[:] = False
         self._ov_tok_h[:] = 0
         self._ov_len_h[:] = 0
         self._dirty = False
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> RequestHandle:
         assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
         req.submitted_at = time.perf_counter()
         self.waiting.append(req)
+        return RequestHandle(req, self)
 
-    def _finish(self, req: Request, slot: int, stats: Optional[ServeStats]) -> None:
-        req.done_at = time.perf_counter()
+    # ------------------------------------------------------------- lifecycle
+
+    def cancel(self, req: Request) -> None:
+        """Abort a request (thread-safe): enqueue the cancellation and — if
+        no run loop owns the engine — apply it immediately. A controller
+        thread mid-``run()`` applies queued cancels at its next scheduling
+        iteration; the freed slot is re-admittable the same iteration, and
+        no other slot's stream is perturbed (per-request sampling keys)."""
+        with self._cancel_lock:
+            # append AND the _running read happen under the lock: an
+            # unlocked append could land on a list _apply_cancels already
+            # swapped out (silently losing the cancel), and run() flips
+            # _running under the same lock so inline application can't
+            # overlap a starting serving loop
+            self._cancels.append(req)
+            running = self._running
+        if not running:
+            with self._drive_lock:
+                self._apply_cancels(self._stream_stats)
+
+    def _apply_cancels(self, stats: ServeStats) -> None:
+        if not self._cancels:  # steady state: no lock, no list churn
+            return
+        with self._cancel_lock:
+            cancels, self._cancels = self._cancels, []
+            for req in cancels:
+                if req.finish_reason is not None:
+                    continue  # finished (or already cancelled) — nothing to free
+                if req in self.waiting:
+                    self.waiting.remove(req)
+                for slot, r in enumerate(self.slot_req):
+                    if r is req:  # free the slot mid-stream
+                        self.slot_req[slot] = None
+                        self.slot_len[slot] = 0
+                        self.slot_fed[slot] = 0
+                        if slot in self._prefilling:
+                            self._prefilling.remove(slot)
+                        self._ov_mask_h[slot] = False  # unflushed admission override
+                        self._dirty = True
+                req.finish_reason = "cancelled"
+                req.n_generated = len(req.generated)  # in-flight values discarded
+                req.done_at = time.perf_counter()
+                self.finished.append(req)
+                self._done_now.append(req)
+                stats.cancelled += 1
+
+    def _release_stopped(self, stats: ServeStats) -> None:
+        """Free the slot of any request whose harvest found a stop token
+        (value-dependent termination is detected one dispatch behind; the
+        slot's overrun chunk, if any, was discarded at credit time)."""
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.finish_reason == "stop":
+                self._finish(r, slot, stats)
+
+    def _finish(self, req: Request, slot: int, stats: Optional[ServeStats],
+                reason: str = "length") -> None:
+        if req.finish_reason is None:
+            req.finish_reason = reason
+        if req.done_at is None:
+            req.done_at = time.perf_counter()
         self.finished.append(req)
         self._done_now.append(req)
         self.slot_req[slot] = None
@@ -561,25 +895,34 @@ class ServeEngine:
         self._dirty = True
 
     def _admit(self, stats: Optional[ServeStats] = None) -> None:
-        """Legacy admission: synchronous B=1 prefill + cache insert."""
+        """Legacy admission: synchronous B=1 prefill + cache insert. The
+        first token runs through the SAME fused sampler as the device
+        dispatches (one-row jit), so legacy and unified streams stay
+        bit-identical under every SamplingParams."""
         for slot in range(self.B):
             while self.slot_req[slot] is None and self.waiting:
                 req = self.waiting.popleft()
-                last_logits = self._prefill_one(req, slot, stats)
-                tok = self._sample(last_logits, req.temperature)
+                self._bind(req)
+                row = self._prefill_one(req, slot, stats)
+                tok = self._sample_first(row, req)
+                now = time.perf_counter()
                 req.generated.append(tok)
-                req.n_generated = len(req.generated)
-                req.first_token_at = time.perf_counter()
-                if req.n_generated >= req.max_new:
-                    # nothing left to decode (max_new=1): finish without
-                    # ever occupying the slot
-                    req.done_at = req.first_token_at
+                req.n_generated = 1
+                req.first_token_at = now
+                if tok in req._stop or req.n_generated >= req.params.max_new:
+                    # nothing left to decode (stop token, or max_new=1):
+                    # finish without ever occupying the slot. A first-token
+                    # stop counts into n_generated exactly like a
+                    # max_new=1 boundary — one emitted token either way.
+                    req.finish_reason = "stop" if tok in req._stop else "length"
+                    req.done_at = now
                     self.finished.append(req)
                     self._done_now.append(req)
                     if stats is not None:
                         stats.total_requests += 1
                     continue
                 self.slot_req[slot] = req
+                self._sp_fresh = False  # a new occupant's row must upload
                 self.slot_len[slot] = len(req.prompt)
                 self.slot_fed[slot] = len(req.prompt)
                 self._ov_mask_h[slot] = True
@@ -601,8 +944,10 @@ class ServeEngine:
         for slot in range(self.B):
             while self.slot_req[slot] is None and self.waiting:
                 req = self.waiting.popleft()
+                self._bind(req)
                 s = len(req.prompt)
                 self.slot_req[slot] = req
+                self._sp_fresh = False  # a new occupant's row must upload
                 self._dirty = True
                 if s > self.prefill_budget:  # chunked ragged tier
                     self.slot_len[slot] = 0
@@ -616,20 +961,20 @@ class ServeEngine:
                         stats.prefill_compiles += 1
                 toks = np.zeros((1, sb), np.int32)
                 toks[0, :s] = req.prompt
-                tok, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+                sampf, sampi, bt, bv = self._admit_samp(req)
+                tok, self._last_tok, self._cur_len, self.cache = (
                     self._admit_prog(
                         self.params, self.cache, self.backend.put_host(toks),
                         jnp.int32(slot), jnp.int32(s - 1), self._last_tok,
-                        self._cur_len,
-                        jnp.float32(req.temperature), self._rng_key,
-                        has_temp=req.temperature > 0,
+                        self._cur_len, sampf, sampi, bt, bv,
+                        smode=req._smode,
                     )
                 )
                 self.slot_len[slot] = s
                 self.slot_fed[slot] = s
                 req.n_generated += 1  # first token (in flight; counts-only
-                pending.append(("admit", tok, (slot, req)))
-                if req.n_generated >= req.max_new:  # bookkeeping, as ever)
+                pending.append(("admit", tok, (slot, req), stats))
+                if req.n_generated >= req.params.max_new:  # bookkeeping)
                     self._finish(req, slot, stats)
 
     # ------------------------------------------------------------ tick paths
@@ -672,7 +1017,7 @@ class ServeEngine:
         if tb not in self._packed_shapes:
             self._packed_shapes.add(tb)
             stats.prefill_compiles += 1
-        # TWO combined uploads, built fresh every tick (CPU device_put can
+        # combined uploads, built fresh every tick (CPU device_put can
         # be zero-copy, so jax must never see a buffer the host mutates
         # later). Padding tokens scatter out of bounds (dropped) and attend
         # slot 0 with an all-valid mask; their output rows are never sampled
@@ -685,20 +1030,28 @@ class ServeEngine:
         meta = np.concatenate(
             [self.slot_len, sample_idx, sample_mask.astype(np.int32), pack_slots]
         )
-        temps = np.asarray(
-            [r.temperature if r is not None else 0.0 for r in self.slot_req],
-            np.float32,
+        # only the slots SAMPLED by this pack pick the compiled variant —
+        # mid-prefill neighbours don't widen the dispatch; an all-greedy
+        # pack reuses the cached zero sampler rows (dead in smode 0)
+        smode = max(
+            (self.slot_req[i]._smode for i in completed), default=SMODE_GREEDY
         )
-        has_temp = any(
-            self.slot_req[i].temperature > 0 for i in completed
-        )
+        if smode:
+            # refresh the RESIDENT rows (once): the fused decode chunk in
+            # this same iteration — and _flush_events — reuse them instead
+            # of re-building and re-uploading identical arrays
+            if not self._sp_fresh:
+                self._put_sp(*self._sp_rows())
+            spf, spi, btok, bval = self._spf, self._spi, self._btok, self._bval
+        else:
+            spf, spi, btok, bval = self._sp0
 
-        toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+        toks, self._last_tok, self._cur_len, self.cache = (
             self._packed(
                 self.params, self.cache, self._last_tok,
                 self.backend.put_host(desc), self.backend.put_host(meta),
-                self.backend.put_host(temps),
-                self._rng_key, has_temp=has_temp,
+                spf, spi, btok, bval,
+                smode=smode,
             )
         )
         stats.ticks += 1
@@ -709,21 +1062,24 @@ class ServeEngine:
                 req = self.slot_req[i]
                 req.n_generated += 1  # the request's first token (not counted
                 items.append((i, req, True))  # in total_tokens, like legacy)
-            pending.append(("packed", toks, items))
+            pending.append(("packed", toks, items, stats))
             for i in completed:
                 req = self.slot_req[i]
                 # no capacity check: admission guarantees prompt < max_len,
                 # so one decode write at position len(prompt) always fits
-                if req.n_generated >= req.max_new:
+                if req.n_generated >= req.params.max_new:
                     self._finish(req, i, stats)
 
     def _chunk_tick(self, stats: ServeStats, pending: deque, active: list[int]) -> None:
         """One fused multi-step decode chunk: as long as no active slot can
-        finish inside the chunk, k decode steps are one dispatch (bucketed
-        to powers of two ≤ ``max_chunk`` so few tick variants compile)."""
+        count-finish inside the chunk, k decode steps are one dispatch
+        (bucketed to powers of two ≤ ``max_chunk`` so few tick variants
+        compile). Stop tokens cannot participate here — the host never
+        waits on values — so a stop-terminated slot overruns by at most
+        one chunk, discarded at credit time."""
         rem = min(
             min(
-                self.slot_req[i].max_new - self.slot_req[i].n_generated,
+                self.slot_req[i].params.max_new - self.slot_req[i].n_generated,
                 self.max_len - 1 - int(self.slot_len[i]),
             )
             for i in active
@@ -732,17 +1088,17 @@ class ServeEngine:
         k = 1
         while k * 2 <= cap:
             k *= 2
-        has_temp = any(self.slot_req[i].temperature > 0 for i in active)
+        smode = max(self.slot_req[i]._smode for i in active)
         lanes = self._flush_events()
-        toks, self._last_tok, self._cur_len, self.cache, self._rng_key = (
+        toks, self._last_tok, self._cur_len, self.cache = (
             self._tick(
                 self.params, self.cache, self._last_tok, self._cur_len,
-                lanes, self._temps, self._rng_key, n_steps=k,
-                has_temp=has_temp,
+                lanes, self._spf, self._spi, self._btok, self._bval,
+                n_steps=k, smode=smode,
             )
         )
         stats.ticks += k
-        pending.append(("chunk", toks, [(i, self.slot_req[i]) for i in active]))
+        pending.append(("chunk", toks, [(i, self.slot_req[i]) for i in active], stats))
         # bookkeeping needs only COUNTS — token values are harvested a
         # chunk later, overlapping this chunk's device compute
         for i in active:
@@ -750,10 +1106,82 @@ class ServeEngine:
             self.slot_len[i] += k
             req.n_generated += k
             stats.total_tokens += k
-            if req.n_generated >= req.max_new or self.slot_len[i] + 1 >= self.max_len:
+            if req.n_generated >= req.params.max_new or self.slot_len[i] + 1 >= self.max_len:
                 self._finish(req, i, stats)
 
     # ------------------------------------------------------------------- run
+
+    def _service_once(self, stats: ServeStats) -> bool:
+        """ONE scheduling iteration — the unit both ``run()`` and the
+        streaming ``step()`` are built from: apply cancellations, release
+        stop-finished slots, admit, dispatch this iteration's fused
+        tick(s), then harvest everything older than the newest in-flight
+        dispatch. Returns whether any work remains."""
+        self._apply_cancels(stats)
+        self._release_stopped(stats)
+        if self.unified:
+            self._admit_unified(stats, self._pending)
+        else:
+            self._admit(stats)
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            self._drain_pending()
+            self._release_stopped(stats)
+            return bool(self.waiting) or any(
+                r is not None for r in self.slot_req
+            )
+        if self.unified and self._prefilling:
+            # merge mode: one ragged prefill pack, and — in the same
+            # loop iteration — a fused decode chunk for every decoding
+            # slot (including one whose prompt just completed in this
+            # very pack). Admission never stalls decode.
+            self._packed_tick(stats, self._pending)
+            decoding = [
+                i for i, r in enumerate(self.slot_req)
+                if r is not None and self.slot_fed[i] >= len(r.prompt)
+            ]
+            if decoding:
+                self._chunk_tick(stats, self._pending, decoding)
+        else:
+            self._chunk_tick(stats, self._pending, active)
+        while len(self._pending) > 1:
+            self._harvest(self._pending.popleft())
+        return True
+
+    @property
+    def stream_stats(self) -> ServeStats:
+        """Stats accumulated by step()-driven serving (handle iterators,
+        inline cancellations) — work served OUTSIDE any ``run()`` window.
+        A complete picture of a mixed streamed+drained session is this
+        plus the ServeStats each ``run()`` returned."""
+        return self._stream_stats
+
+    def step(self) -> bool:
+        """Advance the engine by one scheduling iteration (the streaming
+        driver: a ``RequestHandle`` iterator calls this when no run loop
+        owns the engine). Returns whether any work remains."""
+        with self._drive_lock:
+            busy = self._service_once(self._stream_stats)
+            if not busy:
+                self._drain_pending()
+                self._release_stopped(self._stream_stats)
+            return busy
+
+    def _handle_pump(self, req: Request) -> None:
+        """Make progress on behalf of a blocked handle iterator: drive the
+        engine when this thread owns it, politely poll when a controller
+        thread (cluster split mode) does."""
+        if self._running:
+            time.sleep(1e-4)
+            return
+        if self.step():
+            return
+        self._apply_cancels(self._stream_stats)
+        if not req.complete:
+            raise RuntimeError(
+                f"engine idle but request {req.rid} incomplete — "
+                "was it submitted to this engine?"
+            )
 
     def run(self, arrivals=None) -> ServeStats:
         """Drain all submitted requests; returns throughput + latency stats.
@@ -767,50 +1195,39 @@ class ServeEngine:
         arr: deque = deque(
             sorted(arrivals, key=lambda a: a[0]) if arrivals else ()
         )
-        pending: deque = deque()
-        while True:
-            now = time.perf_counter() - t0
-            while arr and arr[0][0] <= now:
-                t_off, req = arr.popleft()
-                self.submit(req)
-                # the TTFT clock starts at the SCHEDULED arrival, not at
-                # whenever the loop got around to polling the deque —
-                # otherwise time spent inside a blocking dispatch hides
-                # queueing delay from the latency stats
-                req.submitted_at = t0 + t_off
-            if not (
-                any(r is not None for r in self.slot_req) or self.waiting or arr
-            ):
-                break
-            if self.unified:
-                self._admit_unified(stats, pending)
-            else:
-                self._admit(stats)
-            active = [i for i, r in enumerate(self.slot_req) if r is not None]
-            if not active:
-                if arr:  # idle until the next scheduled arrival
+        with self._cancel_lock:  # see cancel(): no inline apply may overlap
+            self._running = True
+        try:
+            while True:
+                now = time.perf_counter() - t0
+                while arr and arr[0][0] <= now:
+                    t_off, req = arr.popleft()
+                    self.submit(req)
+                    # the TTFT clock starts at the SCHEDULED arrival, not at
+                    # whenever the loop got around to polling the deque —
+                    # otherwise time spent inside a blocking dispatch hides
+                    # queueing delay from the latency stats
+                    req.submitted_at = t0 + t_off
+                if not (
+                    any(r is not None for r in self.slot_req)
+                    or self.waiting
+                    or arr
+                    or self._cancels
+                ):
+                    break
+                with self._drive_lock:  # serialize vs inline cancel/step()
+                    busy = self._service_once(stats)
+                if not busy and arr:
+                    # idle until the next scheduled arrival
                     wait = arr[0][0] - (time.perf_counter() - t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.001))
-                continue
-            if self.unified and self._prefilling:
-                # merge mode: one ragged prefill pack, and — in the same
-                # loop iteration — a fused decode chunk for every decoding
-                # slot (including one whose prompt just completed in this
-                # very pack). Admission never stalls decode.
-                self._packed_tick(stats, pending)
-                decoding = [
-                    i for i, r in enumerate(self.slot_req)
-                    if r is not None and self.slot_fed[i] >= len(r.prompt)
-                ]
-                if decoding:
-                    self._chunk_tick(stats, pending, decoding)
-            else:
-                self._chunk_tick(stats, pending, active)
-            while len(pending) > 1:
-                self._harvest(pending.popleft())
-        while pending:
-            self._harvest(pending.popleft())
+            with self._drive_lock:
+                self._drain_pending()
+                self._release_stopped(stats)
+        finally:
+            with self._cancel_lock:
+                self._running = False
         stats.wall_seconds = time.perf_counter() - t0
         for req in self._done_now:
             if req.first_token_at is not None:

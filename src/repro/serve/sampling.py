@@ -1,0 +1,208 @@
+"""Request-level sampling configuration + the device-side fused sampler.
+
+This is the serving API's *reconfiguration knob*: Spatzformer's thesis is
+that one fixed fabric serves mixed workloads best when the configuration is
+chosen per-workload, off the hot path.  :class:`SamplingParams` is that
+choice at request granularity — every request carries a frozen parameter
+record, the engine folds the per-slot parameter rows into device-resident
+arrays, and each dispatch runs ONE of a finite zoo of compiled sampler
+variants (``smode``), selected per tick by a host ``if`` over the active
+slots.  Reconfiguration (a request with different sampling needs arriving)
+is a cheap event-driven array upload, never a recompile — ``prewarm()``
+builds every variant before serving, the same way split/merge is a CSR
+write rather than a per-kernel cost.
+
+The three compiled variants:
+
+* ``SMODE_GREEDY`` (0) — plain argmax, **no PRNG, no bias scatter, no
+  sort**: the all-greedy fast path, bit-identical to the pre-SamplingParams
+  engine (threefry is a real cost on small hosts; a greedy deployment never
+  pays it).
+* ``SMODE_GUMBEL`` (1) — gumbel-max (categorical) at per-slot temperature.
+* ``SMODE_MASKED`` (2) — masked renormalized sampling: per-slot logit bias,
+  temperature scaling, top-k and top-p (nucleus) masks applied to the
+  scaled logits, then gumbel-max over the surviving set.  With
+  ``top_k=0, top_p=1`` and no bias the mask keeps everything and the draw
+  equals variant 1 exactly — so a mixed batch can always run the widest
+  variant any slot needs without perturbing the narrower slots.
+
+Determinism is structural, not incidental: every draw's PRNG key is
+``fold_in(key(request_seed), position)`` — a pure function of the request's
+seed and the absolute position being sampled.  No shared key chain exists,
+so a seeded stream is reproducible across decode chunk sizes, across the
+legacy and unified engines, across split/merge cluster modes, and is
+untouched by a neighbouring slot being admitted or cancelled mid-stream.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# sampler dispatch variants (static jit arg -> one compiled program each)
+SMODE_GREEDY, SMODE_GUMBEL, SMODE_MASKED = 0, 1, 2
+
+# per-request logit-bias entries are capped so the device-resident bias
+# rows have a static shape ([B, MAX_LOGIT_BIAS] token/value pairs)
+MAX_LOGIT_BIAS = 8
+
+# scatter index for unused bias lanes: far out of any vocab, dropped by
+# the .add(mode="drop") scatter (negative padding would wrap in jax)
+_BIAS_PAD = 2**30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Frozen per-request sampling/termination configuration.
+
+    ``temperature <= 0`` means greedy (argmax).  ``top_k=0`` and
+    ``top_p=1.0`` disable their masks.  ``seed=None`` lets the engine
+    assign one at admission (deterministic per engine, but not across
+    cluster modes — pass an explicit seed for cross-fabric reproducible
+    streams).  ``stop`` token ids terminate the stream; the stop token
+    itself is emitted and counted into ``n_generated`` (exactly like a
+    ``max_new`` boundary token).  ``logit_bias`` is up to
+    ``MAX_LOGIT_BIAS`` ``(token_id, bias)`` pairs added to the logits
+    before every sampling decision (greedy included)."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    max_new: int = 16
+    stop: tuple[int, ...] = ()
+    logit_bias: tuple[tuple[int, float], ...] = ()
+
+    def __post_init__(self):
+        # normalize the container fields so params hash/compare by value
+        object.__setattr__(self, "stop", tuple(int(t) for t in self.stop))
+        lb = self.logit_bias
+        if isinstance(lb, Mapping):
+            lb = tuple(lb.items())
+        object.__setattr__(
+            self, "logit_bias", tuple((int(t), float(v)) for t, v in lb)
+        )
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if self.seed is not None and not -(2**31) <= self.seed < 2**31:
+            # the seed rides a device-resident int32 row; reject a
+            # non-representable one here, not mid-serving-loop
+            raise ValueError(f"seed must fit int32, got {self.seed}")
+        if len(self.logit_bias) > MAX_LOGIT_BIAS:
+            raise ValueError(
+                f"at most {MAX_LOGIT_BIAS} logit_bias entries, got {len(self.logit_bias)}"
+            )
+
+    @property
+    def smode(self) -> int:
+        """The narrowest compiled sampler variant this request needs."""
+        if self.temperature <= 0 and not self.logit_bias:
+            return SMODE_GREEDY
+        if self.top_k == 0 and self.top_p >= 1.0 and not self.logit_bias:
+            return SMODE_GUMBEL
+        return SMODE_MASKED
+
+
+def bias_row(params: SamplingParams) -> tuple[np.ndarray, np.ndarray]:
+    """One request's ``(tokens, values)`` bias row, padded to static shape."""
+    bt = np.full(MAX_LOGIT_BIAS, _BIAS_PAD, np.int32)
+    bv = np.zeros(MAX_LOGIT_BIAS, np.float32)
+    for j, (t, v) in enumerate(params.logit_bias):
+        bt[j], bv[j] = t, v
+    return bt, bv
+
+
+def param_rows(slot_params, seeds) -> tuple[np.ndarray, ...]:
+    """Per-slot parameter rows for a slot pool: ``slot_params`` is a list of
+    ``Optional[SamplingParams]`` (None = free slot), ``seeds`` the resolved
+    per-slot seeds.  Returns ``(spf [2,B] f32, spi [2,B] i32, bias_tok
+    [B,K] i32, bias_val [B,K] f32)`` with rows (temperature, top_p) and
+    (top_k, seed) — the arrays the engine keeps device-resident."""
+    b = len(slot_params)
+    spf = np.zeros((2, b), np.float32)
+    spf[1] = 1.0
+    spi = np.zeros((2, b), np.int32)
+    btok = np.full((b, MAX_LOGIT_BIAS), _BIAS_PAD, np.int32)
+    bval = np.zeros((b, MAX_LOGIT_BIAS), np.float32)
+    for i, p in enumerate(slot_params):
+        if p is None:
+            continue
+        spf[0, i] = p.temperature
+        spf[1, i] = p.top_p
+        spi[0, i] = p.top_k
+        spi[1, i] = seeds[i]
+        bt, bv = bias_row(p)
+        btok[i], bval[i] = bt, bv
+    return spf, spi, btok, bval
+
+
+def _fold_keys(seeds, pos):
+    """Per-slot PRNG keys: ``fold_in(key(seed), position)`` — a pure
+    function of (request seed, absolute position), the whole reason seeded
+    streams survive rechunking, engine swaps, and cluster reconfiguration."""
+    return jax.vmap(lambda s, p: jax.random.fold_in(jax.random.key(s), p))(
+        seeds, pos
+    )
+
+
+def _keep_mask(scaled, top_k, top_p):
+    """Joint top-k/top-p keep mask over temperature-scaled logits [B, V].
+
+    One descending sort serves both criteria: the k-th largest value
+    thresholds top-k (``top_k=0`` -> keep all; ties at the threshold are
+    kept), and the smallest value whose *exclusive* cumulative softmax mass
+    is still below ``top_p`` thresholds the nucleus (so at least one token
+    always survives)."""
+    v = scaled.shape[-1]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]  # [B, V] descending
+    k_eff = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
+    kth = jnp.take_along_axis(srt, k_eff[:, None] - 1, axis=-1)  # [B, 1]
+    keep = scaled >= kth
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum_excl = jnp.cumsum(probs, axis=-1) - probs
+    n_keep = jnp.maximum((cum_excl < top_p[:, None]).sum(-1), 1)
+    pth = jnp.take_along_axis(srt, n_keep[:, None] - 1, axis=-1)
+    return keep & (scaled >= pth)
+
+
+def fused_sample(logits, temps, top_k, top_p, seeds, pos, bias_tok, bias_val,
+                 *, smode: int):
+    """ONE device-side sampling decision for every slot — the single sampler
+    implementation shared by the decode scan, the packed ragged dispatch,
+    the fused admission, and the legacy host path (which jits this on a
+    one-row batch).  Change sampling behaviour here, nowhere else.
+
+    logits [B, V] (any float dtype), temps/top_p [B] f32, top_k/seeds/pos
+    [B] i32, bias_tok/bias_val [B, MAX_LOGIT_BIAS].  ``smode`` is static:
+    0 = argmax only (no PRNG — the bit-identical all-greedy fast path),
+    1 = gumbel-max temperature sampling, 2 = logit bias + masked
+    renormalized top-k/top-p.  Greedy slots (temp <= 0) inside a sampled
+    batch take argmax of the (biased) logits regardless of smode."""
+    logits = logits.astype(jnp.float32)
+    if smode == SMODE_GREEDY:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if smode == SMODE_MASKED:
+        rows = jnp.arange(logits.shape[0])[:, None]
+        logits = logits.at[rows, bias_tok].add(bias_val, mode="drop")
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # -inf-masked logits + gumbel, argmaxed, IS the renormalized categorical
+    # over the kept set (masked entries stay -inf); the per-(seed, pos) key
+    # makes the draw independent of batch composition and chunk boundaries
+    gumbel = jax.vmap(
+        lambda k: jax.random.gumbel(k, logits.shape[-1:], jnp.float32)
+    )(_fold_keys(seeds, pos))
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    if smode == SMODE_MASKED:
+        scaled = jnp.where(_keep_mask(scaled, top_k, top_p), scaled, -jnp.inf)
+    sampled = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)

@@ -143,7 +143,7 @@ import numpy as np, jax
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, ServeCluster, ServeEngine
+from repro.serve import Request, SamplingParams, ServeCluster, ServeEngine
 
 assert jax.device_count() == 2
 cfg = get_arch("codeqwen1.5-7b").reduced()
@@ -154,7 +154,7 @@ def stream(seed=11):
     rng = np.random.default_rng(seed)
     return [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-                    max_new=6)
+                    params=SamplingParams(max_new=6))
             for i, s in enumerate((5, 23, 11, 31, 8, 17, 26, 3))]
 
 eng = ServeEngine(m, p, batch_slots=3, max_len=64)
@@ -210,7 +210,7 @@ import numpy as np, jax
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, ServeCluster, ServeEngine
+from repro.serve import Request, SamplingParams, ServeCluster, ServeEngine
 
 assert jax.device_count() == 4
 cfg = get_arch("codeqwen1.5-7b").reduced()
@@ -221,7 +221,7 @@ def stream(tenants=None, n=12, seed=31):
     rng = np.random.default_rng(seed)
     return [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
-                    max_new=4,
+                    params=SamplingParams(max_new=4),
                     tenant=None if tenants is None else tenants[i % len(tenants)])
             for i in range(n)]
 
@@ -243,7 +243,7 @@ cl2 = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
 tenants = ["a", "b", "c", "d"]
 routed = {}
 for r in stream(tenants=tenants):
-    routed.setdefault(r.tenant, set()).add(cl2.submit(r))
+    routed.setdefault(r.tenant, set()).add(cl2.submit(r).replica)
 cl2.run()
 assert all(len(v) == 1 for v in routed.values()), routed
 assert len(set(next(iter(v)) for v in routed.values())) == 4, routed

@@ -1,0 +1,190 @@
+"""Device-side fused sampler: SamplingParams validation, the smode dispatch
+zoo, determinism of the (seed, position)-keyed draws, and empirical
+distributions against a masked-renormalized-softmax oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import MAX_LOGIT_BIAS, SamplingParams, fused_sample
+from repro.serve.sampling import SMODE_GREEDY, SMODE_GUMBEL, SMODE_MASKED
+
+V = 32
+N_DRAWS = 20_000  # >= 10k: binomial noise ~ sqrt(p/N) per bin
+
+
+def _logits(seed=0, v=V):
+    rng = np.random.default_rng(seed)
+    return (2.0 * rng.standard_normal(v)).astype(np.float32)
+
+
+def _draw(logits, p: SamplingParams, n=N_DRAWS, seed=123):
+    """n independent draws from ONE request's sampler configuration: the
+    per-draw key is fold_in(key(seed), pos), so distinct positions are the
+    independent sample axis — exactly how a decoding stream draws."""
+    b = np.broadcast_to(logits, (n, len(logits)))
+    bt = np.full((n, MAX_LOGIT_BIAS), 2**30, np.int32)
+    bv = np.zeros((n, MAX_LOGIT_BIAS), np.float32)
+    for j, (t, val) in enumerate(p.logit_bias):
+        bt[:, j] = t
+        bv[:, j] = val
+    toks = fused_sample(
+        jnp.asarray(b),
+        jnp.full(n, p.temperature, jnp.float32),
+        jnp.full(n, p.top_k, jnp.int32),
+        jnp.full(n, p.top_p, jnp.float32),
+        jnp.full(n, seed, jnp.int32),
+        jnp.arange(n, dtype=jnp.int32),
+        jnp.asarray(bt), jnp.asarray(bv),
+        smode=p.smode,
+    )
+    return np.asarray(toks)
+
+
+def oracle_probs(logits, p: SamplingParams) -> np.ndarray:
+    """jnp-free reference: bias + temperature scaling + top-k/top-p masks
+    (same tie semantics as the device mask: >= threshold keeps), then the
+    renormalized softmax over the kept set."""
+    z = np.asarray(logits, np.float64).copy()
+    for t, val in p.logit_bias:
+        z[t] += val
+    if p.temperature <= 0:
+        q = np.zeros_like(z)
+        q[np.argmax(z)] = 1.0
+        return q
+    z = z / max(p.temperature, 1e-6)
+    srt = np.sort(z)[::-1]
+    keep = np.ones_like(z, bool)
+    if p.top_k > 0:
+        keep &= z >= srt[min(p.top_k, len(z)) - 1]
+    ps = np.exp(srt - srt.max())
+    ps /= ps.sum()
+    cum_excl = np.cumsum(ps) - ps
+    n_keep = max(int((cum_excl < p.top_p).sum()), 1)
+    keep &= z >= srt[n_keep - 1]
+    q = np.where(keep, np.exp(z - z.max()), 0.0)
+    return q / q.sum()
+
+
+def _tv(counts, probs):
+    freq = counts / counts.sum()
+    return 0.5 * np.abs(freq - probs).sum()
+
+
+# ------------------------------------------------------------------ params
+
+
+def test_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(max_new=0)
+    with pytest.raises(ValueError):
+        SamplingParams(logit_bias=tuple((i, 1.0) for i in range(MAX_LOGIT_BIAS + 1)))
+    with pytest.raises(ValueError):
+        SamplingParams(seed=2**31)  # must fit the device-resident int32 row
+    assert SamplingParams(seed=2**31 - 1).seed == 2**31 - 1
+    # mapping-style logit_bias normalizes to sorted-insertion tuple pairs
+    p = SamplingParams(temperature=1.0, logit_bias={3: 2.0})
+    assert p.logit_bias == ((3, 2.0),)
+    assert SamplingParams(stop=[np.int32(7)]).stop == (7,)
+
+
+def test_smode_classification():
+    assert SamplingParams().smode == SMODE_GREEDY
+    assert SamplingParams(temperature=0.7).smode == SMODE_GUMBEL
+    assert SamplingParams(temperature=0.7, top_k=5).smode == SMODE_MASKED
+    assert SamplingParams(temperature=0.7, top_p=0.9).smode == SMODE_MASKED
+    # bias applies even to greedy decisions -> needs the masked variant
+    assert SamplingParams(logit_bias=((1, 5.0),)).smode == SMODE_MASKED
+    # params are frozen and hashable (a finite dispatch zoo can key on them)
+    assert hash(SamplingParams(top_k=5, temperature=1.0)) == hash(
+        SamplingParams(top_k=5, temperature=1.0)
+    )
+
+
+# ----------------------------------------------------------- exact behavior
+
+
+def test_greedy_is_argmax():
+    lg = _logits(1)
+    toks = _draw(lg, SamplingParams(), n=8)
+    assert (toks == np.argmax(lg)).all()
+
+
+def test_top_k_one_is_argmax_at_any_temperature():
+    lg = _logits(2)
+    toks = _draw(lg, SamplingParams(temperature=2.5, top_k=1), n=64)
+    assert (toks == np.argmax(lg)).all()
+
+
+def test_logit_bias_forces_and_bans():
+    lg = _logits(3)
+    worst = int(np.argmin(lg))
+    best = int(np.argmax(lg))
+    forced = _draw(lg, SamplingParams(temperature=1.0, logit_bias=((worst, 1e9),)), n=64)
+    assert (forced == worst).all()
+    banned = _draw(
+        lg, SamplingParams(temperature=1.0, top_k=1, logit_bias=((best, -1e9),)), n=64
+    )
+    assert (banned != best).all() and (banned == np.argsort(lg)[-2]).all()
+
+
+def test_seeded_draws_deterministic_and_position_keyed():
+    lg = _logits(4)
+    p = SamplingParams(temperature=1.0, top_p=0.9, seed=5)
+    a = _draw(lg, p, n=256, seed=5)
+    b = _draw(lg, p, n=256, seed=5)
+    assert (a == b).all()  # same (seed, pos) -> same draw, always
+    c = _draw(lg, p, n=256, seed=6)
+    assert (a != c).any()  # a different request seed is a different stream
+
+
+def test_gumbel_and_masked_variants_agree_when_mask_is_off():
+    """A wide (smode 2) dispatch with top_k=0, top_p=1 and no bias must
+    draw exactly what the narrow gumbel variant draws — this is what lets
+    a mixed batch run the widest variant any slot needs without perturbing
+    the narrower slots."""
+    lg = _logits(5)
+    n = 512
+    b = jnp.asarray(np.broadcast_to(lg, (n, V)))
+    temps = jnp.full(n, 0.8, jnp.float32)
+    ks = jnp.zeros(n, jnp.int32)
+    ps = jnp.ones(n, jnp.float32)
+    seeds = jnp.full(n, 9, jnp.int32)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    bt = jnp.full((n, MAX_LOGIT_BIAS), 2**30, jnp.int32)
+    bv = jnp.zeros((n, MAX_LOGIT_BIAS), jnp.float32)
+    narrow = fused_sample(b, temps, ks, ps, seeds, pos, bt, bv, smode=SMODE_GUMBEL)
+    wide = fused_sample(b, temps, ks, ps, seeds, pos, bt, bv, smode=SMODE_MASKED)
+    assert (np.asarray(narrow) == np.asarray(wide)).all()
+
+
+# ------------------------------------------------------- empirical vs oracle
+
+
+@pytest.mark.parametrize(
+    "p",
+    [
+        SamplingParams(temperature=0.8),
+        SamplingParams(temperature=0.8, top_k=4),
+        SamplingParams(temperature=1.2, top_p=0.7),
+        SamplingParams(temperature=0.9, top_k=8, top_p=0.85),
+        SamplingParams(temperature=1.0, top_p=0.8, logit_bias=((0, 3.0), (7, -2.0))),
+    ],
+    ids=["temp", "top_k", "top_p", "top_k+top_p", "top_p+bias"],
+)
+def test_empirical_distribution_matches_oracle(p):
+    lg = _logits(7)
+    toks = _draw(lg, p)
+    probs = oracle_probs(lg, p)
+    # every draw inside the kept set, none outside
+    assert probs[toks].min() > 0
+    counts = np.bincount(toks, minlength=V).astype(np.float64)
+    assert _tv(counts, probs) < 0.02, (_tv(counts, probs), p)

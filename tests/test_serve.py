@@ -1,5 +1,8 @@
 """Serving engine: greedy output equals manual full-forward argmax decoding;
-continuous batching bookkeeping."""
+continuous batching bookkeeping; the SamplingParams request lifecycle
+(streaming handles, cancellation, stop tokens, seeded sampling invariance)."""
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +11,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models import LM
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 @pytest.fixture(scope="module")
@@ -36,7 +39,7 @@ def test_engine_matches_manual_greedy(small_model):
     expect = _manual_greedy(cfg, m, p, prompt, 6)
 
     eng = ServeEngine(m, p, batch_slots=2, max_len=32)
-    eng.submit(Request(rid=0, prompt=prompt, max_new=6))
+    eng.submit(Request(rid=0, prompt=prompt, params=SamplingParams(max_new=6)))
     eng.run()
     assert eng.finished[0].generated == expect
 
@@ -51,8 +54,8 @@ def test_engine_batched_isolation(small_model):
     e2 = _manual_greedy(cfg, m, p, p2, 5)
 
     eng = ServeEngine(m, p, batch_slots=2, max_len=32)
-    eng.submit(Request(rid=1, prompt=p1, max_new=5))
-    eng.submit(Request(rid=2, prompt=p2, max_new=5))
+    eng.submit(Request(rid=1, prompt=p1, params=SamplingParams(max_new=5)))
+    eng.submit(Request(rid=2, prompt=p2, params=SamplingParams(max_new=5)))
     eng.run()
     got = {r.rid: r.generated for r in eng.finished}
     assert got[1] == e1
@@ -60,13 +63,17 @@ def test_engine_batched_isolation(small_model):
 
 
 def _run_engine(m, p, prompts, *, max_new=6, slots=2, max_len=32,
-                temperatures=None, **kw):
+                temperatures=None, sampling=None, **kw):
     eng = ServeEngine(m, p, batch_slots=slots, max_len=max_len, **kw)
     for i, pr in enumerate(prompts):
-        eng.submit(Request(
-            rid=i, prompt=pr, max_new=max_new,
-            temperature=0.0 if temperatures is None else temperatures[i],
-        ))
+        if sampling is not None:
+            sp = sampling[i]
+        else:
+            sp = SamplingParams(
+                max_new=max_new,
+                temperature=0.0 if temperatures is None else temperatures[i],
+            )
+        eng.submit(Request(rid=i, prompt=pr, params=sp))
     stats = eng.run()
     return {r.rid: r.generated for r in eng.finished}, stats
 
@@ -184,7 +191,7 @@ def test_arrival_schedule(small_model):
         (i * 0.003, Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, size=5 + 3 * i).astype(np.int32),
-            max_new=3,
+            params=SamplingParams(max_new=3),
         ))
         for i in range(4)
     ]
@@ -207,7 +214,7 @@ def test_prewarm_covers_all_dispatch_variants(small_model):
     for i, s in enumerate((3, 70, 90)):  # buckets 4, 96, 96
         eng.submit(Request(
             rid=i, prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-            max_new=3,
+            params=SamplingParams(max_new=3),
         ))
     stats = eng.run()
     assert stats.total_requests == 3
@@ -223,7 +230,7 @@ def test_continuous_batching_reuses_slots(small_model):
             Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
-                max_new=4,
+                params=SamplingParams(max_new=4),
             )
         )
     stats = eng.run()
@@ -234,3 +241,266 @@ def test_continuous_batching_reuses_slots(small_model):
     # with 2 slots and 5 requests, ticks must exceed one request's decode span
     assert stats.ticks >= 3 * 3 - 2
     assert all(r.done_at is not None for r in eng.finished)
+
+
+# ===================================================================== the
+# SamplingParams request lifecycle: seeded sampling invariance, stop tokens,
+# streaming handles, cancellation, prewarmed sampler variants, shims
+# =========================================================================
+
+
+def _seeded_params(n, max_new=6):
+    """A mixed seeded stream: greedy, temperature, top-k, top-p, combined."""
+    kinds = [
+        SamplingParams(max_new=max_new),
+        SamplingParams(max_new=max_new, temperature=0.8, seed=101),
+        SamplingParams(max_new=max_new, temperature=1.1, top_k=7, seed=202),
+        SamplingParams(max_new=max_new, temperature=0.9, top_p=0.85, seed=303),
+        SamplingParams(max_new=max_new, temperature=1.0, top_k=9, top_p=0.9, seed=404),
+    ]
+    return [kinds[i % len(kinds)] for i in range(n)]
+
+
+def test_seeded_sampling_invariant_across_chunks_and_engines(small_model):
+    """Seeded top-k/top-p streams are bit-reproducible across every decode
+    chunk depth, across prefill budgets, and across the legacy/unified
+    engines: every draw's PRNG key is (request seed, position), never a
+    shared chain — the acceptance criterion of the SamplingParams redesign."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(31)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (5, 14, 9, 21, 7)
+    ]
+    sampling = _seeded_params(len(prompts))
+    ref, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                         sampling=sampling, unified=True)
+    assert all(len(v) == 6 for v in ref.values())
+    for chunk in (1, 2, 4):
+        got, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                             sampling=sampling, unified=True, max_chunk=chunk)
+        assert got == ref, f"max_chunk={chunk} changed a seeded stream"
+    budget, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                            sampling=sampling, unified=True, prefill_budget=6)
+    assert budget == ref, "ragged chunked prefill changed a seeded stream"
+    legacy, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                            sampling=sampling, unified=False)
+    assert legacy == ref, "legacy host-path sampling diverged from device path"
+
+
+def test_seeded_sampling_batch_composition_independent(small_model):
+    """A seeded request's stream must not depend on its batch neighbours:
+    solo run == batched run for every seeded request."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(32)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 11, 8)
+    ]
+    sampling = _seeded_params(5)[1:4]  # temperature, top-k, top-p (all seeded)
+    batched, _ = _run_engine(m, p, prompts, slots=2, max_len=32,
+                             sampling=sampling, unified=True)
+    for i, (pr, sp) in enumerate(zip(prompts, sampling)):
+        solo, _ = _run_engine(m, p, [pr], slots=2, max_len=32,
+                              sampling=[sp], unified=True)
+        assert solo[0] == batched[i]
+
+
+@pytest.mark.parametrize("unified", [False, True])
+def test_stop_token_mid_stream(small_model, unified):
+    """A stop token terminates the stream AT the stop token: it is emitted,
+    counted into n_generated, and nothing after it ever becomes visible —
+    regardless of decode chunk depth (stop is found at harvest, the
+    overrun chunk is discarded)."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(33)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    expect = _manual_greedy(cfg, m, p, prompt, 8)
+    stop_tok = expect[3]  # stops the greedy stream at its 4th token
+    for max_chunk in (1, 8):
+        got, stats = _run_engine(
+            m, p, [prompt], max_len=32, unified=unified, max_chunk=max_chunk,
+            sampling=[SamplingParams(max_new=8, stop=(stop_tok,))],
+        )
+        assert got[0] == expect[:4]
+        # throughput accounting refunds the discarded overrun chunk: only
+        # the 3 EMITTED decode tokens count (the first token rides
+        # admission and is never in total_tokens), whatever the chunk depth
+        assert stats.total_tokens == 3, (max_chunk, stats.total_tokens)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32, unified=unified)
+    h = eng.submit(Request(rid=0, prompt=prompt,
+                           params=SamplingParams(max_new=8, stop=(stop_tok,))))
+    eng.run()
+    assert h.finish_reason == "stop"
+    assert h.request.n_generated == 4 == len(h.request.generated)
+
+
+@pytest.mark.parametrize("unified", [False, True])
+def test_stop_token_off_by_one_regression(small_model, unified):
+    """Pin the boundary bookkeeping: stop-on-first-token and max_new=1 both
+    yield EXACTLY one emitted, counted token — the stop token counts into
+    n_generated the same way a max_new boundary token does."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(34)
+    prompt = rng.integers(0, cfg.vocab_size, size=7).astype(np.int32)
+    first = _manual_greedy(cfg, m, p, prompt, 1)[0]
+
+    def serve(params):
+        eng = ServeEngine(m, p, batch_slots=2, max_len=32, unified=unified)
+        h = eng.submit(Request(rid=0, prompt=prompt, params=params))
+        stats = eng.run()
+        return h, stats
+
+    # stop on the very first token, max_new far away
+    h, stats = serve(SamplingParams(max_new=8, stop=(first,)))
+    assert h.request.generated == [first]
+    assert h.request.n_generated == 1
+    assert h.finish_reason == "stop"
+    assert stats.total_requests == 1
+    # max_new=1 AND stop on the same (first) token: still one token, and
+    # the value-dependent reason wins the tie deterministically
+    h, stats = serve(SamplingParams(max_new=1, stop=(first,)))
+    assert h.request.generated == [first]
+    assert h.request.n_generated == 1
+    assert h.finish_reason == "stop"
+    # max_new=1 with a never-matching stop: the length boundary
+    h, _ = serve(SamplingParams(max_new=1, stop=(cfg.vocab_size + 1,)))
+    assert h.request.generated == [first]
+    assert h.request.n_generated == 1
+    assert h.finish_reason == "length"
+
+
+def test_streaming_handle_yields_full_stream(small_model):
+    """submit() -> RequestHandle: iterating the handle drives the engine
+    and yields exactly the tokens run() would produce, incrementally."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(35)
+    p1 = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+    e1 = _manual_greedy(cfg, m, p, p1, 6)
+    e2 = _manual_greedy(cfg, m, p, p2, 6)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    h1 = eng.submit(Request(rid=1, prompt=p1, params=SamplingParams(max_new=6)))
+    h2 = eng.submit(Request(rid=2, prompt=p2, params=SamplingParams(max_new=6)))
+    streamed = []
+    for tok in h1:  # pumps engine.step() under the hood
+        streamed.append(tok)
+    assert streamed == e1
+    assert h1.done and h1.finish_reason == "length"
+    assert h2.result() == e2  # h2 decoded alongside h1; result() drains it
+
+
+def test_cancel_frees_slot_without_perturbing_neighbours(small_model):
+    """Mid-stream cancellation: the cancelled slot frees (and is reusable),
+    while every other request's stream stays bit-identical to a run where
+    the cancelled request finished normally — per-request sampling keys
+    mean a neighbour's abort can never reshuffle anyone's draws."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(36)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 10, 8)
+    ]
+    sampling = [
+        SamplingParams(max_new=12),
+        SamplingParams(max_new=12, temperature=0.9, top_p=0.9, seed=77),
+        SamplingParams(max_new=12, temperature=1.0, top_k=5, seed=88),
+    ]
+    ref, _ = _run_engine(m, p, prompts, slots=2, max_len=48,
+                         sampling=sampling, unified=True)
+
+    eng = ServeEngine(m, p, batch_slots=2, max_len=48, unified=True)
+    handles = [
+        eng.submit(Request(rid=i, prompt=pr, params=sp))
+        for i, (pr, sp) in enumerate(zip(prompts, sampling))
+    ]
+    it = handles[0].tokens()
+    first3 = [next(it) for _ in range(3)]
+    handles[1].cancel()  # rid=1 is mid-decode in the other slot right now
+    rest = list(it)
+    assert first3 + rest == ref[0]
+    assert handles[1].finish_reason == "cancelled"
+    assert handles[1].done
+    # the freed slot was reused: rid=2 still serves, stream unchanged
+    assert handles[2].result() == ref[2]
+    # the cancelled stream is a prefix of its uncancelled self
+    cut = handles[1].request.generated
+    assert cut == ref[1][: len(cut)]
+    assert eng.stream_stats.cancelled == 1
+
+
+def test_cancel_waiting_request_never_admits(small_model):
+    cfg, m, p = small_model
+    rng = np.random.default_rng(37)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    h = eng.submit(Request(rid=0, prompt=prompt, params=SamplingParams(max_new=4)))
+    h.cancel()  # engine idle: applied immediately, straight from the queue
+    assert h.done and h.finish_reason == "cancelled"
+    assert h.request.generated == []
+    stats = eng.run()  # nothing left to do
+    assert stats.total_requests == 0 and stats.ticks == 0
+    assert list(h.tokens()) == []
+
+
+def test_prewarm_sampling_covers_every_sampler_variant(small_model):
+    """After prewarm(sampling=True), a mixed greedy/temperature/top-k/top-p
+    stream must hit ZERO fresh compiles in any dispatch program — the
+    sampler variants are part of the compiled zoo, built off the hot path."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(38)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64, unified=True,
+                      prefill_budget=16)
+    eng.prewarm(sampling=True)
+    progs = (eng._tick, eng._packed, eng._admit_prog, eng._sample1)
+    sizes = [pr._cache_size() for pr in progs]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (5, 20, 9, 13)  # 20 > budget: ragged packed tier too
+    ]
+    for i, (pr, sp) in enumerate(zip(prompts, _seeded_params(len(prompts), 4))):
+        eng.submit(Request(rid=i, prompt=pr, params=sp))
+    stats = eng.run()
+    assert stats.total_requests == 4
+    assert stats.prefill_compiles == 0
+    assert [pr._cache_size() for pr in progs] == sizes, "compile landed mid-serving"
+
+
+def test_deprecated_kwargs_shim(small_model):
+    """The pre-SamplingParams surface stays working: bare max_new= and
+    temperature= kwargs warn DeprecationWarning and build the equivalent
+    params; mixing them with params= is an error."""
+    prompt = np.zeros(4, np.int32)
+    with pytest.warns(DeprecationWarning):
+        r = Request(rid=0, prompt=prompt, max_new=5, temperature=0.7)
+    assert r.params == SamplingParams(max_new=5, temperature=0.7)
+    assert r.max_new == 5 and r.temperature == 0.7  # mirrors stay readable
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the new surface must not warn
+        r2 = Request(rid=1, prompt=prompt, params=SamplingParams(max_new=3))
+    assert r2.max_new == 3 and r2.temperature == 0.0
+    with pytest.raises(ValueError):
+        Request(rid=2, prompt=prompt, max_new=5, params=SamplingParams())
+
+
+def test_stream_then_run_stats_refund_lands_on_counting_stats(small_model):
+    """A chunk dispatched under step()-driven streaming but harvested
+    inside a later run() refunds its discarded post-stop values against
+    the stats that COUNTED it (the entry carries its stats object) — the
+    run's own counter must never go negative, and the combined counters
+    equal exactly the emitted decode tokens."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(39)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    expect = _manual_greedy(cfg, m, p, prompt, 4)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    h = eng.submit(Request(rid=0, prompt=prompt,
+                           params=SamplingParams(max_new=12, stop=(expect[2],))))
+    it = h.tokens()
+    assert next(it) == expect[0]  # dispatched+harvested under stream stats
+    stats = eng.run()  # drains the in-flight overrun chunk under run stats
+    assert h.request.generated == expect[:3]
+    assert h.finish_reason == "stop"
+    assert stats.total_tokens >= 0
+    # 3 emitted tokens, first rode admission: 2 countable decode tokens
+    assert eng.stream_stats.total_tokens + stats.total_tokens == 2

@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, Router, ServeCluster, ServeEngine
+from repro.serve import Request, Router, SamplingParams, ServeCluster, ServeEngine
 from repro.serve.backend import DeviceBackend
 
 
@@ -33,7 +33,7 @@ def _reqs(cfg, sizes, *, max_new=4, tenants=None, seed=21):
         Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
-            max_new=max_new,
+            params=SamplingParams(max_new=max_new),
             tenant=None if tenants is None else tenants[i % len(tenants)],
         )
         for i, s in enumerate(sizes)
@@ -57,7 +57,8 @@ def _route_all(router, reqs):
 
 def test_router_jsq_balances_uniform_load():
     r = Router(4)
-    reqs = [Request(rid=i, prompt=np.zeros(8, np.int32), max_new=4) for i in range(16)]
+    reqs = [Request(rid=i, prompt=np.zeros(8, np.int32),
+                    params=SamplingParams(max_new=4)) for i in range(16)]
     _route_all(r, reqs)
     assert r.assigned == [4, 4, 4, 4]
     assert max(r.load) - min(r.load) == 0
@@ -65,8 +66,9 @@ def test_router_jsq_balances_uniform_load():
 
 def test_router_jsq_prefers_shortest_queue():
     r = Router(2)
-    big = Request(rid=0, prompt=np.zeros(100, np.int32), max_new=50)
-    small = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new=4) for i in (1, 2, 3)]
+    big = Request(rid=0, prompt=np.zeros(100, np.int32), params=SamplingParams(max_new=50))
+    small = [Request(rid=i, prompt=np.zeros(4, np.int32),
+                     params=SamplingParams(max_new=4)) for i in (1, 2, 3)]
     assert r.route(big) == 0
     # the big request's cost keeps replica 0's queue longest: all the small
     # ones land on replica 1 until its cumulative cost catches up
@@ -78,7 +80,8 @@ def test_router_tenant_affinity_sticks():
     reqs = _route_all(
         r,
         [
-            Request(rid=i, prompt=np.zeros(8, np.int32), max_new=4, tenant=t)
+            Request(rid=i, prompt=np.zeros(8, np.int32),
+                    params=SamplingParams(max_new=4), tenant=t)
             for i, t in enumerate(["a", "b", "a", "c", "a", "b"])
         ],
     )
@@ -195,3 +198,174 @@ def test_cluster_multi_device_split_uses_every_replica(small_model):
     cl.run()
     assert cl.router.assigned == [3] * cl.n_replicas
     assert len(cl.finished) == n
+
+
+# ------------------------------------------- request API across the cluster
+
+
+def _sampled_reqs(cfg, sizes, *, max_new=5, seed=51):
+    """Seeded mixed sampling stream: reproducibility across fabrics needs
+    explicit per-request seeds (engine-assigned seeds differ per replica)."""
+    rng = np.random.default_rng(seed)
+    kinds = [
+        SamplingParams(max_new=max_new),
+        SamplingParams(max_new=max_new, temperature=0.9, top_p=0.85, seed=11),
+        SamplingParams(max_new=max_new, temperature=1.1, top_k=6, seed=22),
+        SamplingParams(max_new=max_new, temperature=1.0, top_k=9, top_p=0.9, seed=33),
+    ]
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            params=kinds[i % len(kinds)],
+        )
+        for i, s in enumerate(sizes)
+    ]
+
+
+@pytest.mark.parametrize("mode", [Mode.SPLIT, Mode.MERGE])
+def test_cluster_seeded_sampling_matches_single_engine(small_model, mode):
+    """Seeded top-k/top-p streams are bit-reproducible across cluster
+    modes: the (request seed, position) sampling keys don't care which
+    fabric — or which replica — serves the request."""
+    cfg, m, p = small_model
+    sizes = (5, 12, 8, 17, 9)
+    ref = _engine_reference(m, p, _sampled_reqs(cfg, sizes),
+                            batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=mode, batch_slots=2, max_len=48)
+    for r in _sampled_reqs(cfg, sizes):
+        cl.submit(r)
+    cl.run()
+    assert {r.rid: r.generated for r in cl.finished} == ref
+
+
+def test_cluster_mid_stream_reconfigure_seeded_sampling(small_model):
+    """A drain→switch→resume mid-stream reconfigure must not perturb any
+    seeded sampled stream (requests re-homed across fabrics keep their
+    params and seeds)."""
+    cfg, m, p = small_model
+    sizes = (5, 12, 8, 17, 9, 7)
+    ref = _engine_reference(m, p, _sampled_reqs(cfg, sizes),
+                            batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48)
+    arrivals = [(i * 0.002, r) for i, r in enumerate(_sampled_reqs(cfg, sizes))]
+    stats = cl.run(arrivals=arrivals, reconfigure_schedule=[(0.005, Mode.MERGE)])
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert len(stats.reconfigures) == 1
+
+
+def test_cluster_tenant_default_params(small_model):
+    """A request submitted without sampling config inherits its tenant's
+    default SamplingParams; explicit params always win; the defaults
+    survive a reconfigure (params resolve once, at first submit)."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(61)
+    defaults = {
+        "free": SamplingParams(max_new=2),
+        "pro": SamplingParams(max_new=4, temperature=0.9, top_p=0.9, seed=5),
+    }
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32,
+                      tenant_defaults=defaults)
+    mk = lambda rid, tenant, **kw: Request(
+        rid=rid,
+        prompt=rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+        tenant=tenant, **kw,
+    )
+    r_free, r_pro = mk(0, "free"), mk(1, "pro")
+    r_explicit = mk(2, "free", params=SamplingParams(max_new=3))
+    r_other = mk(3, "unknown")
+    for r in (r_free, r_pro, r_explicit, r_other):
+        cl.submit(r)
+    assert r_free.params == defaults["free"]
+    assert r_pro.params == defaults["pro"]
+    assert r_explicit.params.max_new == 3  # explicit config wins
+    assert r_other.params.max_new == 16  # no default for this tenant
+    cl.reconfigure(Mode.MERGE)  # carried requests keep their resolved params
+    assert r_free.params == defaults["free"]
+    cl.run()
+    by = {r.rid: r for r in cl.finished}
+    assert len(by[0].generated) == 2
+    assert len(by[1].generated) == 4
+    assert len(by[2].generated) == 3
+
+
+def test_cluster_cancel_follows_reconfigure(small_model):
+    """A handle's cancel() reaches the request wherever it lives — here,
+    after a reconfigure re-homed the queue onto the other fabric."""
+    cfg, m, p = small_model
+    sizes = (5, 9, 7)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32)
+    reqs = _reqs(cfg, sizes)
+    handles = [cl.submit(r) for r in reqs]
+    cl.reconfigure(Mode.MERGE)
+    handles[1].cancel()
+    assert handles[1].finish_reason == "cancelled"
+    cl.run()
+    served = {r.rid: r.generated for r in cl.finished if r.finish_reason != "cancelled"}
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=32)
+    assert served == {0: ref[0], 2: ref[2]}
+    assert reqs[1].generated == []
+
+
+def test_cluster_mid_stream_cancel_preserves_other_streams(small_model):
+    """Cancelling one request WHILE the cluster serves (controller threads
+    live) frees its slot and leaves every other seeded stream bit-identical
+    — per-request sampling keys make abort invisible to neighbours."""
+    import threading
+
+    cfg, m, p = small_model
+    sizes = (5, 12, 8, 17)
+    ref = _engine_reference(m, p, _sampled_reqs(cfg, sizes, max_new=16),
+                            batch_slots=2, max_len=64)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=64)
+    reqs = _sampled_reqs(cfg, sizes, max_new=16)
+    handles = [cl.submit(r) for r in reqs]
+    timer = threading.Timer(0.02, handles[2].cancel)
+    timer.start()
+    try:
+        cl.run()
+    finally:
+        timer.cancel()
+    by = {r.rid: r for r in cl.finished}
+    for rid in (0, 1, 3):
+        assert by[rid].generated == ref[rid], f"neighbour stream {rid} perturbed"
+    # the cancelled stream is a clean prefix (or finished before the timer)
+    cut = by[2].generated
+    assert cut == ref[2][: len(cut)]
+    if by[2].finish_reason == "cancelled":
+        assert by[2].n_generated == len(cut)
+
+
+def test_cluster_tenant_defaults_apply_to_arrival_streams(small_model):
+    """run(arrivals=...) takes the same request intake as submit(): tenant
+    default params attach and the ownership map learns the engine (so a
+    mid-stream arrival is cancellable and honours tenant policy)."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(71)
+    defaults = {"pro": SamplingParams(max_new=3)}
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32,
+                      tenant_defaults=defaults)
+    req = Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+        tenant="pro",
+    )
+    cl.run(arrivals=[(0.0, req)])
+    assert req.params == defaults["pro"]
+    assert len(req.generated) == 3
+
+
+@pytest.mark.parametrize("mode", [Mode.SPLIT, Mode.MERGE])
+def test_cluster_handle_streaming_without_run(small_model, mode):
+    """Pure handle-driven streaming (no cluster.run()): the iterator pumps
+    the owning engine to COMPLETION — including the final chunk, whose
+    values are still in flight when the request count-finishes — and the
+    ownership map is pruned afterwards (no unbounded growth)."""
+    cfg, m, p = small_model
+    sizes = (6, 9)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=32)
+    cl = ServeCluster(m, p, mode=mode, batch_slots=2, max_len=32)
+    handles = [cl.submit(r) for r in _reqs(cfg, sizes)]
+    assert list(handles[0].tokens()) == ref[0]
+    assert handles[1].result() == ref[1]
+    assert all(h.done for h in handles)
+    assert len(cl._where) == 0  # streamed-to-completion requests pruned
