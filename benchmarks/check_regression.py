@@ -50,7 +50,7 @@ _MACHINE_DEPENDENT = ("cpu_measured", "serve_engine")
 # telemetry for the fused sampler's cost; the enforceable serving gate is
 # the ALL-GREEDY steady-state row (serve_engine_cpu_tok_per_s), which the
 # sampler redesign must leave inside ±20% of the committed baseline.
-_REPORT_ONLY = ("_mixed_", "_cluster_", "_sampled_")
+_REPORT_ONLY = ("_mixed_", "_cluster_", "_sampled_", "_paged_")
 
 
 def host_fingerprint() -> dict:

@@ -1,6 +1,6 @@
 """Paper's PPA table analogue: the cost of reconfigurability itself (C4).
 
-Silicon area/f_max have no direct analogue; DESIGN.md §2 maps them to:
+Silicon area/f_max have no direct analogue; they map to:
   * mode-switch latency      — MEASURED: remesh + reshard of live state
   * mode indirection         — MEASURED: scheduler/cluster dispatch overhead
     per task vs calling the jitted fn directly (the "+1.4% area" analogue:

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Docs lint (the CI fast lane): two checks that keep prose honest.
+
+1. **Stale section references.** Docstrings used to cite §-numbers from a
+   pre-repo design doc ("DESIGN.md §2") and tables of a never-committed
+   EXPERIMENTS.md ("§Perf", "§Roofline", "§Dry-run"). Those were swept;
+   this lint keeps them from coming back. Allowed forms:
+
+   * paper section refs in roman numerals — ``paper §II``, ``§III`` — the
+     source paper really has those sections;
+   * named DESIGN.md anchors — ``DESIGN.md §"Cluster serving"`` — checked
+     below against the actual headings;
+   * benchmarks' OWN § numbering (``benchmarks/run.py`` §1-§4 and the
+     §Roofline/§Dry-run table *generators* live there by design).
+
+2. **Markdown links.** Every relative link/image in the repo's markdown
+   must resolve to an existing file, and every ``DESIGN.md §"..."`` quoted
+   anchor must match a real DESIGN.md heading.
+
+Exit 1 with a file:line listing on any violation.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# trees where only paper-roman (§II) and named (§"...") references belong
+SWEPT_TREES = ("src", "tests")
+STALE = re.compile(r"§\s*\d|§Perf|§Roofline|§Dry-run|EXPERIMENTS")
+# stale numeric DESIGN.md refs are banned EVERYWHERE (benchmarks included)
+STALE_DESIGN = re.compile(r"DESIGN\.md\s*§\s*\d")
+
+MD_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+NAMED_ANCHOR = re.compile(r'DESIGN\.md\s*§"([^"]+)"')
+
+MD_FILES = [
+    p for p in list(ROOT.glob("*.md")) + list(ROOT.glob("docs/**/*.md"))
+    if p.name != "ISSUE.md"  # working notes, not shipped docs
+]
+
+
+def stale_refs() -> list[str]:
+    out = []
+    for tree in SWEPT_TREES:
+        for p in sorted((ROOT / tree).rglob("*.py")):
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                if STALE.search(line):
+                    out.append(f"{p.relative_to(ROOT)}:{i}: stale section ref: {line.strip()}")
+    me = Path(__file__).resolve()
+    for p in sorted(ROOT.rglob("*.py")) + MD_FILES:
+        if any(s in p.parts for s in (".git", ".venv")) or p.resolve() == me:
+            continue  # this file quotes the banned forms as examples
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if STALE_DESIGN.search(line):
+                out.append(
+                    f"{p.relative_to(ROOT)}:{i}: numeric DESIGN.md § ref "
+                    f"(use a named anchor): {line.strip()}"
+                )
+    return out
+
+
+def broken_links() -> list[str]:
+    out = []
+    design = (ROOT / "DESIGN.md").read_text()
+    headings = [
+        h.lstrip("#").strip() for h in design.splitlines() if h.startswith("#")
+    ]
+    for p in MD_FILES:
+        text = p.read_text()
+        for i, line in enumerate(text.splitlines(), 1):
+            for m in MD_LINK.finditer(line):
+                target = m.group(1).split("#")[0]
+                if not target or "://" in target or target.startswith("mailto:"):
+                    continue
+                resolved = (p.parent / target).resolve()
+                if not resolved.is_relative_to(ROOT):
+                    continue  # GitHub-site-relative (badges etc.), not a repo file
+                if not resolved.exists() and not (ROOT / target).exists():
+                    out.append(f"{p.relative_to(ROOT)}:{i}: broken link -> {target}")
+            for m in NAMED_ANCHOR.finditer(line):
+                if not any(m.group(1) in h for h in headings):
+                    out.append(
+                        f"{p.relative_to(ROOT)}:{i}: DESIGN.md anchor "
+                        f"\"{m.group(1)}\" matches no heading"
+                    )
+    # named anchors inside python docstrings get the same heading check
+    for tree in SWEPT_TREES:
+        for p in sorted((ROOT / tree).rglob("*.py")):
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                for m in NAMED_ANCHOR.finditer(line):
+                    if not any(m.group(1) in h for h in headings):
+                        out.append(
+                            f"{p.relative_to(ROOT)}:{i}: DESIGN.md anchor "
+                            f"\"{m.group(1)}\" matches no heading"
+                        )
+    return out
+
+
+def main() -> int:
+    problems = stale_refs() + broken_links()
+    for pr in problems:
+        print(pr)
+    if problems:
+        print(f"\ndocs lint: {len(problems)} problem(s)")
+        return 1
+    print(f"docs lint: ok ({len(MD_FILES)} markdown files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

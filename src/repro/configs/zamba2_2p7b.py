@@ -5,7 +5,7 @@
 
 Every 6th Mamba2 block is followed by an invocation of the single shared
 attention+MLP block (weights tied across invocations). The real model's
-per-invocation LoRA deltas are simplified to pure weight tying (DESIGN.md §5).
+per-invocation LoRA deltas are simplified to pure weight tying.
 """
 
 from repro.configs.base import ArchConfig, SSMConfig, register_arch

@@ -19,7 +19,7 @@ Two executions of the *same* kernel:
   pod owns half the rows and runs per-phase programs; every exchange goes
   through the hosts (fetch halves → global permute → scatter back) with a
   barrier per round. The measured gap vs merged is the TPU analogue of the
-  paper's inter-core synchronization overhead (DESIGN.md §2: their VUs share
+  paper's inter-core synchronization overhead (their VUs share
   an L1 SPM, so their exchange is cheap barriers; ours pays host round-trips
   — same mechanism, heavier constant).
 """

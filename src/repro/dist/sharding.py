@@ -16,7 +16,7 @@ Hard-won rules pinned by ``tests/test_sharding_rules.py``:
 
 * a stacked-layer leading dim (ndim ≥ 3) is NEVER sharded — the scan over
   layers would otherwise all-gather the full stack every step (the 6×7 GB
-  regression, EXPERIMENTS §Perf #0);
+  regression caught in the dry-run artifact);
 * MoE expert stacks ``[L, E, d, f]`` shard the EXPERT dim (expert
   parallelism feeds the ``shard_map`` in :mod:`repro.models.moe`);
 * GQA attention ``[L, d, kv_heads, head_dim]`` prefers the heads dim and

@@ -1,6 +1,7 @@
 """Elastic training driver: pod failure → shrink → restore → continue.
 
-Reuses the Spatzformer reconfiguration machinery (DESIGN.md §3): a dead pod
+Reuses the Spatzformer reconfiguration machinery
+(DESIGN.md §"Autotuning as reconfiguration"): a dead pod
 turns the MERGE-mode fabric into "SPLIT with one tenant" on the survivors.
 The driver loop:
 

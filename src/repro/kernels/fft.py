@@ -1,6 +1,6 @@
 """Batched Stockham radix-2 FFT kernel (the paper's sync-critical DSP kernel).
 
-TPU adaptation (DESIGN.md §2): complex data is PLANAR (separate re/im f32
+TPU adaptation: complex data is PLANAR (separate re/im f32
 arrays — VPU lanes hate interleaved complex), a whole power-of-two row lives
 in VMEM per block, and all log2(N) butterfly stages run register/VMEM-
 resident inside one kernel invocation — zero HBM round-trips between stages.

@@ -3,7 +3,7 @@
 MXU-aligned (block_m × block_k) @ (block_k × block_n) tiles staged in VMEM,
 f32 accumulator scratch, K as the innermost sequential grid dim. The RVV
 kernel's strip-mined loop over vector registers becomes a 2-D systolic tile
-schedule — DESIGN.md §2 (hardware adaptation).
+schedule (the TPU hardware adaptation).
 
 Shapes need NOT divide the blocks: the grid ceil-divides and tail blocks
 mask the K overhang with an iota compare inside the kernel (out-of-bounds

@@ -323,3 +323,65 @@ def ragged_attention(
             interpret=(m == "interpret"),
         )
     return out.reshape(t, h, d)
+
+
+def paged_ragged_attention(
+    q, k, v, tok_seq, tok_pos, block_tables, *, window: int = 0,
+    mode: Mode = "auto", valid=None,
+):
+    """Packed variable-length attention against a block-paged KV pool: the
+    ``(slot, pos)`` descriptor indirection of :func:`ragged_attention`
+    generalized to ``(block, offset)`` through per-sequence block tables.
+
+    q: [T, H, d] packed query tokens; k/v: [num_blocks, block_size, KV, d]
+    pool with the packed tokens' K/V already scattered at their (block,
+    offset); tok_seq/tok_pos: [T] int32 — token t belongs to block-table
+    row ``tok_seq[t]`` at absolute position ``tok_pos[t]``; block_tables:
+    [R, max_blocks] int32. The oracle/CPU path gathers the tables' dense
+    view and reuses the dense oracle (bit-identical to unpaged serving);
+    the Pallas kernel streams pool blocks straight through its index map
+    — no gathered view ever exists on TPU. Returns [T, H, d]."""
+    t, h, d = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    qg = q.reshape(t, kvh, h // kvh, d)
+    m = _resolve(mode)
+    if m == "ref":
+        out = ref.paged_ragged_attention(
+            qg, k, v, tok_seq, tok_pos, block_tables,
+            window=window, valid=valid,
+        )
+    else:
+        out = _ragged_k.paged_ragged_attention(
+            qg, k, v, tok_seq, tok_pos, block_tables,
+            window=window, interpret=(m == "interpret"),
+        )
+    return out.reshape(t, h, d)
+
+
+def paged_decode_attention(
+    q, k, v, cur_len, block_tables, *, window: int = 0, mode: Mode = "auto",
+):
+    """Batched single-token decode attention against a block-paged pool.
+
+    q: [B, H, d]; k/v: [num_blocks, block_size, KV, d]; cur_len: [] or [B];
+    block_tables: [B, max_blocks] int32 (row b maps sequence b's S tiles
+    to pool blocks). CPU gathers the dense per-sequence view and runs the
+    dense decode oracle — bit-identical to the unpaged path; TPU routes
+    through the paged ragged kernel with one descriptor per sequence (the
+    same ONE kernel carries prefill packs and decode chunks)."""
+    b, h, d = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    m = _resolve(mode)
+    if m == "ref":
+        qg = q.reshape(b, kvh, h // kvh, d)
+        out = ref.paged_decode_attention(
+            qg, k, v, cur_len, block_tables, window=window
+        )
+        return out.reshape(b, h, d)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len), (b,))
+    return paged_ragged_attention(
+        q, k, v, jnp.arange(b, dtype=jnp.int32), cur, block_tables,
+        window=window, mode=mode,
+    )

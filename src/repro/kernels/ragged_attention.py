@@ -27,6 +27,20 @@ short sequences stay cheap inside a long-cache pack.
 Padding tokens (pack ragged-to-bucket tail) should point at slot 0 with
 ``tok_pos >= S_max``: every tile stays live but the output row is ignored
 by the caller, and the out-of-bounds scatter was already dropped upstream.
+
+:func:`paged_ragged_attention` generalizes the same kernel from a dense
+``[B, S_max, KV, hd]`` cache to a block-paged ``[num_blocks, block_size,
+KV, hd]`` pool: the descriptor indirection ``(slot, pos)`` becomes
+``(block, offset)`` by routing the BlockSpec's cache fetch through a
+``[R, max_blocks]`` block table — S tile ``si`` of sequence row ``r``
+streams from pool block ``block_tables[r, si]`` instead of cache row
+``r``. Everything else (per-token causal bound, online softmax, tile
+skipping) is IDENTICAL, which is the point: one kernel change carries
+both packed prefill and the fused k-step decode chunks onto the paged
+pool. Unallocated table entries hold the out-of-range sentinel
+``num_blocks``; their tiles are provably dead (a request's table covers
+every position ≤ its ``tok_pos``) and the index map clamps them in-range
+so the prefetch never reads out of bounds.
 """
 
 from __future__ import annotations
@@ -91,6 +105,20 @@ def _ragged_kernel(
         ).astype(o_ref.dtype)
 
 
+def _paged_kernel(
+    seq_ref, pos_ref, btab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+    acc_ref, *, block_s: int, s_steps: int, window: int
+):
+    # same compute as the dense-cache kernel: the paging lives entirely in
+    # the BlockSpec index map (tile si already holds the positions
+    # [si*block_s, (si+1)*block_s) of this token's sequence), and the block
+    # table itself is only consumed there — the body never sees it
+    _ragged_kernel(
+        seq_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+        block_s=block_s, s_steps=s_steps, window=window,
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("window", "block_s", "interpret")
 )
@@ -153,3 +181,73 @@ def ragged_attention(
         ),
         interpret=interpret,
     )(tok_slot, tok_pos, q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_ragged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    tok_seq: jax.Array,
+    tok_pos: jax.Array,
+    block_tables: jax.Array,
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed ragged attention against a block-paged KV pool.
+
+    q: [T, KV, G, d] packed queries; k/v: [num_blocks, block_size, KV, d]
+    pool; tok_seq/tok_pos: [T] int32 — token t belongs to sequence row
+    ``tok_seq[t]`` of ``block_tables`` at absolute position ``tok_pos[t]``;
+    block_tables: [R, max_blocks] int32 mapping (sequence row, S tile) to a
+    pool block (out-of-range sentinel = unallocated). The S tile size IS
+    the pool's block_size — the pool layout already tiled the cache for
+    the kernel, so no extra blocking choice exists on this path.
+
+    Returns [T, KV, G, d] attention outputs for every packed token."""
+    t, kvh, g, d = q.shape
+    nb, block_s = k.shape[0], k.shape[1]
+    s_steps = block_tables.shape[1]
+    grid = (t, kvh, s_steps)
+
+    def _kv_map(ti, hi, si, seqs, poss, btab):
+        # (slot, pos) -> (block, offset): the tile's pool block comes from
+        # the sequence's table; clamp the unallocated sentinel in-range
+        # (those tiles are masked dead by the position bound anyway)
+        return (jnp.minimum(btab[seqs[ti], si], nb - 1), 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, d), lambda ti, hi, si, seqs, poss, btab: (ti, hi, 0, 0)
+            ),
+            pl.BlockSpec((1, block_s, 1, d), _kv_map),
+            pl.BlockSpec((1, block_s, 1, d), _kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda ti, hi, si, seqs, poss, btab: (ti, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    tok_seq = jnp.asarray(tok_seq, jnp.int32)
+    tok_pos = jnp.asarray(tok_pos, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, block_s=block_s, s_steps=s_steps, window=window
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, kvh, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tok_seq, tok_pos, block_tables, q, k, v)

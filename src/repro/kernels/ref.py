@@ -186,6 +186,76 @@ def ragged_attention(
     return out.reshape(kvh, t, g, d).transpose(1, 0, 2, 3).astype(q.dtype)
 
 
+def paged_gather(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize dense cache rows from a block-paged pool.
+
+    pool: [num_blocks, block_size, ...]; block_tables: [R, max_blocks]
+    int32 (out-of-range sentinel = unallocated). Returns [R, max_blocks *
+    block_size, ...] — exactly the dense ``[B, S_max, ...]`` cache layout,
+    where position ``p`` of row ``r`` is ``pool[block_tables[r, p //
+    block_size], p % block_size]``.
+
+    Unallocated table entries clamp to the last real block, so their
+    positions hold arbitrary (finite) pool contents — every consumer below
+    masks by the same position bounds as the dense path, under which an
+    identity-mapped pool reproduces the dense cache BIT-EXACTLY: masked
+    score lanes contribute exp(NEG_INF - max) == 0 regardless of what the
+    garbage positions hold. This gather is the oracle/CPU formulation; the
+    Pallas path (``ragged_attention.paged_ragged_attention``) consumes the
+    pool directly through its BlockSpec index map and never builds it.
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    r, maxb = block_tables.shape
+    view = pool[jnp.minimum(block_tables, nb - 1)]  # [R, maxb, bs, ...]
+    return view.reshape(r, maxb * bs, *pool.shape[2:])
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    cur_len: jax.Array,
+    block_tables: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Paged single-token decode oracle: gather the per-sequence dense view
+    from the pool, then the EXACT dense decode oracle — the paged engine's
+    greedy streams stay bit-identical to the slot-cache engine on CPU."""
+    return decode_attention(
+        q,
+        paged_gather(pool_k, block_tables),
+        paged_gather(pool_v, block_tables),
+        cur_len,
+        window=window,
+    )
+
+
+def paged_ragged_attention(
+    q: jax.Array,
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    tok_seq: jax.Array,
+    tok_pos: jax.Array,
+    block_tables: jax.Array,
+    *,
+    window: int = 0,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Paged packed ragged oracle: the dense :func:`ragged_attention` over
+    the block tables' gathered view (same masks, same math, bit-identical
+    to the dense path wherever positions are valid)."""
+    return ragged_attention(
+        q,
+        paged_gather(pool_k, block_tables),
+        paged_gather(pool_v, block_tables),
+        tok_seq,
+        tok_pos,
+        window=window,
+        valid=valid,
+    )
+
+
 def fft_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-stage Stockham radix-2 twiddle table [log2(n), n//2] (re, im).
 

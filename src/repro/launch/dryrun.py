@@ -16,8 +16,9 @@ multi-pod (2,16,16) meshes this script:
      compile-time OOMs all surface HERE,
   4. records ``memory_analysis()`` / ``cost_analysis()`` / the collectives
      parsed from the partitioned HLO, alongside the analytic roofline terms
-     (repro.roofline) into a JSONL consumed by EXPERIMENTS.md §Dry-run /
-     §Roofline and the perf loop.
+     (repro.roofline) into a JSONL consumed by the benchmark tables
+     (``benchmarks/make_experiments_tables.py``,
+     ``benchmarks/roofline_bench.py``) and the perf loop.
 
 Usage:
   python -m repro.launch.dryrun --arch all --shape all --mesh both \
@@ -54,7 +55,7 @@ def lower_cell(
     """Build + lower + compile one cell. Returns a result record dict.
 
     ``baseline=True`` disables the beyond-paper memory policies (grad-accum
-    sizing, f8 KV, FSDP) — used by the §Perf before/after measurements.
+    sizing, f8 KV, FSDP) — used by the before/after perf measurements.
     """
     import dataclasses
 
@@ -71,7 +72,7 @@ def lower_cell(
         "baseline": baseline,
     }
 
-    # ---- memory policies (each one a recorded §Perf iteration) ----
+    # ---- memory policies (each one a recorded perf iteration) ----
     grad_accum = 1
     strategy = "tp"
     if not baseline:
@@ -194,8 +195,8 @@ def lower_cell(
     # holding a ~2×params f32 copy of the touched weight stacks in temp.
     # TPU executes bf16 natively on the MXU — no such copies. Report a
     # TPU-adjusted estimate alongside the raw number (evidence: temp has a
-    # B/S-independent component ≈ 2× per-device param bytes; EXPERIMENTS.md
-    # §Dry-run).
+    # B/S-independent component ≈ 2× per-device param bytes in the dry-run
+    # artifact).
     from repro.common.utils import pytree_bytes
 
     param_dev_bytes = pytree_bytes(params_s) / mesh.size * info.data_size

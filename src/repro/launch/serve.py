@@ -82,7 +82,24 @@ def main() -> None:
         "--no-prewarm", action="store_true",
         help="skip prewarm(): compiles land inside the timed region",
     )
+    ap.add_argument(
+        "--kv-block-size", type=int, default=None,
+        help="enable block-paged KV serving with this block size (tokens "
+        "per block; must divide --max-len). Default: dense per-slot cache",
+    )
+    ap.add_argument(
+        "--num-blocks", type=int, default=None,
+        help="KV pool size in blocks (paged mode). Default: byte parity "
+        "with the dense cache (slots * max_len / block_size); smaller "
+        "pools oversubscribe and make admission wait on pool pressure",
+    )
+    ap.add_argument(
+        "--prefix-cache", action="store_true",
+        help="radix prefix reuse across requests (requires --kv-block-size)",
+    )
     args = ap.parse_args()
+    if args.prefix_cache and not args.kv_block_size:
+        ap.error("--prefix-cache requires --kv-block-size")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -96,7 +113,8 @@ def main() -> None:
         print(f"cluster-mode auto -> {mode}")
     common = dict(
         batch_slots=args.slots, max_len=args.max_len, seed=args.seed,
-        unified=args.unified,
+        unified=args.unified, kv_block_size=args.kv_block_size,
+        num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
     )
     if mode == "single":
         target = ServeEngine(model, params, **common)
@@ -152,6 +170,13 @@ def main() -> None:
         f"TTFT p50={stats.ttft_p50*1e3:.1f}ms p99={stats.ttft_p99*1e3:.1f}ms  "
         f"TPOT p50={stats.tpot_p50*1e3:.2f}ms p99={stats.tpot_p99*1e3:.2f}ms"
     )
+    if args.kv_block_size:
+        engines = [target] if mode == "single" else target.engines
+        for i, e in enumerate(engines):
+            line = f"paged[{i}]: {e.pool.stats()}"
+            if e.prefix is not None:
+                line += f"\n          {e.prefix.stats()}"
+            print(line)
 
 
 if __name__ == "__main__":

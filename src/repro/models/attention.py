@@ -296,6 +296,7 @@ def attention_decode(
     cache_v: jax.Array,
     cur_len: jax.Array,
     mesh_info=None,
+    block_tables: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step.
 
@@ -304,6 +305,15 @@ def attention_decode(
     ``mesh_info`` the step runs head-sharded over the ``model`` axis
     (merge-mode serving): q and the KV cache split on their head dims, the
     per-shard partial outputs of the ``wo`` contraction all-reduce.
+
+    With ``block_tables`` ([B, max_blocks] int32) the cache arguments are
+    instead a block-paged pool ``[num_blocks, block_size, KV, hd]``
+    (:mod:`repro.serve.kv_pool`): the new K/V scatter lands at the
+    sequence's ``(block, offset)`` for position ``cur_len`` (an
+    unallocated-sentinel table entry drops the write — inert slots never
+    touch another request's blocks), and attention dispatches through
+    ``ops.paged_decode_attention``, whose CPU path is bit-identical to the
+    dense gather.
     """
     b, _, d = x.shape
 
@@ -322,16 +332,37 @@ def attention_decode(
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
 
-    # scatter the new k/v at cur_len
-    cache_k = _scatter_step(cache_k, k, cur_len)
-    cache_v = _scatter_step(cache_v, v, cur_len)
+    if block_tables is None:
+        # scatter the new k/v at cur_len
+        cache_k = _scatter_step(cache_k, k, cur_len)
+        cache_v = _scatter_step(cache_v, v, cur_len)
 
-    # grouped decode attention: never expands the cache to H heads
-    # (materializing [B,S,H,hd] per layer is a groups× transient blowup at
-    # 32k context); cache may be f8 storage — compute in model dtype
-    o = ops.decode_attention(
-        q[:, 0], cache_k, cache_v, cur_len, window=cfg.sliding_window
-    )[:, None]  # [B,1,H,hd]
+        # grouped decode attention: never expands the cache to H heads
+        # (materializing [B,S,H,hd] per layer is a groups× transient blowup
+        # at 32k context); cache may be f8 storage — compute in model dtype
+        o = ops.decode_attention(
+            q[:, 0], cache_k, cache_v, cur_len, window=cfg.sliding_window
+        )[:, None]  # [B,1,H,hd]
+    else:
+        # paged: (slot, cur_len) -> (block, offset) through the sequence's
+        # table row; an unallocated sentinel entry is out of pool range and
+        # the write drops (inert/finished slots never corrupt a block that
+        # was reassigned to another request)
+        bs = cache_k.shape[1]
+        p = pos[:, 0]
+        blk = block_tables[
+            jnp.arange(b), jnp.minimum(p // bs, block_tables.shape[1] - 1)
+        ]
+        cache_k = cache_k.at[blk, p % bs].set(
+            k[:, 0].astype(cache_k.dtype), mode="drop"
+        )
+        cache_v = cache_v.at[blk, p % bs].set(
+            v[:, 0].astype(cache_v.dtype), mode="drop"
+        )
+        o = ops.paged_decode_attention(
+            q[:, 0], cache_k, cache_v, cur_len, block_tables,
+            window=cfg.sliding_window,
+        )[:, None]
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
     return out, cache_k, cache_v
 
@@ -347,6 +378,7 @@ def attention_packed(
     valid: Optional[jax.Array] = None,
     pack_slots: Optional[jax.Array] = None,
     mesh_info=None,
+    block_tables: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Packed variable-length step: any mix of decode singletons and prefill
     chunks as ONE flat token batch (the unified serving dispatch).
@@ -367,6 +399,17 @@ def attention_packed(
     rows — the oracle's masked full-cross score plane then scales with the
     slots actually packed (a handful of admitting sequences), not the whole
     slot pool. Scatters still land in the full cache.
+
+    With ``block_tables`` ([B, max_blocks] int32) the cache arguments are
+    a block-paged pool ``[num_blocks, block_size, KV, hd]`` and the
+    ``(slot, pos)`` indirection generalizes to ``(block, offset)``: the
+    fused scatter routes through the token's table row (bucket-padding
+    positions ≥ max_blocks*block_size map to the out-of-range sentinel
+    and drop, exactly like the dense out-of-bounds drop), and attention
+    dispatches through ``ops.paged_ragged_attention`` against the pack's
+    table rows. Prefix-shared blocks are never written here — the engine
+    only feeds tokens past the matched prefix, so every scattered
+    position lands in a private block (block-aligned copy-on-write).
     """
     q = jnp.einsum("td,dhk->thk", x, params["wq"])
     k = jnp.einsum("td,dhk->thk", x, params["wk"])
@@ -384,19 +427,41 @@ def attention_packed(
     k = apply_rope(k, pos, cfg.rope_theta)
 
     glob_slot = tok_slot if pack_slots is None else pack_slots[tok_slot]
-    # one fused scatter for the whole pack replaces the per-admission
-    # full-cache insert: O(T) rows written, never a cache-sized copy
-    cache_k = cache_k.at[glob_slot, pos].set(k.astype(cache_k.dtype), mode="drop")
-    cache_v = cache_v.at[glob_slot, pos].set(v.astype(cache_v.dtype), mode="drop")
+    if block_tables is None:
+        # one fused scatter for the whole pack replaces the per-admission
+        # full-cache insert: O(T) rows written, never a cache-sized copy
+        cache_k = cache_k.at[glob_slot, pos].set(k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[glob_slot, pos].set(v.astype(cache_v.dtype), mode="drop")
 
-    if pack_slots is None:
-        att_k, att_v = cache_k, cache_v
-    else:  # P-row sub-cache view: attention work scales with the pack
-        att_k, att_v = cache_k[pack_slots], cache_v[pack_slots]
-    o = ops.ragged_attention(
-        q, att_k, att_v, tok_slot, pos,
-        window=cfg.sliding_window, valid=valid,
-    )  # [T, H, hd]
+        if pack_slots is None:
+            att_k, att_v = cache_k, cache_v
+        else:  # P-row sub-cache view: attention work scales with the pack
+            att_k, att_v = cache_k[pack_slots], cache_v[pack_slots]
+        o = ops.ragged_attention(
+            q, att_k, att_v, tok_slot, pos,
+            window=cfg.sliding_window, valid=valid,
+        )  # [T, H, hd]
+    else:
+        # paged pool: same fused scatter through the (block, offset)
+        # indirection. Positions past the table (bucket padding) pick the
+        # out-of-range sentinel explicitly — clamping the table index and
+        # letting a real block id through would corrupt offset 0 of a live
+        # block; mode="drop" needs the OOB id to survive to the scatter
+        bs = cache_k.shape[1]
+        maxb = block_tables.shape[1]
+        nb = cache_k.shape[0]
+        bidx = jnp.minimum(pos // bs, maxb - 1)
+        blk = jnp.where(pos < maxb * bs, block_tables[glob_slot, bidx], nb)
+        cache_k = cache_k.at[blk, pos % bs].set(k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[blk, pos % bs].set(v.astype(cache_v.dtype), mode="drop")
+
+        att_btab = (
+            block_tables if pack_slots is None else block_tables[pack_slots]
+        )
+        o = ops.paged_ragged_attention(
+            q, cache_k, cache_v, tok_slot, pos, att_btab,
+            window=cfg.sliding_window, valid=valid,
+        )  # [T, H, hd]
     out = jnp.einsum("thk,hkd->td", o, params["wo"])
     return out, cache_k, cache_v
 

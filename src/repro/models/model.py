@@ -17,7 +17,7 @@ devices); ``cfg.remat == 'block'`` wraps the scanned body in
 The same class serves training (``forward``), prefill (``forward``), and
 decoding (``decode_step`` + ``init_cache``). Modality stubs: ``audio``/``vlm``
 archs accept precomputed frame/patch embeddings via ``batch['embeds']``
-(DESIGN.md §5).
+(the encoders themselves are out of scope here).
 """
 
 from __future__ import annotations
@@ -188,7 +188,7 @@ class LM:
     # sharded) and the reduce-scatter after — and, critically, the remat
     # checkpoint saved per scanned layer is the SP-sharded tensor: boundary
     # activation memory drops by the TP degree (17 GB -> ~1 GB on
-    # codeqwen/train_4k; §Perf iteration 1).
+    # codeqwen/train_4k, measured via launch/dryrun.py).
     def _sp(self, x: jax.Array) -> jax.Array:
         mi = self.mesh_info
         if mi is None or mi.model_size <= 1:
@@ -202,7 +202,8 @@ class LM:
 
     def _logits_constraint(self, logits: jax.Array) -> jax.Array:
         """Keep [B,S,V] logits vocab-sharded: replicated f32 logits at
-        vocab 92k-202k are 12-24 GB/device (§Perf iteration 2)."""
+        vocab 92k-202k are 12-24 GB/device (measured in the dry-run
+        artifact)."""
         mi = self.mesh_info
         if mi is None or mi.model_size <= 1:
             return logits
@@ -327,6 +328,26 @@ class LM:
                 "attn_v": jnp.zeros((n_inv, batch, max_len, kv, hd), dt),
             }
         raise ValueError(cfg.family)
+
+    def init_kv_pool(self, num_blocks: int, block_size: int) -> Params:
+        """Block-paged KV pool (zeros): ``[L, num_blocks, block_size, KV,
+        hd]`` per leaf — the dense cache's ``[B, S_max]`` plane refactored
+        into shared, individually-ownable blocks (paged serving,
+        :mod:`repro.serve.kv_pool`). With identity block tables (block i of
+        sequence b = b * max_blocks + i) this is a pure reshape of
+        ``init_cache(B, max_blocks * block_size)`` — paging adds an
+        indirection, not a new layout. Positional-KV families only (the
+        same constraint as ``supports_packed``)."""
+        cfg, dt = self.cfg, self.cache_dtype
+        if not self.supports_packed:
+            raise ValueError(
+                f"family {cfg.family!r}/mla has no positional KV to page"
+            )
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((cfg.n_layers, num_blocks, block_size, kv, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, num_blocks, block_size, kv, hd), dt),
+        }
 
     def cache_specs(self, batch: int, max_len: int) -> Any:
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))
@@ -491,7 +512,8 @@ class LM:
     # ------------------------------------------------------------ decode step
 
     def _block_decode(
-        self, blk: Params, x: jax.Array, cache_l: Params, cur_len: jax.Array
+        self, blk: Params, x: jax.Array, cache_l: Params, cur_len: jax.Array,
+        block_tables: Optional[jax.Array] = None,
     ) -> tuple[jax.Array, Params]:
         """One layer's decode. cache_l leaves have NO leading L axis here."""
         cfg = self.cfg
@@ -504,7 +526,7 @@ class LM:
         else:
             a, ck, cv = attn_mod.attention_decode(
                 blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len,
-                mesh_info=self.mesh_info,
+                mesh_info=self.mesh_info, block_tables=block_tables,
             )
             new_cache = {"k": ck, "v": cv}
         x = x + a
@@ -537,6 +559,7 @@ class LM:
         self, blk: Params, x: jax.Array, cache_l: Params,
         tok_slot: jax.Array, tok_pos: jax.Array, valid: Optional[jax.Array],
         pack_slots: Optional[jax.Array],
+        block_tables: Optional[jax.Array] = None,
     ) -> tuple[jax.Array, Params]:
         """One layer over a packed [T] token batch. cache_l has no L axis."""
         cfg = self.cfg
@@ -544,7 +567,7 @@ class LM:
         a, ck, cv = attn_mod.attention_packed(
             blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
             tok_slot, tok_pos, valid, pack_slots,
-            mesh_info=self.mesh_info,
+            mesh_info=self.mesh_info, block_tables=block_tables,
         )
         x = x + a
         h = rms_norm(x, blk["norm2"], cfg.norm_eps)
@@ -566,6 +589,7 @@ class LM:
         tok_pos: jax.Array,
         out_rows: Optional[jax.Array] = None,
         pack_slots: Optional[jax.Array] = None,
+        block_tables: Optional[jax.Array] = None,
     ) -> tuple[jax.Array, Params]:
         """Unified ragged prefill+decode step: one flat [T] token batch where
         each token carries its own (cache slot, absolute position) — decode
@@ -581,6 +605,12 @@ class LM:
         pack rounded up to its bucket) should use ``tok_pos >= max_len``:
         their cache writes are dropped and their logits rows are garbage to
         ignore.
+
+        With ``block_tables`` ([B, max_blocks] int32), ``cache`` is a
+        block-paged pool from :meth:`init_kv_pool` and every (slot, pos)
+        resolves to (block, offset) through the slot's table row — the
+        SAME step otherwise (same descriptors, same mask, same sampling
+        rows), which is what keeps paged and dense serving bit-identical.
         """
         cfg = self.cfg
         assert self.supports_packed, cfg.family
@@ -589,16 +619,24 @@ class LM:
         # it once and share it across every layer
         from repro.kernels import ref as _ref
 
-        k_leaf = cache["k"]  # [L, B, S_max, KV, hd]
-        n_rows = k_leaf.shape[1] if pack_slots is None else len(pack_slots)
+        if block_tables is None:
+            k_leaf = cache["k"]  # [L, B, S_max, KV, hd]
+            n_rows = k_leaf.shape[1] if pack_slots is None else len(pack_slots)
+            s_max = k_leaf.shape[2]
+        else:  # pool leaf [L, NB, bs, KV, hd]: S_max = table width * block
+            n_rows = (
+                block_tables.shape[0] if pack_slots is None else len(pack_slots)
+            )
+            s_max = block_tables.shape[1] * cache["k"].shape[2]
         valid = _ref.ragged_valid_mask(
-            tok_slot, tok_pos, n_rows, k_leaf.shape[2], cfg.sliding_window
+            tok_slot, tok_pos, n_rows, s_max, cfg.sliding_window
         )
 
         def body(xx, xs):
             blk, cl = xs
             xx, ncl = self._block_packed(
-                blk, xx, cl, tok_slot, tok_pos, valid, pack_slots
+                blk, xx, cl, tok_slot, tok_pos, valid, pack_slots,
+                block_tables,
             )
             return xx, ncl
 
@@ -624,14 +662,19 @@ class LM:
     # ------------------------------------------------------------ decode step
 
     def decode_step(
-        self, params: Params, cache: Params, batch: dict, cur_len: jax.Array
+        self, params: Params, cache: Params, batch: dict, cur_len: jax.Array,
+        block_tables: Optional[jax.Array] = None,
     ) -> tuple[jax.Array, Params]:
         """One token for every sequence.
 
         batch: {'tokens': [B,1]} or {'embeds': [B,1,d]}. cur_len: scalar int32
         (tokens already cached). Returns (logits [B,1,V], new_cache).
+        With ``block_tables``, ``cache`` is a paged pool (see
+        :meth:`packed_step`) — dense/moe positional-KV families only.
         """
         cfg = self.cfg
+        if block_tables is not None and not self.supports_packed:
+            raise ValueError(f"family {cfg.family!r}/mla has no paged path")
         if "embeds" in batch:
             x = batch["embeds"].astype(self.dtype)
         else:
@@ -645,7 +688,7 @@ class LM:
 
                 def body_d(xx, xs):
                     blk, cl = xs
-                    xx, ncl = self._block_decode(blk, xx, cl, cur_len)
+                    xx, ncl = self._block_decode(blk, xx, cl, cur_len, block_tables)
                     return xx, ncl
 
                 x, nd = jax.lax.scan(body_d, x, (params["dense_blocks"], dense_cache))
@@ -658,7 +701,7 @@ class LM:
 
                 def body(xx, xs):
                     blk, cl = xs
-                    xx, ncl = self._block_decode(blk, xx, cl, cur_len)
+                    xx, ncl = self._block_decode(blk, xx, cl, cur_len, block_tables)
                     return xx, ncl
 
                 x, new_cache = jax.lax.scan(body, x, (blocks, cache))

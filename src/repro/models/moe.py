@@ -138,7 +138,7 @@ def _moe_shard(
         .add(y.reshape(-1, d).astype(jnp.float32), mode="drop")
     )
     if model_axis is not None:
-        # §Perf: psum the combined expert outputs in bf16, not f32 — halves
+        # perf: psum the combined expert outputs in bf16, not f32 — halves
         # the EP collective bytes. Each token sums ≤ top_k (+shared) expert
         # outputs, so the bf16 reduction error is a couple of ulps.
         out = jax.lax.psum(out.astype(x_flat.dtype), model_axis)

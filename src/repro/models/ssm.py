@@ -1,6 +1,6 @@
 """State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD, chunked).
 
-TPU adaptation notes (DESIGN.md §2): the CUDA reference implementations are
+TPU adaptation notes: the CUDA reference implementations are
 fused scan kernels; here the recurrences are restructured for TPU:
 
 * **Mamba1**: chunked selective scan — an outer ``lax.scan`` over sequence

@@ -269,7 +269,8 @@ def count_cell(
         # (attn out + mlp out) ×3 passes for train (fwd/bwd/remat-recompute).
         # SSM blocks: ONE AR per block (in_proj column-sharded feeds
         # out_proj row-sharded directly) — the first 6-AR estimate was
-        # refuted by the loop-corrected HLO measurement (§Perf, zamba2 cell).
+        # refuted by the loop-corrected HLO measurement
+        # (repro.roofline.hlo_loops, zamba2 cell).
         ar_payload = (B / dp) * S * d * ACT_BYTES
         passes = 3 if shape.kind == "train" else 1
         if cfg.family in ("ssm", "hybrid"):

@@ -11,7 +11,7 @@ compose: attention KV-chunk scans inside the layer scan, microbatch scans,
 …).
 
 The result is the measured-artifact cross-check for the analytic collective
-term in the §Roofline table.
+term in the roofline table (``benchmarks/roofline_bench.py``).
 """
 
 from __future__ import annotations

@@ -25,6 +25,8 @@ from repro.serve.cluster import (
     ServeCluster,
 )
 from repro.serve.engine import Request, RequestHandle, ServeEngine, ServeStats
+from repro.serve.kv_pool import BlockPool, PoolStats, blocks_for
+from repro.serve.prefix_cache import PrefixStats, RadixPrefixCache
 from repro.serve.sampling import MAX_LOGIT_BIAS, SamplingParams, fused_sample
 
 __all__ = [
@@ -42,6 +44,12 @@ __all__ = [
     "ClusterStats",
     "ReconfigureReport",
     "Router",
+    # paged KV
+    "BlockPool",
+    "PoolStats",
+    "blocks_for",
+    "RadixPrefixCache",
+    "PrefixStats",
     # placement
     "PlacementBackend",
     "DefaultBackend",

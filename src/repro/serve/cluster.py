@@ -246,6 +246,9 @@ class ServeCluster:
         unified: Optional[bool] = None,
         prefill_budget: int = 64,
         max_chunk: int = 8,
+        kv_block_size: Optional[int] = None,
+        num_blocks: Optional[int] = None,
+        prefix_cache: bool = False,
         tenant_defaults: Optional[Mapping[str, SamplingParams]] = None,
     ) -> None:
         self.model = model
@@ -253,12 +256,19 @@ class ServeCluster:
         self.devices = list(devices) if devices is not None else list(jax.devices())
         assert self.devices, "ServeCluster needs at least one device"
         self.seed = seed
+        # paged kwargs pass straight through: split mode gets one
+        # independent pool + prefix tree PER replica (tenant-affinity
+        # routing then doubles as prefix locality — a tenant's repeated
+        # system prompt stays hot on its home replica's tree)
         self._engine_kw = dict(
             batch_slots=batch_slots,
             max_len=max_len,
             unified=unified,
             prefill_budget=prefill_budget,
             max_chunk=max_chunk,
+            kv_block_size=kv_block_size,
+            num_blocks=num_blocks,
+            prefix_cache=prefix_cache,
         )
         self.router = Router(len(self.devices))
         self.finished: list[Request] = []

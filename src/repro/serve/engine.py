@@ -79,6 +79,8 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serve.backend import PlacementBackend, resolve_backend
+from repro.serve.kv_pool import BlockPool, blocks_for
+from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.sampling import (
     SMODE_GREEDY,
     SamplingParams,
@@ -304,6 +306,9 @@ class ServeEngine:
         prefill_budget: int = 64,
         max_chunk: int = 8,
         backend: Optional[PlacementBackend] = None,
+        kv_block_size: Optional[int] = None,
+        num_blocks: Optional[int] = None,
+        prefix_cache: bool = False,
     ):
         self.model = model
         # EVERY host→device crossing goes through the backend: the engine
@@ -323,7 +328,50 @@ class ServeEngine:
             )
         self.prefill_budget = max(int(prefill_budget), 1)
         self.max_chunk = max(int(max_chunk), 1)
-        self.cache = self.backend.put_cache(model, model.init_cache(batch_slots, max_len))
+        # block-paged KV mode (kv_block_size set): the dense [B, S_max]
+        # cache becomes a [num_blocks, block_size] pool + per-slot block
+        # tables (serve/kv_pool.py). Opt-in — the dense path below stays
+        # byte-identical for existing callers (and the gated steady bench).
+        self.kv_block_size = int(kv_block_size) if kv_block_size else 0
+        self.paged = bool(self.kv_block_size)
+        if self.paged:
+            if not self.unified:
+                raise ValueError("paged KV serving requires the unified engine")
+            if max_len % self.kv_block_size:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of "
+                    f"kv_block_size={self.kv_block_size}"
+                )
+            self._maxb = max_len // self.kv_block_size  # table width
+            # default pool = byte parity with the dense cache; capacity
+            # deployments pass more slots than the pool could worst-case
+            # hold and let admission wait on pool pressure instead
+            self.num_blocks = (
+                int(num_blocks) if num_blocks else batch_slots * self._maxb
+            )
+            self.pool = BlockPool(self.num_blocks, self.kv_block_size)
+            self.prefix = (
+                RadixPrefixCache(self.pool, self.kv_block_size)
+                if prefix_cache else None
+            )
+            self.cache = self.backend.put_cache(
+                model, model.init_kv_pool(self.num_blocks, self.kv_block_size)
+            )
+            # per-slot block lists (host) + the [B, max_blocks] device
+            # table; unallocated entries hold the out-of-range sentinel
+            # num_blocks, so their scatters drop and their tiles are dead
+            self._slot_blocks: list[list[int]] = [[] for _ in range(batch_slots)]
+            self._btab_h = np.full(
+                (batch_slots, self._maxb), self.num_blocks, np.int32
+            )
+            self._btab = self.backend.put_host(self._btab_h.copy())
+            self._btab_dirty = False
+        else:
+            if prefix_cache:
+                raise ValueError("prefix_cache=True requires kv_block_size")
+            self.pool = None
+            self.prefix = None
+            self.cache = self.backend.put_cache(model, model.init_cache(batch_slots, max_len))
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_len = np.zeros(batch_slots, np.int32)  # host mirror (counts)
         self.slot_fed = np.zeros(batch_slots, np.int32)  # prompt tokens fed
@@ -362,6 +410,17 @@ class ServeEngine:
         self._admit_prog = self.backend.jit(
             self._admit_fn, donate_argnums=(1,), static_argnames=("smode",)
         )
+        if self.paged:
+            # the paged twins of _tick/_packed: identical programs with the
+            # block table threaded through to the (block, offset) dispatch
+            self._tick_paged = self.backend.jit(
+                self._tick_paged_fn, donate_argnums=(1,),
+                static_argnames=("n_steps", "smode"),
+            )
+            self._packed_paged = self.backend.jit(
+                self._packed_paged_fn, donate_argnums=(1,),
+                static_argnames=("smode",),
+            )
         # the legacy first-token path jits the SAME fused sampler on a
         # one-row batch: host and device sampling cannot drift apart.
         # sampf = [temperature, top_p] f32, sampi = [top_k, seed] i32 —
@@ -487,6 +546,60 @@ class ServeEngine:
             step, (last_tok, cur_len, cache), None, length=n_steps
         )
         return toks, last_tok, cur_len, cache
+
+    def _tick_paged_fn(self, params, cache, btab, last_tok, cur_len, lanes,
+                       spf, spi, btok, bval, n_steps: int = 1, smode: int = 0):
+        """The decode-chunk program over the block-paged pool: identical to
+        :meth:`_tick_fn` except the model step resolves every (slot,
+        cur_len) through ``btab`` — the per-request reconfiguration is a
+        host-written table consulted by the index maps, never a hot-loop
+        cost (a chunk with an unchanged slot set re-uses the resident
+        table and ships ZERO host arrays, exactly like the dense path)."""
+        ov_mask = lanes[0].astype(bool)
+        active = lanes[3].astype(bool)
+        last_tok = jnp.where(ov_mask, lanes[1], last_tok)
+        cur_len = jnp.where(ov_mask, lanes[2], cur_len)
+        adv = lanes[3]
+
+        def step(carry, _):
+            tok, cl, cache = carry
+            logits, cache = self.model.decode_step(
+                params, cache, {"tokens": tok[:, None]}, cl, block_tables=btab
+            )
+            new = fused_sample(
+                logits[:, 0], spf[0], spi[0], spf[1], spi[1], cl,
+                btok, bval, smode=smode,
+            )
+            tok = jnp.where(active, new, tok)
+            return (tok, cl + adv, cache), tok
+
+        (last_tok, cur_len, cache), toks = jax.lax.scan(
+            step, (last_tok, cur_len, cache), None, length=n_steps
+        )
+        return toks, last_tok, cur_len, cache
+
+    def _packed_paged_fn(self, params, cache, btab, last_tok, desc, meta,
+                         spf, spi, btok, bval, smode: int = 0):
+        """The ragged-pack program over the block-paged pool: identical to
+        :meth:`_packed_fn` with the block table threaded to the paged
+        scatter/attention. Same descriptors, same meta layout, same
+        sampling — which is why paged greedy streams are bit-identical to
+        the dense engine's."""
+        b = self.B
+        new_len = meta[:b]
+        sample_idx = meta[b : 2 * b]
+        sample_mask = meta[2 * b : 3 * b].astype(bool)
+        pack_slots = meta[3 * b :]
+        logits, cache = self.model.packed_step(
+            params, cache, desc[0], desc[1], desc[2],
+            out_rows=sample_idx, pack_slots=pack_slots, block_tables=btab,
+        )
+        sampled = fused_sample(
+            logits, spf[0], spi[0], spf[1], spi[1], new_len - 1,
+            btok, bval, smode=smode,
+        )
+        last_tok = jnp.where(sample_mask, sampled, last_tok)
+        return sampled, last_tok, new_len, cache
 
     def _packed_fn(self, params, cache, last_tok, desc, meta, spf, spi,
                    btok, bval, smode: int = 0):
@@ -703,6 +816,31 @@ class ServeEngine:
         self._dirty = False
         return self.backend.put_host(lanes)
 
+    def _flush_btab(self):
+        """Upload the block table if any slot's mapping changed; returns
+        the device-resident [B, max_blocks] table. Steady-state chunks with
+        an unchanged slot set reuse the resident copy (no upload). The
+        fresh ``copy()`` matters: releasing a slot NB's its host row, and
+        the NEXT dispatch must see that before the freed blocks can be
+        re-scattered by a new owner — handing jax a live staging buffer the
+        host later mutates races the in-flight dispatch."""
+        if self._btab_dirty:
+            self._btab = self.backend.put_host(self._btab_h.copy())
+            self._btab_dirty = False
+        return self._btab
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        """Drop the slot's references on its blocks (finish/cancel). Blocks
+        the prefix tree retains keep their references and stay resident; the
+        rest return to the free list and are re-admittable immediately —
+        any in-flight dispatch that still reads them was enqueued before
+        the next owner's scatter, so device ordering keeps it correct
+        (the same argument as dense slot reuse)."""
+        self.pool.release_all(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self._btab_h[slot, :] = self.num_blocks
+        self._btab_dirty = True
+
     # ------------------------------------------------------------------ API
 
     def prewarm(self, sampling: bool = False) -> None:
@@ -723,11 +861,21 @@ class ServeEngine:
         k = 1
         while k <= self.max_chunk:
             for sm in smodes:
-                toks, _lt, _cl, self.cache = self._tick(
-                    self.params, self.cache, self._last_tok, self._cur_len,
-                    self._lanes_idle, self._spf, self._spi, self._btok,
-                    self._bval, n_steps=k, smode=sm,
-                )
+                if self.paged:
+                    # all-sentinel block table: every scatter drops, every
+                    # gather clamps — the pool is untouched by the warmup
+                    toks, _lt, _cl, self.cache = self._tick_paged(
+                        self.params, self.cache, self._btab,
+                        self._last_tok, self._cur_len,
+                        self._lanes_idle, self._spf, self._spi, self._btok,
+                        self._bval, n_steps=k, smode=sm,
+                    )
+                else:
+                    toks, _lt, _cl, self.cache = self._tick(
+                        self.params, self.cache, self._last_tok, self._cur_len,
+                        self._lanes_idle, self._spf, self._spi, self._btok,
+                        self._bval, n_steps=k, smode=sm,
+                    )
                 jax.block_until_ready(toks)
             k *= 2
         if not self.unified:
@@ -762,13 +910,24 @@ class ServeEngine:
                 ]
             )
             for sm in smodes:
-                toks, _lt, _cl, self.cache = self._packed(
-                    self.params, self.cache, self._last_tok,
-                    self.backend.put_host(desc), self.backend.put_host(meta),
-                    self._spf, self._spi, self._btok, self._bval, smode=sm,
-                )
+                if self.paged:
+                    toks, _lt, _cl, self.cache = self._packed_paged(
+                        self.params, self.cache, self._btab, self._last_tok,
+                        self.backend.put_host(desc), self.backend.put_host(meta),
+                        self._spf, self._spi, self._btok, self._bval, smode=sm,
+                    )
+                else:
+                    toks, _lt, _cl, self.cache = self._packed(
+                        self.params, self.cache, self._last_tok,
+                        self.backend.put_host(desc), self.backend.put_host(meta),
+                        self._spf, self._spi, self._btok, self._bval, smode=sm,
+                    )
                 jax.block_until_ready(toks)
             self._packed_shapes.add(tb)
+        if self.paged:
+            # paged admission routes every request through the packed tier
+            # (one code path writes the pool) — no fused-admission shapes
+            return
         # the EXACT prompt buckets _admit_unified can produce: every power
         # of two up to the fused-tier limit, plus the max_len-capped bucket
         # a non-pow2 max_len introduces
@@ -819,9 +978,29 @@ class ServeEngine:
         self._ov_tok_h[:] = 0
         self._ov_len_h[:] = 0
         self._dirty = False
+        if self.paged:
+            if self.prefix is not None:
+                self.prefix.clear()
+            self.pool.reset()
+            self._slot_blocks = [[] for _ in range(self.B)]
+            self._btab_h[:] = self.num_blocks
+            self._btab = self.backend.put_host(self._btab_h.copy())
+            self._btab_dirty = False
 
     def submit(self, req: Request) -> RequestHandle:
         assert len(req.prompt) < self.max_len, (len(req.prompt), self.max_len)
+        if self.paged:
+            need = blocks_for(
+                len(req.prompt), req.params.max_new, self.max_len,
+                self.kv_block_size,
+            )
+            if need > self.num_blocks:
+                # an admission-time wait could never resolve — reject at
+                # the submission boundary instead of spinning forever
+                raise ValueError(
+                    f"request needs {need} KV blocks, pool holds "
+                    f"{self.num_blocks}"
+                )
         req.submitted_at = time.perf_counter()
         self.waiting.append(req)
         return RequestHandle(req, self)
@@ -863,6 +1042,8 @@ class ServeEngine:
                         self.slot_fed[slot] = 0
                         if slot in self._prefilling:
                             self._prefilling.remove(slot)
+                        if self.paged:  # cancel frees the blocks mid-stream
+                            self._release_slot_blocks(slot)
                         self._ov_mask_h[slot] = False  # unflushed admission override
                         self._dirty = True
                 req.finish_reason = "cancelled"
@@ -890,6 +1071,8 @@ class ServeEngine:
         self._done_now.append(req)
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        if self.paged:
+            self._release_slot_blocks(slot)
         if stats is not None:
             stats.total_requests += 1
         self._dirty = True
@@ -977,6 +1160,63 @@ class ServeEngine:
                 if req.n_generated >= req.params.max_new:  # bookkeeping)
                     self._finish(req, slot, stats)
 
+    def _admit_paged(self, stats) -> None:
+        """Paged admission: consult the prefix tree, reserve the request's
+        ENTIRE worst-case block table, and bind the slot to the chunked
+        ragged tier starting at the first unmatched position.
+
+        * The radix tree (when enabled) yields the longest block-aligned
+          shared prefix; those blocks enter the table read-only and
+          ``slot_fed`` starts past them — matched tokens are never re-fed,
+          so a repeated system prompt's prefill collapses to its tail
+          (admission TTFT ∝ unmatched tokens).
+        * Allocation is all-or-nothing and up front (``blocks_for``):
+          decode can never run out of blocks mid-stream, and pool pressure
+          surfaces exactly here — the request stays at the head of the
+          queue and WAITS (after trying LRU eviction of tree-only blocks)
+          until a finishing request frees capacity. Nothing crashes, no
+          other slot is perturbed.
+        * Every admission — even a one-token prompt — runs the packed
+          tier: one code path writes the pool, so the COW invariant
+          (shared blocks are never scattered into) has a single proof
+          point.
+        """
+        for slot in range(self.B):
+            while self.slot_req[slot] is None and self.waiting:
+                req = self.waiting[0]
+                self._bind(req)
+                s = len(req.prompt)
+                need_total = blocks_for(
+                    s, req.params.max_new, self.max_len, self.kv_block_size
+                )
+                shared: list[int] = []
+                matched = 0
+                if self.prefix is not None:
+                    shared, matched = self.prefix.match(req.prompt)
+                need = need_total - len(shared)
+                if not self.pool.can_alloc(need):
+                    if self.prefix is not None:
+                        self.prefix.evict(need - self.pool.free)
+                    if not self.pool.can_alloc(need):
+                        # pool exhausted: release the matched references
+                        # and leave the request waiting, FCFS order intact
+                        self.pool.alloc_failures += 1
+                        self.pool.release_all(shared)
+                        return
+                self.waiting.popleft()
+                blocks = shared + self.pool.alloc(need)
+                self._slot_blocks[slot] = blocks
+                row = self._btab_h[slot]
+                row[:] = self.num_blocks
+                row[: len(blocks)] = blocks
+                self._btab_dirty = True
+                self.slot_req[slot] = req
+                self._sp_fresh = False  # a new occupant's row must upload
+                self._dirty = True
+                self.slot_len[slot] = matched
+                self.slot_fed[slot] = matched
+                self._prefilling.append(slot)
+
     # ------------------------------------------------------------ tick paths
 
     def _packed_tick(self, stats: ServeStats, pending: deque) -> None:
@@ -1046,17 +1286,39 @@ class ServeEngine:
         else:
             spf, spi, btok, bval = self._sp0
 
-        toks, self._last_tok, self._cur_len, self.cache = (
-            self._packed(
-                self.params, self.cache, self._last_tok,
-                self.backend.put_host(desc), self.backend.put_host(meta),
-                spf, spi, btok, bval,
-                smode=smode,
+        if self.paged:
+            toks, self._last_tok, self._cur_len, self.cache = (
+                self._packed_paged(
+                    self.params, self.cache, self._flush_btab(),
+                    self._last_tok,
+                    self.backend.put_host(desc), self.backend.put_host(meta),
+                    spf, spi, btok, bval,
+                    smode=smode,
+                )
             )
-        )
+        else:
+            toks, self._last_tok, self._cur_len, self.cache = (
+                self._packed(
+                    self.params, self.cache, self._last_tok,
+                    self.backend.put_host(desc), self.backend.put_host(meta),
+                    spf, spi, btok, bval,
+                    smode=smode,
+                )
+            )
         stats.ticks += 1
 
         if completed:
+            if self.paged and self.prefix is not None:
+                # the prompt's K/V now exists in this slot's blocks (the
+                # dispatch above is ordered before any future reader) —
+                # register its full prompt blocks so later requests skip
+                # them. Insert BEFORE any instant finish below: the tree
+                # takes its own references, so the blocks outlive the
+                # request until evicted.
+                for i in completed:
+                    self.prefix.insert(
+                        self.slot_req[i].prompt, self._slot_blocks[i]
+                    )
             items = []
             for i in completed:
                 req = self.slot_req[i]
@@ -1090,13 +1352,23 @@ class ServeEngine:
             k *= 2
         smode = max(self.slot_req[i]._smode for i in active)
         lanes = self._flush_events()
-        toks, self._last_tok, self._cur_len, self.cache = (
-            self._tick(
-                self.params, self.cache, self._last_tok, self._cur_len,
-                lanes, self._spf, self._spi, self._btok, self._bval,
-                n_steps=k, smode=smode,
+        if self.paged:
+            toks, self._last_tok, self._cur_len, self.cache = (
+                self._tick_paged(
+                    self.params, self.cache, self._flush_btab(),
+                    self._last_tok, self._cur_len,
+                    lanes, self._spf, self._spi, self._btok, self._bval,
+                    n_steps=k, smode=smode,
+                )
             )
-        )
+        else:
+            toks, self._last_tok, self._cur_len, self.cache = (
+                self._tick(
+                    self.params, self.cache, self._last_tok, self._cur_len,
+                    lanes, self._spf, self._spi, self._btok, self._bval,
+                    n_steps=k, smode=smode,
+                )
+            )
         stats.ticks += k
         pending.append(("chunk", toks, [(i, self.slot_req[i]) for i in active], stats))
         # bookkeeping needs only COUNTS — token values are harvested a
@@ -1119,7 +1391,9 @@ class ServeEngine:
         dispatch. Returns whether any work remains."""
         self._apply_cancels(stats)
         self._release_stopped(stats)
-        if self.unified:
+        if self.paged:
+            self._admit_paged(stats)
+        elif self.unified:
             self._admit_unified(stats, self._pending)
         else:
             self._admit(stats)

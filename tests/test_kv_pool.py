@@ -1,0 +1,187 @@
+"""Block pool allocator and radix prefix tree: pure-host unit tests (no
+model, no device work) for the invariants the paged serving path leans on
+— refcounted sharing, exhaustion behavior, LRU leaf eviction, and the
+block-aligned match/insert contract."""
+
+import numpy as np
+import pytest
+
+from repro.serve import BlockPool, RadixPrefixCache, blocks_for
+
+# ---------------------------------------------------------------- blocks_for
+
+
+def test_blocks_for_worst_case_rounding():
+    # total = min(prompt + max_new, max_len), rounded up to whole blocks
+    assert blocks_for(1, 1, 64, 8) == 1
+    assert blocks_for(8, 0, 64, 8) == 1
+    assert blocks_for(8, 1, 64, 8) == 2
+    assert blocks_for(30, 6, 64, 8) == 5  # 36 tokens -> 5 blocks
+    assert blocks_for(60, 100, 64, 8) == 8  # capped by max_len
+
+
+# ---------------------------------------------------------------- BlockPool
+
+
+def test_pool_alloc_free_roundtrip():
+    p = BlockPool(8, 4)
+    a = p.alloc(3)
+    assert len(a) == 3 and len(set(a)) == 3
+    assert p.used == 3 and p.free == 5
+    assert all(p.refcount[b] == 1 for b in a)
+    p.release_all(a)
+    assert p.used == 0 and p.free == 8
+    assert all(p.refcount[b] == 0 for b in a)
+
+
+def test_pool_alloc_exhaustion_raises():
+    p = BlockPool(4, 4)
+    p.alloc(4)
+    assert not p.can_alloc(1)
+    with pytest.raises(RuntimeError):
+        p.alloc(1)
+    # a failed alloc must not leak partial allocations
+    assert p.free == 0 and p.used == 4
+
+
+def test_pool_refcount_sharing():
+    p = BlockPool(4, 4)
+    (b,) = p.alloc(1)
+    p.acquire(b)  # a second holder (e.g. the prefix tree)
+    assert p.refcount[b] == 2
+    p.release(b)
+    assert p.refcount[b] == 1 and p.used == 1  # still held
+    p.release(b)
+    assert p.refcount[b] == 0 and p.free == 4  # last ref frees
+    with pytest.raises(AssertionError):
+        p.release(b)  # double-free is a bug, not a no-op
+
+
+def test_pool_reset_and_stats():
+    p = BlockPool(6, 8)
+    p.alloc(5)
+    p.reset()
+    s = p.stats()
+    assert s.free_blocks == 6 and s.used_blocks == 0
+    assert p.alloc(6)  # full capacity available again
+
+
+# ---------------------------------------------------------- RadixPrefixCache
+
+
+def test_radix_match_is_block_aligned_and_acquires():
+    pool = BlockPool(16, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(10, dtype=np.int32)  # blocks [0:4], [4:8]; tail 8:10
+    table = pool.alloc(3)
+    tree.insert(prompt, table)
+    # the tree took its own reference on each full-block node
+    assert all(pool.refcount[b] == 2 for b in table[:2])
+    assert pool.refcount[table[2]] == 1  # tail block: not a tree node
+
+    shared, matched = tree.match(prompt)
+    assert matched == 8 and shared == table[:2]
+    # match() acquires immediately — an evict between match and admission
+    # can never free these
+    assert all(pool.refcount[b] == 3 for b in table[:2])
+
+
+def test_radix_match_caps_below_full_prompt():
+    """A prompt consisting ENTIRELY of cached blocks still leaves >= 1
+    token unfed (the engine must feed something to sample from)."""
+    pool = BlockPool(16, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(8, dtype=np.int32)  # exactly 2 blocks
+    table = pool.alloc(2)
+    tree.insert(prompt, table)
+    shared, matched = tree.match(prompt)
+    assert matched == 4 and len(shared) == 1  # capped at (8-1)//4 = 1 block
+
+
+def test_radix_divergence_matches_common_blocks_only():
+    pool = BlockPool(16, 4)
+    tree = RadixPrefixCache(pool, 4)
+    a = np.concatenate([np.arange(8), [90, 91]]).astype(np.int32)
+    ta = pool.alloc(3)
+    tree.insert(a, ta)
+    # same first block, diverges inside the second
+    b = np.concatenate([np.arange(4), [50, 51, 52, 53], [92]]).astype(np.int32)
+    shared, matched = tree.match(b)
+    assert matched == 4 and shared == ta[:1]
+    pool.release_all(shared)
+
+
+def test_radix_lru_evict_frees_leaves_only():
+    pool = BlockPool(4, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(12, dtype=np.int32)
+    table = pool.alloc(3)
+    tree.insert(prompt, table)
+    pool.release_all(table)  # request finished; only the tree holds refs
+    assert pool.free == 1  # 3 nodes resident
+    # evicting one block must take the LEAF (deepest node), not the root
+    assert tree.evict(1) == 1
+    assert pool.refcount[table[2]] == 0
+    assert pool.refcount[table[0]] == 1
+    # eviction repeats as parents become leaves
+    assert tree.evict(2) == 2
+    assert pool.free == 4 and tree.stats().nodes == 0
+
+
+def test_radix_evict_skips_in_use_blocks():
+    pool = BlockPool(4, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(8, dtype=np.int32)
+    table = pool.alloc(2)
+    tree.insert(prompt, table)  # refcount 2 on both (slot + tree)
+    # a resident request still holds its refs: nothing is evictable
+    assert tree.evict(2) == 0
+    assert pool.used == 2
+    pool.release_all(table)
+    assert tree.evict(2) == 2  # now they go
+
+
+def test_radix_lru_order():
+    pool = BlockPool(8, 4)
+    tree = RadixPrefixCache(pool, 4)
+    # length 5: one full (matchable) block plus the never-matched last token
+    a = np.arange(5, dtype=np.int32)
+    b = np.arange(50, 55, dtype=np.int32)
+    ta, tb = pool.alloc(1), pool.alloc(1)
+    tree.insert(a, ta)
+    tree.insert(b, tb)
+    pool.release_all(ta + tb)
+    shared, matched = tree.match(a)  # touch a: b becomes least-recent
+    assert matched == 4 and shared == ta
+    pool.release_all(shared)  # drop match()'s reference again
+    assert tree.evict(1) == 1
+    assert pool.refcount[tb[0]] == 0  # b evicted
+    assert pool.refcount[ta[0]] == 1  # a survives
+
+
+def test_radix_insert_is_idempotent_and_keeps_first_blocks():
+    """Two requests racing the same cold prefix: the first insert wins,
+    the second request's duplicate blocks stay private to it (released
+    when it finishes) — the tree never double-acquires."""
+    pool = BlockPool(8, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(8, dtype=np.int32)
+    t1, t2 = pool.alloc(2), pool.alloc(2)
+    tree.insert(prompt, t1)
+    tree.insert(prompt, t2)  # same keys: no new nodes, no refs taken
+    assert tree.stats().nodes == 2
+    assert all(pool.refcount[b] == 2 for b in t1)
+    assert all(pool.refcount[b] == 1 for b in t2)
+    pool.release_all(t1 + t2)
+    assert pool.used == 2  # only the tree's copies remain
+
+
+def test_radix_clear_releases_everything():
+    pool = BlockPool(8, 4)
+    tree = RadixPrefixCache(pool, 4)
+    prompt = np.arange(12, dtype=np.int32)
+    table = pool.alloc(3)
+    tree.insert(prompt, table)
+    pool.release_all(table)
+    tree.clear()
+    assert pool.free == 8 and tree.stats().nodes == 0

@@ -1,5 +1,5 @@
 """Sharding-rule unit tests, including the L-dim regression that once cost
-6×7 GB of involuntary all-gathers (EXPERIMENTS §Perf #0)."""
+6×7 GB of involuntary all-gathers (caught in the dry-run artifact)."""
 
 import numpy as np
 import pytest
