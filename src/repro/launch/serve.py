@@ -19,7 +19,13 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
-from repro.serve import Request, SamplingParams, ServeCluster, ServeEngine
+from repro.serve import (
+    Request,
+    SamplingParams,
+    ServeCluster,
+    ServeEngine,
+    SpeculateConfig,
+)
 
 
 def _resolve_auto(n_devices: int, n_requests: int, slots: int) -> str:
@@ -97,6 +103,18 @@ def main() -> None:
         "--prefix-cache", action="store_true",
         help="radix prefix reuse across requests (requires --kv-block-size)",
     )
+    ap.add_argument(
+        "--speculate", default="off",
+        help="speculative decoding: 'off' (default), 'ngram' (prompt-lookup "
+        "drafter, zero extra weights), 'draft' (1-layer truncated-self "
+        "draft model) or 'draft:<arch>' (separate draft architecture). "
+        "Output is bit-identical to --speculate off for seeded requests",
+    )
+    ap.add_argument(
+        "--spec-k", type=int, default=None,
+        help="max speculation depth (proposed tokens per slot per verify "
+        "dispatch); default 8, adaptively shrunk per slot by acceptance",
+    )
     args = ap.parse_args()
     if args.prefix_cache and not args.kv_block_size:
         ap.error("--prefix-cache requires --kv-block-size")
@@ -111,10 +129,13 @@ def main() -> None:
     if mode == "auto":
         mode = _resolve_auto(len(jax.devices()), args.requests, args.slots)
         print(f"cluster-mode auto -> {mode}")
+    spec_kw = {} if args.spec_k is None else {"k": args.spec_k}
+    speculate = SpeculateConfig.parse(args.speculate, **spec_kw)
     common = dict(
         batch_slots=args.slots, max_len=args.max_len, seed=args.seed,
         unified=args.unified, kv_block_size=args.kv_block_size,
         num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
+        speculate=speculate,
     )
     if mode == "single":
         target = ServeEngine(model, params, **common)
@@ -170,6 +191,13 @@ def main() -> None:
         f"TTFT p50={stats.ttft_p50*1e3:.1f}ms p99={stats.ttft_p99*1e3:.1f}ms  "
         f"TPOT p50={stats.tpot_p50*1e3:.2f}ms p99={stats.tpot_p99*1e3:.2f}ms"
     )
+    if speculate is not None:
+        print(
+            f"speculate[{speculate.mode}]: "
+            f"accepted {stats.spec_accepted}/{stats.spec_proposed} drafts "
+            f"({stats.spec_acceptance:.0%}) over "
+            f"{stats.spec_ticks} verify dispatches"
+        )
     if args.kv_block_size:
         engines = [target] if mode == "single" else target.engines
         for i, e in enumerate(engines):

@@ -27,7 +27,18 @@ from repro.serve.cluster import (
 from repro.serve.engine import Request, RequestHandle, ServeEngine, ServeStats
 from repro.serve.kv_pool import BlockPool, PoolStats, blocks_for
 from repro.serve.prefix_cache import PrefixStats, RadixPrefixCache
-from repro.serve.sampling import MAX_LOGIT_BIAS, SamplingParams, fused_sample
+from repro.serve.sampling import (
+    MAX_LOGIT_BIAS,
+    SamplingParams,
+    fused_sample,
+    spec_verify,
+)
+from repro.serve.speculate import (
+    ModelDrafter,
+    NGramDrafter,
+    SpeculateConfig,
+    build_drafter,
+)
 
 __all__ = [
     # request lifecycle
@@ -44,6 +55,12 @@ __all__ = [
     "ClusterStats",
     "ReconfigureReport",
     "Router",
+    # speculative decoding
+    "SpeculateConfig",
+    "NGramDrafter",
+    "ModelDrafter",
+    "build_drafter",
+    "spec_verify",
     # paged KV
     "BlockPool",
     "PoolStats",

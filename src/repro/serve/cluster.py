@@ -178,6 +178,22 @@ class ClusterStats:
         return sum(self._each("cancelled"))
 
     @property
+    def spec_proposed(self) -> int:
+        return sum(self._each("spec_proposed"))
+
+    @property
+    def spec_accepted(self) -> int:
+        return sum(self._each("spec_accepted"))
+
+    @property
+    def spec_ticks(self) -> int:
+        return sum(self._each("spec_ticks"))
+
+    @property
+    def spec_acceptance(self) -> float:
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    @property
     def wall_seconds(self) -> float:
         # replicas within a segment run concurrently (max); segments and
         # reconfigurations are sequential (sum). A reconfigure's DRAIN
@@ -249,6 +265,7 @@ class ServeCluster:
         kv_block_size: Optional[int] = None,
         num_blocks: Optional[int] = None,
         prefix_cache: bool = False,
+        speculate=None,
         tenant_defaults: Optional[Mapping[str, SamplingParams]] = None,
     ) -> None:
         self.model = model
@@ -269,6 +286,12 @@ class ServeCluster:
             kv_block_size=kv_block_size,
             num_blocks=num_blocks,
             prefix_cache=prefix_cache,
+            # each engine builds its own drafter from the config string —
+            # a split replica drafts against its local slots, the merged
+            # engine against the whole batch; seeded streams stay
+            # bit-identical across modes because acceptance is exact-match
+            # against the same fold_in(seed, position) draws
+            speculate=speculate,
         )
         self.router = Router(len(self.devices))
         self.finished: list[Request] = []

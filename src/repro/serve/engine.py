@@ -39,6 +39,20 @@ being admitted or cancelled never perturbs anyone else's tokens. The
 all-greedy fast path (smode 0) skips threefry/bias/sort entirely and is
 bit-identical to the pre-SamplingParams engine.
 
+Speculative decoding (``speculate=``, :mod:`repro.serve.speculate`) rides
+the same packed ragged dispatch: a host-side drafter (n-gram prompt
+lookup, or a small draft model) proposes up to ``k`` tokens per decoding
+slot, ONE packed dispatch scores all ``k+1`` positions per slot
+(scattering the proposals' K/V at their hypothetical positions), and the
+seeded fold_in sampler draws the target token at every position in the
+same dispatch. Because every draw is a pure function of (context, seed,
+position), acceptance is plain exact-match — a speculated stream is
+bit-identical to its non-speculated twin BY CONSTRUCTION, not merely in
+distribution. Rejected positions need no rollback: host bookkeeping never
+advanced past the committed prefix, and stale K/V beyond ``cur_len`` is
+masked by the position predicate until overwritten (the paged engine
+releases nothing — block tables reserve the worst case at admission).
+
 Request lifecycle: :meth:`ServeEngine.submit` returns a
 :class:`RequestHandle` — an incremental token iterator with ``cancel()``;
 ``run()`` is rebuilt on the same per-iteration step machinery
@@ -87,7 +101,9 @@ from repro.serve.sampling import (
     bias_row,
     fused_sample,
     param_rows,
+    spec_verify,
 )
+from repro.serve.speculate import SpeculateConfig, build_drafter
 
 
 @dataclass(eq=False)
@@ -240,6 +256,12 @@ class ServeStats:
     wall_seconds: float = 0.0
     ticks: int = 0
     prefill_compiles: int = 0
+    # speculative decoding telemetry (0 unless the engine speculates):
+    # proposed = draft tokens dispatched to verify, accepted = drafts that
+    # matched their seeded target draw (the bonus token is neither)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_ticks: int = 0
     # per-request latency samples for the requests finished in this run:
     # TTFT = first token available - submitted; TPOT = mean inter-token time
     ttfts: list[float] = field(default_factory=list)
@@ -248,6 +270,11 @@ class ServeStats:
     @property
     def tokens_per_sec(self) -> float:
         return self.total_tokens / max(self.wall_seconds, 1e-9)
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of dispatched draft tokens that matched their target."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
 
     @property
     def ttft_p50(self) -> float:
@@ -309,6 +336,7 @@ class ServeEngine:
         kv_block_size: Optional[int] = None,
         num_blocks: Optional[int] = None,
         prefix_cache: bool = False,
+        speculate=None,
     ):
         self.model = model
         # EVERY host→device crossing goes through the backend: the engine
@@ -328,6 +356,36 @@ class ServeEngine:
             )
         self.prefill_budget = max(int(prefill_budget), 1)
         self.max_chunk = max(int(max_chunk), 1)
+        # speculative decoding (serve/speculate.py): a drafter proposes up
+        # to spec_k tokens per decoding slot and ONE packed verify dispatch
+        # scores every (slot, offset) row; accepted prefixes commit through
+        # the normal harvest path. `speculate` accepts a CLI-style string
+        # ("ngram" | "draft[:<arch>]"), a SpeculateConfig, or a bound
+        # Drafter instance (anything with .propose).
+        self.spec: Optional[SpeculateConfig] = None
+        self.drafter = None
+        if speculate not in (None, False, "off"):
+            if not self.unified:
+                raise ValueError(
+                    "speculative decoding needs the unified packed dispatch"
+                )
+            if hasattr(speculate, "propose"):  # a pre-built Drafter
+                self.spec = SpeculateConfig(
+                    mode="draft" if getattr(speculate, "name", "") == "draft"
+                    else "ngram"
+                )
+                self.drafter = speculate
+            else:
+                self.spec = SpeculateConfig.coerce(speculate)
+                self.drafter = build_drafter(self.spec, model, params)
+            self.spec_k = min(int(self.spec.k), max(max_len // 2, 1))
+            self.drafter.setup(
+                self.backend, batch_slots, max_len, model.cfg.vocab_size
+            )
+            # per-slot acceptance EWMA drives the adaptive depth (optimistic
+            # start: a fresh slot tries the full depth, misses shrink it)
+            self._spec_ewma = np.ones(batch_slots)
+            self._spec_shapes: set[tuple[int, int]] = set()
         # block-paged KV mode (kv_block_size set): the dense [B, S_max]
         # cache becomes a [num_blocks, block_size] pool + per-slot block
         # tables (serve/kv_pool.py). Opt-in — the dense path below stays
@@ -421,6 +479,20 @@ class ServeEngine:
                 self._packed_paged_fn, donate_argnums=(1,),
                 static_argnames=("smode",),
             )
+        if self.spec is not None:
+            # verify programs compile at EXACT T = B*(K+1) per depth bucket
+            # (K in {1,2,4,..,spec_k}): a handful of depths, so exact shapes
+            # beat ladder padding — every padded row is a wasted model+
+            # sampler row on the verify hot path
+            self._spec_prog = self.backend.jit(
+                self._spec_fn, donate_argnums=(1,),
+                static_argnames=("depth_k", "smode"),
+            )
+            if self.paged:
+                self._spec_prog_paged = self.backend.jit(
+                    self._spec_paged_fn, donate_argnums=(1,),
+                    static_argnames=("depth_k", "smode"),
+                )
         # the legacy first-token path jits the SAME fused sampler on a
         # one-row batch: host and device sampling cannot drift apart.
         # sampf = [temperature, top_p] f32, sampi = [top_k, seed] i32 —
@@ -499,6 +571,10 @@ class ServeEngine:
         req._seed = p.seed if p.seed is not None else int(self.rng.integers(1 << 31))
         req._stop = frozenset(p.stop)
         req._smode = p.smode
+        # per-tenant speculation toggle resolves once, at admission: an
+        # opted-out tenant's slots ride the verify dispatch at depth 0
+        # (exactly one sequential token per tick, nothing perturbed)
+        req._spec = self.spec is not None and self.spec.enabled_for(req.tenant)
         req._bound = True
 
     def _tick_fn(self, params, cache, last_tok, cur_len, lanes, spf, spi,
@@ -633,6 +709,72 @@ class ServeEngine:
         )
         last_tok = jnp.where(sample_mask, sampled, last_tok)
         return sampled, last_tok, new_len, cache
+
+    def _spec_fn(self, params, cache, last_tok, cur_len, pack, spf,
+                 spi, btok, bval, depth_k: int = 1, smode: int = 0):
+        """One draft-and-verify dispatch: the packed ragged model step over
+        slot-major verify rows ``[last_token, draft_1 .. draft_K]`` per
+        slot (T = B*(K+1), exact — no bucket padding), then the seeded
+        exact-match acceptance (:func:`spec_verify`) device-side.  The
+        verify pack reuses the SAME descriptors, scatter and ragged
+        attention as the prefill pack — row (i, j) scatters at (slot i,
+        pos cl+j) and attends kpos <= tok_pos, so each row sees exactly
+        the context plus the drafts before it, and the packed logits are
+        bitwise equal to j sequential decode steps.
+
+        ``pack`` is ONE [3, T + B] i32 upload — the first T columns the
+        usual (token, slot, position) descriptor triples, the trailing B
+        columns the per-slot meta rows (depth, active, cl); fusing them
+        halves the fixed per-upload dispatch cost, which profiles as a
+        measurable slice of the host-blocking verify tick.  Descriptor
+        rows past a slot's depth carry the out-of-range position sentinel
+        (scatter dropped) and a depth-masked acceptance.  Rejected rows
+        need no rollback: their K/V sits at positions >= the committed
+        ``cur_len``, invisible to every masked read and overwritten by the
+        next dispatch's scatters — the argument slot reuse already relies
+        on.  Inactive slots (mid-prefill neighbours) pass through
+        untouched.  Returns (targets [B, K+1], commit [B], last_tok,
+        cur_len, cache)."""
+        b, w = self.B, depth_k + 1
+        desc, meta = pack[:, : b * w], pack[:, b * w :]
+        depth, act, cl = meta[0], meta[1], meta[2]
+        active = act.astype(bool)
+        logits, cache = self.model.packed_step(
+            params, cache, desc[0], desc[1], desc[2]
+        )
+        drafts = desc[0][: b * w].reshape(b, w)[:, 1:]
+        targets, n_acc, commit = spec_verify(
+            logits[: b * w], drafts, depth, act, spf[0], spi[0], spf[1],
+            spi[1], cl, btok, bval, smode=smode,
+        )
+        last_tok = jnp.where(active, targets[jnp.arange(b), n_acc], last_tok)
+        cur_len = jnp.where(active, cl + commit, cur_len)
+        return targets, commit, last_tok, cur_len, cache
+
+    def _spec_paged_fn(self, params, cache, btab, last_tok, cur_len, pack,
+                       spf, spi, btok, bval, depth_k: int = 1,
+                       smode: int = 0):
+        """The verify program over the block-paged pool: identical to
+        :meth:`_spec_fn` with the block table threaded through.  Paged
+        speculation releases NOTHING on rejection — admission reserved the
+        slot's whole worst-case table, the verify rows only write
+        positions inside it (and past any shared prefix, so COW blocks are
+        never touched)."""
+        b, w = self.B, depth_k + 1
+        desc, meta = pack[:, : b * w], pack[:, b * w :]
+        depth, act, cl = meta[0], meta[1], meta[2]
+        active = act.astype(bool)
+        logits, cache = self.model.packed_step(
+            params, cache, desc[0], desc[1], desc[2], block_tables=btab
+        )
+        drafts = desc[0][: b * w].reshape(b, w)[:, 1:]
+        targets, n_acc, commit = spec_verify(
+            logits[: b * w], drafts, depth, act, spf[0], spi[0], spf[1],
+            spi[1], cl, btok, bval, smode=smode,
+        )
+        last_tok = jnp.where(active, targets[jnp.arange(b), n_acc], last_tok)
+        cur_len = jnp.where(active, cl + commit, cur_len)
+        return targets, commit, last_tok, cur_len, cache
 
     def _admit_fn(self, params, cache, toks, slot, last_pos, last_tok,
                   cur_len, sampf, sampi, btok, bval, smode: int = 0):
@@ -924,6 +1066,37 @@ class ServeEngine:
                     )
                 jax.block_until_ready(toks)
             self._packed_shapes.add(tb)
+        if self.spec is not None:
+            # the verify depth ladder {1, 2, 4, .., spec_k} — the only
+            # widths _spec_tick can dispatch — plus the drafter's own
+            # programs.  All-padding packs (pos = max_len, every slot
+            # inactive) so the warmup commits nothing and touches no slot.
+            self.drafter.prewarm()
+            kk = 1
+            while True:
+                pack = np.zeros((3, self.B * (kk + 1) + self.B), np.int32)
+                pack[2, : self.B * (kk + 1)] = self.max_len
+                for sm in smodes:
+                    if self.paged:
+                        tg, _c, _lt, _cl, self.cache = self._spec_prog_paged(
+                            self.params, self.cache, self._btab,
+                            self._last_tok, self._cur_len,
+                            self.backend.put_host(pack),
+                            self._spf, self._spi, self._btok, self._bval,
+                            depth_k=kk, smode=sm,
+                        )
+                    else:
+                        tg, _c, _lt, _cl, self.cache = self._spec_prog(
+                            self.params, self.cache, self._last_tok,
+                            self._cur_len, self.backend.put_host(pack),
+                            self._spf, self._spi, self._btok, self._bval,
+                            depth_k=kk, smode=sm,
+                        )
+                    jax.block_until_ready(tg)
+                    self._spec_shapes.add((kk, sm))
+                if kk >= self.spec_k:
+                    break
+                kk *= 2
         if self.paged:
             # paged admission routes every request through the packed tier
             # (one code path writes the pool) — no fused-admission shapes
@@ -978,6 +1151,10 @@ class ServeEngine:
         self._ov_tok_h[:] = 0
         self._ov_len_h[:] = 0
         self._dirty = False
+        if self.spec is not None:
+            self._spec_ewma[:] = 1.0
+            for i in range(self.B):
+                self.drafter.reset_slot(i)
         if self.paged:
             if self.prefix is not None:
                 self.prefix.clear()
@@ -1132,6 +1309,9 @@ class ServeEngine:
                 self.slot_req[slot] = req
                 self._sp_fresh = False  # a new occupant's row must upload
                 self._dirty = True
+                if self.spec is not None:
+                    self._spec_ewma[slot] = 1.0  # optimistic: probe deep first
+                    self.drafter.reset_slot(slot)
                 if s > self.prefill_budget:  # chunked ragged tier
                     self.slot_len[slot] = 0
                     self.slot_fed[slot] = 0
@@ -1213,6 +1393,9 @@ class ServeEngine:
                 self.slot_req[slot] = req
                 self._sp_fresh = False  # a new occupant's row must upload
                 self._dirty = True
+                if self.spec is not None:
+                    self._spec_ewma[slot] = 1.0  # optimistic: probe deep first
+                    self.drafter.reset_slot(slot)
                 self.slot_len[slot] = matched
                 self.slot_fed[slot] = matched
                 self._prefilling.append(slot)
@@ -1381,6 +1564,150 @@ class ServeEngine:
             if req.n_generated >= req.params.max_new or self.slot_len[i] + 1 >= self.max_len:
                 self._finish(req, i, stats)
 
+    def _spec_depth(self, slot: int) -> int:
+        """Adaptive proposal depth for one slot, from its acceptance EWMA.
+        Host-side and bucketed to the compiled {1, 2, 4, .., spec_k} depth
+        zoo, so adapting never compiles a new program.  With adaptation
+        off every slot always proposes the full ``spec_k``."""
+        if not self.spec.adaptive:
+            return self.spec_k
+        e = self._spec_ewma[slot]
+        for thresh, d in ((0.7, 8), (0.45, 4), (0.2, 2)):
+            if e >= thresh:
+                return min(d, self.spec_k)
+        return 1
+
+    def _spec_tick(self, stats: ServeStats) -> None:
+        """One draft-and-verify iteration over every decoding slot: drain
+        the harvest (the drafter reads committed VALUES, and commit counts
+        are value-dependent — speculation deliberately trades the
+        one-behind pipeline for multi-token commits per dispatch), draft
+        per-slot proposals, run ONE packed verify dispatch, then commit
+        the accepted prefixes through the standard credit path.
+
+        Depth is capped at ``rem - 1`` (rem = the slot's remaining token
+        budget, the same bound :meth:`_chunk_tick` uses) so a commit can
+        never overshoot ``max_new``/``max_len`` — count-based finish
+        detection stays exact, and every verify-row position stays inside
+        the dense row / reserved paged table.  Stop tokens are detected in
+        the credit path as always; values past the stop are refunded and
+        the slot is released at the next iteration — with the bonus
+        sampled token and the exact-match rule, a speculated stream stops
+        at exactly the token the sequential engine would have stopped
+        at."""
+        self._drain_pending()
+        self._release_stopped(stats)
+        decoding = [
+            i for i, r in enumerate(self.slot_req)
+            if r is not None and self.slot_fed[i] >= len(r.prompt)
+        ]
+        if not decoding:
+            return
+        b = self.B
+        depths = np.zeros(b, np.int32)
+        ctxs: list[Optional[np.ndarray]] = [None] * b
+        for i in decoding:
+            r = self.slot_req[i]
+            rem = min(
+                r.params.max_new - r.n_generated,
+                self.max_len - 1 - int(self.slot_len[i]),
+            )
+            d = min(self.spec_k, rem - 1, self._spec_depth(i)) if r._spec else 0
+            depths[i] = max(d, 0)
+            if depths[i] > 0:
+                ctxs[i] = np.concatenate(
+                    [
+                        np.asarray(r.prompt, np.int64),
+                        np.asarray(r.generated, np.int64),
+                    ]
+                )
+        if depths.any():
+            props = self.drafter.propose(ctxs, depths)
+            for i in decoding:
+                depths[i] = min(int(depths[i]), len(props[i]))
+        else:
+            props = [[] for _ in range(b)]
+        kmax = max(1, int(depths.max()))
+        depth_k = 1
+        while depth_k < kmax:
+            depth_k *= 2
+        w = depth_k + 1
+        # slot-major verify rows [last_token, draft_1 .. draft_d]; rows
+        # past a slot's depth (and whole inactive slots) carry the
+        # position sentinel — scatter dropped, acceptance depth-masked.
+        # desc and meta share ONE upload (see _spec_fn): pack[:, :b*w] is
+        # the descriptor, pack[:, b*w:] the per-slot (depth, active, cl)
+        pack = np.zeros((3, b * w + b), np.int32)
+        desc = pack[:, : b * w]
+        meta = pack[:, b * w :]
+        desc[2] = self.max_len
+        for i in decoding:
+            r = self.slot_req[i]
+            d = int(depths[i])
+            cl = int(self.slot_len[i])
+            r0 = i * w
+            desc[0, r0] = r.generated[-1]
+            if d:
+                desc[0, r0 + 1 : r0 + 1 + d] = props[i][:d]
+            desc[1, r0 : r0 + 1 + d] = i
+            desc[2, r0 : r0 + 1 + d] = cl + np.arange(d + 1)
+            meta[0, i] = d
+            meta[1, i] = 1
+            meta[2, i] = cl
+        smode = max(self.slot_req[i]._smode for i in decoding)
+        if smode:
+            if not self._sp_fresh:
+                self._put_sp(*self._sp_rows())
+            spf, spi, btok, bval = self._spf, self._spi, self._btok, self._bval
+        else:
+            spf, spi, btok, bval = self._sp0
+        if (depth_k, smode) not in self._spec_shapes:
+            self._spec_shapes.add((depth_k, smode))
+            stats.prefill_compiles += 1
+        if self.paged:
+            targets, commit, self._last_tok, self._cur_len, self.cache = (
+                self._spec_prog_paged(
+                    self.params, self.cache, self._flush_btab(),
+                    self._last_tok, self._cur_len,
+                    self.backend.put_host(pack),
+                    spf, spi, btok, bval, depth_k=depth_k, smode=smode,
+                )
+            )
+        else:
+            targets, commit, self._last_tok, self._cur_len, self.cache = (
+                self._spec_prog(
+                    self.params, self.cache, self._last_tok, self._cur_len,
+                    self.backend.put_host(pack),
+                    spf, spi, btok, bval, depth_k=depth_k, smode=smode,
+                )
+            )
+        stats.ticks += 1
+        stats.spec_ticks += 1
+        # value-blocking by design (see above); ONE transfer for both
+        t_h, c_h = jax.device_get((targets, commit))
+        now = time.perf_counter()
+        for i in decoding:
+            r = self.slot_req[i]
+            c = int(c_h[i])  # accepted run + the bonus token, >= 1
+            d = int(depths[i])
+            stats.spec_proposed += d
+            stats.spec_accepted += c - 1
+            if self.spec.adaptive and d > 0:
+                self._spec_ewma[i] = 0.5 * self._spec_ewma[i] + 0.5 * (
+                    (c - 1) / d
+                )
+            r.n_generated += c
+            self.slot_len[i] += c
+            stats.total_tokens += c
+            for j in range(c):
+                self._credit(r, int(t_h[i, j]), now, stats)
+            self._stamp(r, now)
+            if r.finish_reason is None and (
+                r.n_generated >= r.params.max_new
+                or self.slot_len[i] + 1 >= self.max_len
+            ):
+                self._finish(r, i, stats)
+
     # ------------------------------------------------------------------- run
 
     def _service_once(self, stats: ServeStats) -> bool:
@@ -1410,12 +1737,17 @@ class ServeEngine:
             # slot (including one whose prompt just completed in this
             # very pack). Admission never stalls decode.
             self._packed_tick(stats, self._pending)
-            decoding = [
-                i for i, r in enumerate(self.slot_req)
-                if r is not None and self.slot_fed[i] >= len(r.prompt)
-            ]
-            if decoding:
-                self._chunk_tick(stats, self._pending, decoding)
+            if self.spec is not None:
+                self._spec_tick(stats)
+            else:
+                decoding = [
+                    i for i, r in enumerate(self.slot_req)
+                    if r is not None and self.slot_fed[i] >= len(r.prompt)
+                ]
+                if decoding:
+                    self._chunk_tick(stats, self._pending, decoding)
+        elif self.spec is not None:
+            self._spec_tick(stats)
         else:
             self._chunk_tick(stats, self._pending, active)
         while len(self._pending) > 1:

@@ -206,3 +206,57 @@ def fused_sample(logits, temps, top_k, top_p, seeds, pos, bias_tok, bias_val,
         scaled = jnp.where(_keep_mask(scaled, top_k, top_p), scaled, -jnp.inf)
     sampled = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
     return jnp.where(temps > 0, sampled, greedy)
+
+
+def spec_verify(logits, drafts, depth, active, temps, top_k, top_p, seeds,
+                pos0, bias_tok, bias_val, *, smode: int):
+    """Draft-and-verify acceptance over one packed verify dispatch — the
+    speculative member of the ``smode`` zoo, built ON :func:`fused_sample`
+    so target tokens and sequential tokens can never drift apart.
+
+    ``logits`` [B*(K+1), V] are the packed rows for slot-major verify
+    descriptors ``[last_token, draft_1 .. draft_K]`` per slot: row (i, j)
+    holds slot i's logits after consuming its context plus the first j
+    drafts, i.e. the prediction for position ``pos0[i] + j + 1``, sampled
+    with PRNG position ``pos0[i] + j`` — the engine's pre-increment key
+    convention, unchanged.  ``drafts`` [B, K] i32, ``depth``/``active``/
+    ``pos0`` [B] i32, sampler rows as in :func:`param_rows` (per-SLOT —
+    they are repeated across each slot's K+1 rows here).
+
+    Acceptance is the EXACT-MATCH rule, not stochastic min(1, p/q)
+    rejection sampling: this engine's sampler is deterministic given
+    (context, seed, position) — the target distribution at each position
+    is a point mass on the seeded gumbel-max draw — so the rejection rule
+    degenerates to the equality indicator.  Accepting anything the
+    sequential engine would not have sampled would break the engine's
+    seeded bit-reproducibility guarantee; the price is that acceptance is
+    capped by the collision probability of drafter and target streams.
+    Under ``smode 0`` the targets are plain argmax rows, so verification
+    is argmax prefix agreement and the program stays threefry/sort-free.
+
+    Returns ``(targets [B, K+1], n_accept [B], commit [B])``: ``n_accept``
+    is the length of the leading run of drafts equal to the target drawn
+    one position earlier, clamped to ``depth``; ``commit = n_accept + 1``
+    for active slots (the run plus the bonus token sampled after it — a
+    depth-0 slot commits exactly its next sequential token) and 0
+    otherwise.  ``targets[i, n_accept[i]]`` is slot i's new last token."""
+    b, k = drafts.shape
+    w = k + 1
+    pos = (pos0[:, None] + jnp.arange(w, dtype=pos0.dtype)[None, :]).reshape(-1)
+
+    def rep(a):
+        return jnp.repeat(a, w, axis=0)
+
+    targets = fused_sample(
+        logits, rep(temps), rep(top_k), rep(top_p), rep(seeds), pos,
+        rep(bias_tok), rep(bias_val), smode=smode,
+    ).reshape(b, w)
+    if k:
+        match = (targets[:, :k] == drafts) & (
+            jnp.arange(k)[None, :] < depth[:, None]
+        )
+        n_accept = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    else:
+        n_accept = jnp.zeros(b, jnp.int32)
+    commit = jnp.where(active.astype(bool), n_accept + 1, 0)
+    return targets, n_accept, commit

@@ -1,0 +1,421 @@
+"""Speculative decoding: pluggable drafters for the packed draft-and-verify
+dispatch (:meth:`repro.serve.engine.ServeEngine._spec_tick`).
+
+The scalar-vector split, one more time: proposing candidate tokens is cheap
+irregular *scalar* work (a host-side suffix match, or a shallow model), and
+verifying them is exactly the wide *vector* work the engine already has — a
+ragged packed dispatch scoring every (slot, offset) row in one kernel pass.
+Speculation reconfigures the serving loop the same way merge mode
+reconfigures prefill: the per-step work changes shape, the machinery does
+not.  A drafter proposes up to ``k`` tokens per decoding slot; the engine
+feeds ``[last_token, draft_1 .. draft_d]`` per slot through ONE
+``packed_step`` (dense or block-paged — the same descriptors drive both),
+samples all ``d+1`` target positions with the standard per-position
+``fold_in(key(seed), pos)`` keys, and commits the longest prefix of drafts
+that EXACTLY match the seeded target draws (:func:`repro.serve.sampling
+.spec_verify`).
+
+Acceptance is exact-match by construction, not min(1, p/q) rejection
+sampling: the engine's sampler is deterministic given (context, seed,
+position), so the target "distribution" at each position is a point mass on
+the seeded draw and the stochastic acceptance rule degenerates to the
+equality indicator.  That is what makes speculation *invisible*: a seeded
+stream with speculation on is bit-identical to the same stream with
+speculation off, because every committed token IS the token the sequential
+engine would have sampled (the verify pass replays the same logits — the
+packed dispatch is bitwise equal to sequential decode — and the same PRNG
+keys).  Greedy requests get prefix-match on argmax agreement automatically:
+``smode 0`` targets are the argmax rows, no threefry enters the program.
+
+Rejected tails need no KV rollback: a rejected draft's K/V was scattered at
+a position ``>= cur_len`` after the commit, every attention mask hides
+positions beyond ``cur_len``, and the next dispatch's scatters overwrite
+them — the same garbage-tolerance argument slot reuse already relies on.
+In paged mode nothing is released either: admission reserved the whole
+worst-case table, and the verify rows only touch positions inside it.
+
+Two stock drafters:
+
+* :class:`NGramDrafter` — prompt-lookup decoding: zero extra weights, a
+  longest-suffix n-gram match against the request's OWN prompt + generated
+  tokens.  Each lookup proposes one token and appends it to the working
+  context before the next lookup ("cyclic extension"), so a repeating
+  pattern unrolls to the full depth ``k`` instead of truncating at the end
+  of the matched region.
+* :class:`ModelDrafter` — a shallow draft model (a config from
+  ``repro/configs`` or a layer-truncated view of the target's own params)
+  with its OWN KV cache over the same slot layout, caught up through the
+  same packed machinery and rolled greedily ``k`` steps.  Draft-cache
+  rollback is the same masking argument: speculative positions are
+  re-scattered from committed tokens at the next catch-up.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the drafter's catch-up pack sizes: same 1.5x ladder philosophy as the
+# engine's _T_BUCKETS (kept local — the drafter compiles its own programs)
+_PACK_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128)
+
+
+def _bucket(t: int) -> int:
+    for b in _PACK_BUCKETS:
+        if t <= b:
+            return b
+    b = _PACK_BUCKETS[-1]
+    while b < t:
+        b *= 2
+    return b
+
+
+@dataclass(frozen=True)
+class SpeculateConfig:
+    """Engine-level speculation configuration.
+
+    ``mode`` selects the drafter ("ngram" or "draft"); ``k`` caps the
+    proposal depth per slot; ``adaptive`` lets the engine shrink/grow each
+    slot's depth inside {1, 2, 4, .., k} from its measured acceptance EWMA
+    (a slot the drafter cannot predict degrades to depth 1 — one wasted
+    verify row — instead of k).  ``draft_arch`` names a config from
+    ``repro/configs`` for the draft model; ``None`` with mode="draft"
+    means a ``draft_layers``-deep truncation of the TARGET's own params
+    (the zero-training draft).  ``tenants`` holds per-tenant overrides:
+    ``{"tenant_a": False}`` turns speculation off for that tenant's
+    requests (their slots ride the verify dispatch at depth 0)."""
+
+    mode: str = "ngram"
+    k: int = 8
+    max_ngram: int = 8
+    adaptive: bool = True
+    draft_arch: Optional[str] = None
+    draft_layers: int = 1
+    draft_reduced: bool = False
+    tenants: Mapping[str, bool] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.mode not in ("ngram", "draft"):
+            raise ValueError(f"speculate mode must be ngram|draft, got {self.mode!r}")
+        if self.k < 1:
+            raise ValueError(f"speculate k must be >= 1, got {self.k}")
+        object.__setattr__(self, "tenants", dict(self.tenants))
+
+    @classmethod
+    def parse(cls, spec: str, **kw) -> Optional["SpeculateConfig"]:
+        """CLI string → config: ``off`` | ``ngram`` | ``draft`` |
+        ``draft:<arch>`` (extra kwargs override fields)."""
+        spec = spec.strip()
+        if spec in ("off", "none", ""):
+            return None
+        if spec == "ngram":
+            return cls(mode="ngram", **kw)
+        if spec == "draft":
+            return cls(mode="draft", **kw)
+        if spec.startswith("draft:"):
+            return cls(mode="draft", draft_arch=spec.split(":", 1)[1], **kw)
+        raise ValueError(
+            f"unknown --speculate value {spec!r} (off|ngram|draft[:<arch>])"
+        )
+
+    @classmethod
+    def coerce(cls, spec) -> Optional["SpeculateConfig"]:
+        if spec is None or isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls.parse(spec)
+        raise TypeError(f"speculate must be str|SpeculateConfig|Drafter, got {type(spec)}")
+
+    def enabled_for(self, tenant: Optional[str]) -> bool:
+        if tenant is None:
+            return True
+        return bool(self.tenants.get(tenant, True))
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """What the engine needs from a drafter.  ``propose`` sees each slot's
+    FULL committed context (prompt + every harvested token — the spec tick
+    is value-blocking, so nothing is in flight) and the per-slot requested
+    depths; it returns per-slot proposal lists of AT MOST those depths
+    (shorter is fine — the engine shrinks the slot's depth to what it
+    got)."""
+
+    name: str
+
+    def setup(self, backend, batch_slots: int, max_len: int, vocab_size: int) -> None: ...
+
+    def reset_slot(self, slot: int) -> None: ...
+
+    def propose(
+        self, ctxs: Sequence[Optional[np.ndarray]], depths: np.ndarray
+    ) -> list[list[int]]: ...
+
+    def prewarm(self) -> None: ...
+
+
+class NGramDrafter:
+    """Prompt-lookup drafter: longest-suffix n-gram match with cyclic
+    extension.  Zero weights, zero device state — pure host scalar work
+    riding alongside the vector verify dispatch.
+
+    One proposal step finds the LATEST earlier occurrence of the longest
+    suffix (length ``max_n`` down to 1) of the working context and copies
+    the token that followed it.  The proposal is appended to the working
+    context before the next step, so a period-p cycle in the stream unrolls
+    to the full requested depth instead of stopping where the matched
+    region ends — measured on this repo's streams that roughly doubles the
+    mean committed run.  Tokens are matched as bytes when the vocab fits
+    (one C-speed ``rfind`` per suffix length), as int arrays otherwise."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 8):
+        self.max_n = max(1, int(max_n))
+        self._bytes = False
+
+    def setup(self, backend, batch_slots, max_len, vocab_size) -> None:
+        self._bytes = vocab_size <= 256
+
+    def reset_slot(self, slot: int) -> None:
+        pass
+
+    def prewarm(self) -> None:
+        pass
+
+    # -- one lookup step -------------------------------------------------
+    @staticmethod
+    def _next_bytes(work: bytes, max_n: int) -> Optional[int]:
+        ln = len(work)
+        for n in range(min(max_n, ln - 1), 0, -1):
+            suf = work[ln - n:]
+            idx = work.rfind(suf, 0, ln - 1)  # occurrence ending before the end
+            if idx >= 0:
+                return work[idx + n]
+        return None
+
+    @staticmethod
+    def _next_ints(work: np.ndarray, max_n: int) -> Optional[int]:
+        ln = len(work)
+        for n in range(min(max_n, ln - 1), 0, -1):
+            suf = work[ln - n:]
+            win = np.lib.stride_tricks.sliding_window_view(work, n)[: ln - n]
+            hits = np.flatnonzero((win == suf).all(axis=1))
+            if hits.size:
+                return int(work[hits[-1] + n])
+        return None
+
+    def _one(self, ctx: np.ndarray, depth: int) -> list[int]:
+        out: list[int] = []
+        if self._bytes:
+            work = bytes(int(t) & 0xFF for t in ctx)
+            for _ in range(depth):
+                nxt = self._next_bytes(work, self.max_n)
+                if nxt is None:
+                    break
+                out.append(nxt)
+                work += bytes([nxt])
+        else:
+            work = np.asarray(ctx, np.int64)
+            for _ in range(depth):
+                nxt = self._next_ints(work, self.max_n)
+                if nxt is None:
+                    break
+                out.append(nxt)
+                work = np.append(work, nxt)
+        return out
+
+    def propose(self, ctxs, depths) -> list[list[int]]:
+        return [
+            self._one(c, int(d)) if c is not None and d > 0 else []
+            for c, d in zip(ctxs, depths)
+        ]
+
+
+class ModelDrafter:
+    """Shallow-model drafter with its own per-slot KV cache.
+
+    The draft model mirrors the engine's slot layout.  Each ``propose``
+    call first CATCHES UP: every context token not yet in the draft cache
+    is fed through one packed dispatch (the same ragged descriptors the
+    engine's prefill pack uses — token/slot/position triples, bucketed T),
+    whose per-slot last row argmaxes the first draft token.  It then ROLLS
+    greedily: a fused scan of draft decode+argmax steps proposes the rest.
+
+    Speculative pollution of the draft cache needs no rollback: ``fed``
+    only advances over COMMITTED tokens, the roll's scattered K/V beyond
+    ``fed`` is invisible to any masked read (kpos <= tok_pos / cur_len),
+    and the next catch-up re-scatters the committed truth over those
+    positions — the same argument that lets the target cache skip rollback
+    for rejected verify rows."""
+
+    name = "draft"
+
+    def __init__(self, model, params):
+        self.model = model
+        self._params_in = params
+        self.backend = None
+
+    @classmethod
+    def truncated(cls, model, params, n_layers: int = 1) -> "ModelDrafter":
+        """Zero-training draft: the first ``n_layers`` of the TARGET's own
+        stack (embedding, truncated blocks, final norm — the params' block
+        leaves are sliced on their leading layer axis) as a standalone
+        shallow model."""
+        cfg = replace(model.cfg, n_layers=n_layers)
+        sliced = dict(params)
+        sliced["blocks"] = jax.tree.map(lambda a: a[:n_layers], params["blocks"])
+        from repro.models.model import LM
+
+        return cls(LM(cfg), sliced)
+
+    # -- engine binding --------------------------------------------------
+    def setup(self, backend, batch_slots, max_len, vocab_size) -> None:
+        self.backend = backend
+        self.B = batch_slots
+        self.max_len = max_len
+        self.params = backend.put_params(self.model, self._params_in)
+        self.cache = backend.put_cache(
+            self.model, self.model.init_cache(batch_slots, max_len)
+        )
+        self.fed = np.zeros(batch_slots, np.int64)
+        self._shapes: set[int] = set()
+        self._catch = backend.jit(self._catch_fn, donate_argnums=(1,))
+        self._roll = backend.jit(
+            self._roll_fn, donate_argnums=(1,), static_argnames=("n_steps",)
+        )
+
+    def reset_slot(self, slot: int) -> None:
+        self.fed[slot] = 0
+
+    def _catch_fn(self, params, cache, desc, out_rows):
+        logits, cache = self.model.packed_step(
+            params, cache, desc[0], desc[1], desc[2], out_rows=out_rows
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _roll_fn(self, params, cache, tok, cl, act, n_steps: int = 1):
+        def step(carry, _):
+            t, c, ca = carry
+            logits, ca = self.model.decode_step(
+                params, ca, {"tokens": t[:, None]}, c
+            )
+            nt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            t = jnp.where(act.astype(bool), nt, t)
+            return (t, c + act, ca), t
+
+        (_, _, cache), toks = jax.lax.scan(
+            step, (tok, cl, cache), None, length=n_steps
+        )
+        return toks, cache
+
+    def prewarm(self) -> None:
+        """Compile the steady-state catch-up buckets and every roll depth.
+        Admission-sized catch-ups (whole prompts) compile lazily — the
+        engine's warmup drain absorbs them like its own prefill buckets."""
+        for tb in [b for b in _PACK_BUCKETS if b <= _bucket(4 * self.B)]:
+            desc = np.zeros((3, tb), np.int32)
+            desc[2] = self.max_len  # all scatters dropped
+            first, self.cache = self._catch(
+                self.params, self.cache, self.backend.put_host(desc),
+                self.backend.put_host(np.zeros(self.B, np.int32)),
+            )
+            jax.block_until_ready(first)
+            self._shapes.add(tb)
+        z = self.backend.put_host(np.zeros(self.B, np.int32))
+        n = 1
+        while True:
+            toks, self.cache = self._roll(
+                self.params, self.cache, z, z, z, n_steps=n
+            )
+            jax.block_until_ready(toks)
+            if n >= 8:
+                break
+            n *= 2
+
+    def propose(self, ctxs, depths) -> list[list[int]]:
+        out: list[list[int]] = [[] for _ in range(self.B)]
+        live = [
+            i for i in range(self.B)
+            if ctxs[i] is not None and int(depths[i]) > 0
+        ]
+        if not live:
+            return out
+        # catch-up pack: feed every committed-but-unfed token; a slot's
+        # last fed row predicts its next position (= first draft)
+        entries: list[tuple[int, int, int]] = []
+        out_rows = np.zeros(self.B, np.int32)
+        roll_cl = np.zeros(self.B, np.int32)
+        act = np.zeros(self.B, np.int32)
+        for i in live:
+            c = ctxs[i]
+            ln = len(c)
+            fed = int(self.fed[i])
+            if not 0 < fed <= ln:
+                fed = 0  # slot reused or rolled back: refeed from scratch
+            if fed == ln:
+                fed = ln - 1  # nothing new: refeed the last token (idempotent)
+            for pos in range(fed, ln):
+                entries.append((int(c[pos]), i, pos))
+            out_rows[i] = len(entries) - 1
+            roll_cl[i] = ln
+            act[i] = 1
+            self.fed[i] = ln
+        tb = _bucket(len(entries))
+        desc = np.zeros((3, tb), np.int32)
+        desc[2] = self.max_len  # padding rows: dropped scatters
+        for t, (tok, sl, pos) in enumerate(entries):
+            desc[0, t], desc[1, t], desc[2, t] = tok, sl, pos
+        first, self.cache = self._catch(
+            self.params, self.cache, self.backend.put_host(desc),
+            self.backend.put_host(out_rows),
+        )
+        self._shapes.add(tb)
+        maxd = max(int(depths[i]) for i in live)
+        if maxd > 1:
+            n = 1
+            while n < maxd - 1:
+                n *= 2
+            rolls, self.cache = self._roll(
+                self.params, self.cache, first,
+                self.backend.put_host(roll_cl), self.backend.put_host(act),
+                n_steps=n,
+            )
+            rolls_h = np.asarray(rolls)  # [n, B]
+        else:
+            rolls_h = np.zeros((0, self.B), np.int32)
+        first_h = np.asarray(first)
+        for i in live:
+            d = int(depths[i])
+            out[i] = [int(first_h[i])] + [int(t) for t in rolls_h[: d - 1, i]]
+        return out
+
+
+def build_drafter(cfg: SpeculateConfig, model, params) -> Drafter:
+    """Engine-side drafter construction from a :class:`SpeculateConfig`.
+
+    ``mode="draft"`` with ``draft_arch=None`` truncates the target's own
+    params (no extra weights anywhere); with an arch name it builds that
+    config fresh — random-initialized, a placeholder for loading real
+    distilled draft weights."""
+    if cfg.mode == "ngram":
+        return NGramDrafter(max_n=cfg.max_ngram)
+    if cfg.draft_arch is None:
+        return ModelDrafter.truncated(model, params, n_layers=cfg.draft_layers)
+    from repro.configs import get_arch
+    from repro.models.model import LM
+
+    dcfg = get_arch(cfg.draft_arch)
+    if cfg.draft_reduced:
+        dcfg = dcfg.reduced()
+    if dcfg.vocab_size != model.cfg.vocab_size:
+        raise ValueError(
+            f"draft arch {cfg.draft_arch!r} vocab {dcfg.vocab_size} != "
+            f"target vocab {model.cfg.vocab_size}"
+        )
+    dmodel = LM(dcfg)
+    return ModelDrafter(dmodel, dmodel.init(jax.random.key(0)))

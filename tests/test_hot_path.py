@@ -161,3 +161,55 @@ def test_gqa_flash_no_head_expansion_in_jaxpr():
         if eqn.primitive.name in ("broadcast_in_dim", "concatenate"):
             for out in eqn.outvars:
                 assert tuple(out.aval.shape) != expanded_kv_shape, eqn
+
+
+def _all_primitives(jaxpr):
+    """Primitive names of EVERY equation, recursing into sub-jaxprs
+    (scan/cond/pjit bodies) — unlike _top_level_primitives, which stops at
+    the dispatch layer."""
+    names = set()
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            names.add(eqn.primitive.name)
+        stack.extend(sj for sj in jax.core.subjaxprs(j))
+    return names
+
+
+def test_greedy_spec_verify_program_is_threefry_and_sort_free():
+    """The smode-0 (all-greedy) speculative verify program must be argmax
+    prefix agreement only: no threefry PRNG, no sort anywhere in the
+    traced program — greedy speculation costs exactly the packed model
+    step. The sampled variant (smode 1) is the positive control."""
+    from functools import partial
+
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import LM
+    from repro.serve import ServeEngine
+
+    cfg = get_arch("codeqwen1.5-7b").reduced()
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32, speculate="ngram")
+    pack = np.zeros((3, eng.B * 3 + eng.B), np.int32)  # desc cols + meta cols
+    pack[2, : eng.B * 3] = eng.max_len
+    spf, spi, btok, bval = eng._sp0
+    args = (
+        eng.params, eng.cache, eng._last_tok, eng._cur_len,
+        jnp.asarray(pack), spf, spi, btok, bval,
+    )
+    def _prng(n):  # typed-key primitives trace as random_*; raw as threefry*
+        return "threefry" in n or n.startswith("random_")
+
+    greedy = _all_primitives(
+        jax.make_jaxpr(partial(eng._spec_fn, depth_k=2, smode=0))(*args).jaxpr
+    )
+    assert not any(_prng(n) for n in greedy), sorted(greedy)
+    assert "sort" not in greedy, sorted(greedy)
+    sampled = _all_primitives(
+        jax.make_jaxpr(partial(eng._spec_fn, depth_k=2, smode=1))(*args).jaxpr
+    )
+    assert any(_prng(n) for n in sampled), sorted(sampled)

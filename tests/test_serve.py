@@ -504,3 +504,18 @@ def test_stream_then_run_stats_refund_lands_on_counting_stats(small_model):
     assert stats.total_tokens >= 0
     # 3 emitted tokens, first rode admission: 2 countable decode tokens
     assert eng.stream_stats.total_tokens + stats.total_tokens == 2
+
+
+def test_speculate_streaming_handle_matches_manual_greedy(small_model):
+    """The RequestHandle iterator drives the SPECULATIVE engine the same
+    way it drives the plain one: incremental tokens equal manual greedy
+    decoding, arriving a committed run at a time."""
+    cfg, m, p = small_model
+    base = np.array([6, 1, 9], np.int32)
+    prompt = np.tile(base, 5).astype(np.int32)
+    expect = _manual_greedy(cfg, m, p, prompt, 8)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=48, speculate="ngram")
+    h = eng.submit(Request(rid=0, prompt=prompt, params=SamplingParams(max_new=8)))
+    assert list(h) == expect
+    assert h.done and h.finish_reason == "length"
+    assert eng.stream_stats.spec_ticks > 0

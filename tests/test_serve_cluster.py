@@ -369,3 +369,63 @@ def test_cluster_handle_streaming_without_run(small_model, mode):
     assert handles[1].result() == ref[1]
     assert all(h.done for h in handles)
     assert len(cl._where) == 0  # streamed-to-completion requests pruned
+
+
+# ------------------------------------------------------------- speculation
+
+
+def _patterned_reqs(cfg, *, n=5, max_new=6, seed=61):
+    """Repetitive + random prompts, greedy + seeded-sampled slots: the mix
+    a drafter partially predicts."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if i % 2 == 0:
+            prompt = np.tile(rng.integers(0, cfg.vocab_size, size=3), 5)
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, size=11)
+        reqs.append(Request(
+            rid=i, prompt=prompt.astype(np.int32),
+            params=SamplingParams(
+                max_new=max_new, temperature=0.8 if i % 2 else 0.0,
+                top_p=0.9 if i % 2 else 1.0, seed=80 + i,
+            ),
+        ))
+    return reqs
+
+
+@pytest.mark.parametrize("mode", [Mode.SPLIT, Mode.MERGE])
+def test_cluster_speculate_matches_plain_single_engine(small_model, mode):
+    """A speculative cluster (either fabric) must be bit-identical to one
+    plain NON-speculative engine: acceptance is exact-match against the
+    same fold_in(seed, position) draws on every replica."""
+    cfg, m, p = small_model
+    ref = _engine_reference(m, p, _patterned_reqs(cfg),
+                            batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=mode, batch_slots=2, max_len=48,
+                      speculate="ngram")
+    for r in _patterned_reqs(cfg):
+        cl.submit(r)
+    stats = cl.run()
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert stats.spec_ticks > 0
+    assert stats.spec_accepted <= stats.spec_proposed
+
+
+def test_cluster_mid_stream_reconfigure_speculate(small_model):
+    """SPLIT->MERGE mid-stream with speculation on: re-homed requests keep
+    their committed prefixes and their seeds; the drafter state is rebuilt
+    per engine at admission, so the switch cannot perturb any stream."""
+    cfg, m, p = small_model
+    ref = _engine_reference(m, p, _patterned_reqs(cfg, n=6),
+                            batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48,
+                      speculate="ngram")
+    arrivals = [
+        (i * 0.002, r) for i, r in enumerate(_patterned_reqs(cfg, n=6))
+    ]
+    stats = cl.run(arrivals=arrivals,
+                   reconfigure_schedule=[(0.005, Mode.MERGE)])
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert len(stats.reconfigures) == 1
+    assert stats.spec_ticks > 0

@@ -1,0 +1,400 @@
+"""Speculative decoding: drafter units (n-gram cyclic extension, the
+truncated-self model drafter), the spec_verify acceptance oracle, and the
+engine-level invariant that matters — a seeded stream with speculation ON
+is bit-identical to the same stream with speculation OFF, across dense and
+block-paged caches, chunk sizes, stop tokens, cancellation and tenant
+opt-outs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import LM
+from repro.serve import (
+    ModelDrafter,
+    NGramDrafter,
+    Request,
+    SamplingParams,
+    ServeEngine,
+    SpeculateConfig,
+)
+from repro.serve.sampling import SMODE_GREEDY, SMODE_MASKED, fused_sample, spec_verify
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("codeqwen1.5-7b").reduced()
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    return cfg, m, p
+
+
+# ------------------------------------------------------------- NGramDrafter
+
+
+def _ngram(vocab=256, max_n=8):
+    d = NGramDrafter(max_n=max_n)
+    d.setup(None, 4, 64, vocab)
+    return d
+
+
+@pytest.mark.parametrize("vocab", [256, 512])  # bytes path / int path
+def test_ngram_cyclic_extension(vocab):
+    """A period-3 cycle unrolls to the FULL requested depth: each proposal
+    joins the working context before the next lookup, so the match region
+    grows with the proposals instead of truncating at the context end."""
+    d = _ngram(vocab)
+    ctx = np.array([1, 2, 3, 1, 2, 3, 1, 2], np.int64)
+    (props,) = d.propose([ctx], np.array([6]))
+    assert props == [3, 1, 2, 3, 1, 2]
+
+
+def test_ngram_no_match_proposes_nothing():
+    d = _ngram()
+    (props,) = d.propose([np.array([5, 6, 7, 8], np.int64)], np.array([4]))
+    assert props == []
+
+
+def test_ngram_prefers_longest_suffix():
+    """The 2-gram [1, 2] -> 9 must win over the more recent 1-gram
+    continuation [2] -> 3."""
+    d = _ngram()
+    ctx = np.array([1, 2, 9, 5, 2, 3, 1, 2], np.int64)
+    (props,) = d.propose([ctx], np.array([1]))
+    assert props == [9]
+
+
+def test_ngram_byte_and_int_paths_agree():
+    rng = np.random.default_rng(0)
+    ctx = rng.integers(0, 200, size=40).astype(np.int64)
+    ctx[-6:] = ctx[4:10]  # plant a suffix match
+    db, di = _ngram(256), _ngram(50_000)
+    assert db.propose([ctx], np.array([8])) == di.propose([ctx], np.array([8]))
+
+
+def test_ngram_skips_depth_zero_and_none_slots():
+    d = _ngram()
+    ctx = np.array([1, 2, 1, 2], np.int64)
+    out = d.propose([ctx, None, ctx], np.array([0, 4, 2]))
+    assert out == [[], [], [1, 2]]
+
+
+# ------------------------------------------------------------- spec_verify
+
+
+@pytest.mark.parametrize("smode", [SMODE_GREEDY, SMODE_MASKED])
+def test_spec_verify_matches_per_row_sequential_sampling(smode):
+    """Oracle: the packed verify targets must equal one-row fused_sample
+    calls at each (slot, offset), and n_accept must be the leading
+    exact-match run — including a temp-0 row inside a sampled dispatch,
+    depth masking, and an inactive slot."""
+    rng = np.random.default_rng(3)
+    b, k, V = 3, 4, 64
+    w = k + 1
+    logits = jnp.asarray(rng.normal(size=(b * w, V)).astype(np.float32))
+    temps = jnp.asarray([0.9, 0.0, 0.7], jnp.float32)
+    top_k = jnp.asarray([0, 0, 5], jnp.int32)
+    top_p = jnp.asarray([0.9, 1.0, 1.0], jnp.float32)
+    seeds = jnp.asarray([11, 12, 13], jnp.int32)
+    pos0 = jnp.asarray([6, 3, 9], jnp.int32)
+    depth = jnp.asarray([4, 2, 0], jnp.int32)
+    active = jnp.asarray([1, 1, 0], jnp.int32)
+    btok = jnp.full((b, 8), 2**30, jnp.int32)
+    bval = jnp.zeros((b, 8), jnp.float32)
+    btok = btok.at[0, 0].set(3)
+    bval = bval.at[0, 0].set(5.0)
+
+    ref = np.zeros((b, w), np.int32)
+    for i in range(b):
+        for j in range(w):
+            ref[i, j] = int(fused_sample(
+                logits[i * w + j][None], temps[i:i + 1], top_k[i:i + 1],
+                top_p[i:i + 1], seeds[i:i + 1], pos0[i:i + 1] + j,
+                btok[i:i + 1], bval[i:i + 1], smode=smode,
+            )[0])
+
+    # drafts: slot 0 matches the first 2 targets then diverges; slot 1
+    # matches all of its (depth-masked) 2; slot 2 is inactive
+    drafts = np.zeros((b, k), np.int32)
+    drafts[0, :2] = ref[0, :2]
+    drafts[0, 2] = (ref[0, 2] + 1) % V
+    drafts[1, :2] = ref[1, :2]
+    targets, n_acc, commit = spec_verify(
+        logits, jnp.asarray(drafts), depth, active, temps, top_k, top_p,
+        seeds, pos0, btok, bval, smode=smode,
+    )
+    np.testing.assert_array_equal(np.asarray(targets), ref)
+    assert list(np.asarray(n_acc)) == [2, 2, 0]
+    assert list(np.asarray(commit)) == [3, 3, 0]
+
+
+def test_spec_verify_depth_zero_commits_one():
+    """k=0 (a pure decode dispatch through the verify program) commits
+    exactly the one sequential token per active slot."""
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(size=(2, 32)).astype(np.float32))
+    z = jnp.zeros(2, jnp.int32)
+    targets, n_acc, commit = spec_verify(
+        logits, jnp.zeros((2, 0), jnp.int32), z, jnp.asarray([1, 0], jnp.int32),
+        jnp.zeros(2, jnp.float32), z, jnp.ones(2, jnp.float32), z, z,
+        jnp.full((2, 8), 2**30, jnp.int32), jnp.zeros((2, 8), jnp.float32),
+        smode=SMODE_GREEDY,
+    )
+    assert targets.shape == (2, 1)
+    assert list(np.asarray(commit)) == [1, 0]
+
+
+# ------------------------------------------------------------ ModelDrafter
+
+
+def test_model_drafter_matches_draft_model_greedy(small_model):
+    """Proposals must equal the shallow draft model's own sequential greedy
+    continuation — including across INCREMENTAL propose calls, where the
+    second call only feeds the catch-up suffix into the draft cache."""
+    cfg, m, p = small_model
+    d = ModelDrafter.truncated(m, p, n_layers=1)
+    assert d.model.cfg.n_layers == 1
+    from repro.serve.backend import resolve_backend
+
+    d.setup(resolve_backend(None), 2, 64, cfg.vocab_size)
+
+    rng = np.random.default_rng(5)
+    ctx = rng.integers(0, cfg.vocab_size, size=10).astype(np.int64)
+
+    def draft_greedy(toks, n):
+        out = list(int(t) for t in toks)
+        for _ in range(n):
+            logits, _ = jax.jit(d.model.forward)(
+                d._params_in, {"tokens": jnp.asarray(out, jnp.int32)[None]}
+            )
+            out.append(int(jnp.argmax(logits[0, -1])))
+        return out[len(toks):]
+
+    props = d.propose([ctx, None], np.array([4, 0]))
+    assert props[0] == draft_greedy(ctx, 4)
+    assert props[1] == []
+    # commit 2 of those tokens, extend the context, propose again: the
+    # catch-up feeds only the 2 new tokens (fed pointer advanced)
+    ctx2 = np.concatenate([ctx, np.asarray(props[0][:2], np.int64)])
+    props2 = d.propose([ctx2, None], np.array([3, 0]))
+    assert props2[0] == draft_greedy(ctx2, 3)
+    assert int(d.fed[0]) == len(ctx2)
+
+
+def test_model_drafter_slot_reuse_resets_cleanly(small_model):
+    """reset_slot + a shorter context (slot handed to a new request) must
+    refeed from scratch and still match the draft model's greedy."""
+    cfg, m, p = small_model
+    from repro.serve.backend import resolve_backend
+
+    d = ModelDrafter.truncated(m, p, n_layers=1)
+    d.setup(resolve_backend(None), 1, 64, cfg.vocab_size)
+    rng = np.random.default_rng(6)
+    long = rng.integers(0, cfg.vocab_size, size=20).astype(np.int64)
+    short = rng.integers(0, cfg.vocab_size, size=7).astype(np.int64)
+    d.propose([long], np.array([2]))
+    d.reset_slot(0)
+    (props,) = d.propose([short], np.array([3]))
+    d2 = ModelDrafter.truncated(m, p, n_layers=1)
+    d2.setup(resolve_backend(None), 1, 64, cfg.vocab_size)
+    (fresh,) = d2.propose([short], np.array([3]))
+    assert props == fresh
+
+
+# ----------------------------------------------------- engine bit-identity
+
+
+def _spec_requests(cfg, *, max_new=10, n=5):
+    """A mixed stream: repetitive prompts (the drafter's best case),
+    random prompts (its worst case), greedy and seeded-sampled slots."""
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i in range(n):
+        if i % 2 == 0:
+            base = rng.integers(0, cfg.vocab_size, size=3)
+            prompt = np.tile(base, 6).astype(np.int32)
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+        sampled = i % 3 != 0
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            params=SamplingParams(
+                max_new=max_new,
+                temperature=0.8 if sampled else 0.0,
+                top_p=0.9 if sampled else 1.0,
+                seed=70 + i,
+            ),
+        ))
+    return reqs
+
+
+def _run(m, cfg, p, reqs, **kw):
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64, **kw)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return {r.rid: list(r.generated) for r in eng.finished}, stats, eng
+
+
+@pytest.mark.parametrize("spec_kw", [
+    {"speculate": "ngram"},
+    {"speculate": "ngram", "kv_block_size": 16},
+    {"speculate": "ngram", "kv_block_size": 16, "prefix_cache": True},
+    {"speculate": "draft"},
+], ids=["ngram-dense", "ngram-paged", "ngram-paged-prefix", "draft-dense"])
+def test_spec_bit_identical_to_spec_off(small_model, spec_kw):
+    cfg, m, p = small_model
+    ref, _, _ = _run(m, cfg, p, _spec_requests(cfg))
+    got, stats, _ = _run(m, cfg, p, _spec_requests(cfg), **spec_kw)
+    assert got == ref
+    assert stats.spec_ticks > 0
+    assert stats.spec_proposed > 0
+    assert 0.0 <= stats.spec_acceptance <= 1.0
+
+
+@pytest.mark.parametrize("max_chunk", [1, 2, 8])
+def test_spec_identity_across_chunk_sizes(small_model, max_chunk):
+    """Speculation composes with every max_chunk: the spec-off reference at
+    that chunk size and the speculative run must agree token for token
+    (chunking invariance and speculation invariance stack)."""
+    cfg, m, p = small_model
+    ref, _, _ = _run(m, cfg, p, _spec_requests(cfg, n=3), max_chunk=max_chunk)
+    got, _, _ = _run(
+        m, cfg, p, _spec_requests(cfg, n=3),
+        max_chunk=max_chunk, speculate="ngram",
+    )
+    assert got == ref
+
+
+def test_spec_stop_token_stops_at_exact_position(small_model):
+    """A stop token landing inside an accepted run must terminate the
+    stream at EXACTLY the token the sequential engine stops at (overrun
+    values refunded, not emitted)."""
+    cfg, m, p = small_model
+    base = np.array([4, 9, 2], np.int32)
+    prompt = np.tile(base, 6).astype(np.int32)
+    probe = Request(rid=0, prompt=prompt, params=SamplingParams(max_new=10))
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64)
+    eng.submit(probe)
+    eng.run()
+    stop = probe.generated[4]
+    mk = lambda: [Request(
+        rid=0, prompt=prompt,
+        params=SamplingParams(max_new=10, stop=(int(stop),)),
+    )]
+    ref, _, _ = _run(m, cfg, p, mk())
+    got, _, _ = _run(m, cfg, p, mk(), speculate="ngram")
+    assert got == ref
+    assert got[0][-1] == stop
+
+
+def test_spec_cancel_preserves_neighbour_stream(small_model):
+    """Cancelling one speculated stream mid-flight must not perturb its
+    neighbour slot (per-slot depth masking + per-request PRNG keys)."""
+    cfg, m, p = small_model
+    rng = np.random.default_rng(13)
+    pa = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    pb = np.tile(rng.integers(0, cfg.vocab_size, size=4), 4).astype(np.int32)
+    sp = lambda: SamplingParams(max_new=12, temperature=0.7, seed=31)
+    solo, _, _ = _run(
+        m, cfg, p,
+        [Request(rid=1, prompt=pb, params=sp())], speculate="ngram",
+    )
+
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64, speculate="ngram")
+    victim = eng.submit(Request(
+        rid=0, prompt=pa, params=SamplingParams(max_new=12),
+    ))
+    eng.submit(Request(rid=1, prompt=pb, params=sp()))
+    got = []
+    for tok in victim:
+        got.append(tok)
+        if len(got) == 3:
+            victim.cancel()
+    eng.run()
+    streams = {r.rid: list(r.generated) for r in eng.finished}
+    assert streams[1] == solo[1]
+    assert next(r for r in eng.finished if r.rid == 0).finish_reason == "cancelled"
+
+
+def test_spec_tenant_opt_out(small_model):
+    """A tenant with speculation disabled rides the verify dispatch at
+    depth 0 — zero proposals for its slots, streams unchanged."""
+    cfg, m, p = small_model
+    reqs = lambda: [
+        Request(
+            rid=i, prompt=np.tile(np.array([3, 8], np.int32), 6),
+            params=SamplingParams(max_new=8), tenant="b",
+        )
+        for i in range(3)
+    ]
+    ref, _, _ = _run(m, cfg, p, reqs())
+    spec = SpeculateConfig(mode="ngram", tenants={"b": False})
+    got, stats, _ = _run(m, cfg, p, reqs(), speculate=spec)
+    assert got == ref
+    assert stats.spec_proposed == 0
+    assert stats.spec_ticks > 0
+
+
+def test_spec_adaptive_depth_thresholds(small_model):
+    """The acceptance EWMA maps onto the compiled {1, 2, 4, 8} depth zoo
+    (no new shapes from adapting); a fixed-depth config always asks for
+    the full k."""
+    cfg, m, p = small_model
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64, speculate="ngram")
+    for ewma, want in [(1.0, 8), (0.8, 8), (0.5, 4), (0.3, 2), (0.05, 1)]:
+        eng._spec_ewma[0] = ewma
+        assert eng._spec_depth(0) == want, ewma
+    fixed = ServeEngine(
+        m, p, batch_slots=2, max_len=64,
+        speculate=SpeculateConfig(mode="ngram", adaptive=False),
+    )
+    fixed._spec_ewma[0] = 0.0
+    assert fixed._spec_depth(0) == fixed.spec_k
+
+
+def test_spec_adaptive_ewma_decays_on_rejection(small_model):
+    """Rejected drafts must pull the proposing slot's EWMA below its
+    optimistic start (shrinking later depths), and the stream itself stays
+    bit-identical regardless."""
+    cfg, m, p = small_model
+    ref, _, _ = _run(m, cfg, p, _spec_requests(cfg, n=4))
+    got, stats, eng = _run(m, cfg, p, _spec_requests(cfg, n=4),
+                           speculate="ngram")
+    assert got == ref
+    assert stats.spec_accepted < stats.spec_proposed  # some rejections
+    assert float(eng._spec_ewma.min()) < 1.0
+
+
+def test_spec_prewarm_covers_every_verify_shape(small_model):
+    """After prewarm(sampling=True) a mixed speculative run must hit zero
+    runtime compiles: the verify depth ladder x smode zoo is finite."""
+    cfg, m, p = small_model
+    eng = ServeEngine(m, p, batch_slots=2, max_len=64, speculate="ngram")
+    eng.prewarm(sampling=True)
+    for r in _spec_requests(cfg, n=4):
+        eng.submit(r)
+    stats = eng.run()
+    assert stats.prefill_compiles == 0
+    assert stats.spec_ticks > 0
+
+
+def test_spec_requires_unified_engine(small_model):
+    cfg, m, p = small_model
+    with pytest.raises(ValueError, match="unified"):
+        ServeEngine(m, p, batch_slots=2, max_len=64, unified=False,
+                    speculate="ngram")
+
+
+def test_speculate_config_parse():
+    assert SpeculateConfig.parse("off") is None
+    assert SpeculateConfig.parse("ngram").mode == "ngram"
+    d = SpeculateConfig.parse("draft:codeqwen1.5-7b")
+    assert (d.mode, d.draft_arch) == ("draft", "codeqwen1.5-7b")
+    assert SpeculateConfig.parse("ngram", k=4).k == 4
+    with pytest.raises(ValueError):
+        SpeculateConfig.parse("banana")
+    with pytest.raises(ValueError):
+        SpeculateConfig(mode="ngram", k=0)
