@@ -24,6 +24,12 @@ Two measured scenarios:
   speculation off; reports acceptance, tok/s per drafter and the
   off→ngram speedup. Outputs are bit-identical by construction, so the
   rows measure pure scheduling/dispatch win. Report-only trajectory rows.
+* **overload survival** (``--overload-json``) — an arrival burst far beyond
+  capacity served ungated (TTFT grows with queue position) vs gated by the
+  cluster's admission controller with per-request TTFT deadlines under the
+  closed control loop: excess load is shed up front and the admitted
+  remainder's p99 TTFT is held near the uncongested floor. Report-only
+  trajectory rows.
 * **cluster split-vs-merge** (``--cluster``, needs ≥ 2 devices) — the SAME
   mixed scalar-vector arrival stream served by ``ServeCluster`` in split
   mode (independent replicas behind the JSQ router) and merge mode (one
@@ -771,6 +777,145 @@ def run_paged(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+# overload scenario (all rows report-only, "_overload_" in check_regression):
+# an arrival burst far beyond capacity hits the SAME single-replica cluster
+# three ways — uncongested (wide spacing: the latency floor), ungated
+# (no admission: TTFT grows with queue position, the unbounded baseline),
+# and gated (admission control + per-request TTFT deadlines under
+# run_controlled: excess load is shed up front, the admitted remainder
+# keeps near-uncongested tails). The claim under test is the robustness
+# invariant: admitted p99 TTFT stays within 2x the uncongested p99 while
+# the ungated baseline's p99 grows with burst size.
+OVERLOAD_REQUESTS = 48
+OVERLOAD_PROMPT_LEN = 8
+OVERLOAD_MAX_NEW = 8
+OVERLOAD_IAT_S = 0.0005  # burst: far below per-request service time
+UNCONGESTED_IAT_S = 0.08  # wide spacing: each request sees an idle engine
+OVERLOAD_DEADLINE_MULT = 2.0  # deadline = mult * measured uncongested p99
+OVERLOAD_MAX_QUEUE = 6
+OVERLOAD_INTERVAL_S = 0.05  # control interval for run_controlled
+
+
+def _overload_reqs(cfg, n: int, iat: float, seed: int = 9,
+                   deadline_s: float | None = None):
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            i * iat,
+            Request(
+                rid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab_size, size=OVERLOAD_PROMPT_LEN
+                ).astype(np.int32),
+                params=SamplingParams(max_new=OVERLOAD_MAX_NEW, seed=100 + i),
+                tenant=f"tenant{i % 2}",
+                deadline_s=deadline_s,
+            ),
+        )
+        for i in range(n)
+    ]
+
+
+def _ttft_p99(reqs) -> float:
+    served = sorted(
+        r.first_token_at - r.submitted_at
+        for r in reqs
+        if r.finish_reason in ("length", "stop") and r.first_token_at > 0
+    )
+    if not served:
+        return float("nan")
+    return served[min(len(served) - 1, int(0.99 * len(served)))]
+
+
+def run_overload(csv: bool = True) -> list[tuple[str, float, str]]:
+    """Overload survival: shed rate + admitted-tail TTFT vs the ungated
+    baseline, single-replica cluster on the default device."""
+    from repro.serve import AdmissionPolicy
+    from repro.serve.controller import ReconfigController
+
+    cfg, model, params = _model()
+    dev = [jax.devices()[0]]
+
+    # uncongested floor: wide spacing, no admission needed
+    cl = ServeCluster(model, params, batch_slots=4, max_len=96, devices=dev)
+    cl.prewarm(sampling=True)
+    unc = _overload_reqs(cfg, 12, UNCONGESTED_IAT_S)
+    stats = cl.run(unc)
+    unc_p99 = _ttft_p99([r for _, r in unc])
+    served_rate = sum(r.n_generated for _, r in unc) / stats.wall_seconds
+
+    # ungated baseline: the whole burst queues, TTFT grows with position
+    cl = ServeCluster(model, params, batch_slots=4, max_len=96, devices=dev)
+    cl.prewarm(sampling=True)
+    base = _overload_reqs(cfg, OVERLOAD_REQUESTS, OVERLOAD_IAT_S)
+    cl.run(base)
+    base_p99 = _ttft_p99([r for _, r in base])
+
+    # gated: admission control + deadlines under the closed control loop
+    deadline = OVERLOAD_DEADLINE_MULT * unc_p99
+    cl = ServeCluster(
+        model, params, batch_slots=4, max_len=96, devices=dev,
+        admission=AdmissionPolicy(
+            max_queue=OVERLOAD_MAX_QUEUE, initial_tok_per_s=served_rate,
+        ),
+    )
+    cl.prewarm(sampling=True)
+    gated = _overload_reqs(
+        cfg, OVERLOAD_REQUESTS, OVERLOAD_IAT_S, deadline_s=deadline
+    )
+    ctl = ReconfigController.for_cluster(cl, interval_s=OVERLOAD_INTERVAL_S)
+    gstats = cl.run_controlled(gated, controller=ctl)
+    greqs = [r for _, r in gated]
+    adm_p99 = _ttft_p99(greqs)
+    n_shed = sum(r.finish_reason == "rejected" for r in greqs)
+    n_admitted = len(greqs) - n_shed
+
+    burst = (
+        f"{OVERLOAD_REQUESTS} reqs at {OVERLOAD_IAT_S * 1e3:.1f}ms IAT, "
+        f"1 replica, 4 slots"
+    )
+    rows = [
+        (
+            "serve_overload_uncongested_ttft_p99_s",
+            unc_p99,
+            f"12 reqs at {UNCONGESTED_IAT_S * 1e3:.0f}ms IAT: the latency "
+            "floor the admitted tail is held against",
+        ),
+        (
+            "serve_overload_baseline_ttft_p99_s",
+            base_p99,
+            f"{burst}, NO admission: {base_p99 / max(unc_p99, 1e-9):.1f}x "
+            "the uncongested p99 — grows with burst size",
+        ),
+        (
+            "serve_overload_admitted_ttft_p99_s",
+            adm_p99,
+            f"{burst}, admission on (max_queue={OVERLOAD_MAX_QUEUE}, "
+            f"deadline={OVERLOAD_DEADLINE_MULT:.0f}x uncongested p99): "
+            f"{n_admitted} admitted at "
+            f"{adm_p99 / max(unc_p99, 1e-9):.2f}x the uncongested p99",
+        ),
+        (
+            "serve_overload_admitted_ttft_ratio",
+            adm_p99 / max(unc_p99, 1e-9),
+            "admitted p99 / uncongested p99 — the robustness invariant is "
+            "<= 2.0 while the baseline ratio grows unboundedly",
+        ),
+        (
+            "serve_overload_shed_rate",
+            n_shed / len(greqs),
+            f"{n_shed}/{len(greqs)} shed "
+            f"(stats: shed={gstats.shed} rejected={gstats.rejected} "
+            f"queue_peak={gstats.queue_peak}; baseline queue_peak bound only "
+            "by burst size)",
+        ),
+    ]
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
 def _write_json(path: str, rows, benchmark: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     payload = {
@@ -820,6 +965,12 @@ def main() -> None:
         help="write speculative-decoding rows as JSON (also enables the "
         "scenario; report-only trajectory rows)",
     )
+    ap.add_argument(
+        "--overload-json", default=None, metavar="PATH",
+        help="write overload-survival rows (admission control + load "
+        "shedding vs the ungated baseline) as JSON (also enables the "
+        "scenario; report-only trajectory rows)",
+    )
     args = ap.parse_args()
 
     if args.cluster or args.cluster_json is not None:
@@ -835,10 +986,11 @@ def main() -> None:
     if args.sampled_json is not None:
         sampled = run_sampled(csv=True)
         _write_json(args.sampled_json, sampled, "serving_sampled")
-    # bare --skip-steady means "mixed only"; with --paged-json/--spec-json
-    # it means "that scenario only" (each CI step runs its own scenario)
+    # bare --skip-steady means "mixed only"; with a scenario-specific
+    # --*-json it means "that scenario only" (each CI step runs its own)
     if args.mixed_json is not None or (
-        args.skip_steady and args.paged_json is None and args.spec_json is None
+        args.skip_steady and args.paged_json is None
+        and args.spec_json is None and args.overload_json is None
     ):
         mixed = run_mixed(csv=True)
         if args.mixed_json:
@@ -849,6 +1001,9 @@ def main() -> None:
     if args.spec_json is not None:
         spec = run_spec(csv=True)
         _write_json(args.spec_json, spec, "serving_spec")
+    if args.overload_json is not None:
+        ov = run_overload(csv=True)
+        _write_json(args.overload_json, ov, "serving_overload")
 
 
 if __name__ == "__main__":

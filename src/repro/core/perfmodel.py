@@ -222,3 +222,93 @@ def model_staged_merge(
         host_exchange_bytes=0.0,
         energy_j=e,
     )
+
+
+# ---------------------------------------------------------------------------
+# serving-mode model (the reconfiguration controller's decision input)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServingMix:
+    """A windowed serving workload, summarized for mode prediction.
+
+    The controller (:mod:`repro.serve.controller`) folds its sliding
+    window of arrival/queue observations into one of these; the model
+    below turns it into predicted split vs merge makespans. Token costs
+    (``flops_per_token``, ``hbm_bytes_per_token``) come from the served
+    model's parameter count; the scheduling constants mirror the engine's
+    (``prefill_budget`` prompt tokens packed per iteration, fused decode
+    chunks of ``max_chunk`` steps, ``batch_slots`` concurrent slots).
+    """
+
+    n_requests: int
+    prompt_tokens: float  # Σ prompt length over the window
+    decode_tokens: float  # Σ max_new (or observed generated) over the window
+    longest_tokens: float  # max decode length of any single request
+    flops_per_token: float  # ~2 × parameter count
+    hbm_bytes_per_token: float  # ~parameter bytes (weight stream per step)
+    coll_bytes_per_token: float = 1e5  # merge-mode per-row activation exchange
+    prefill_budget: int = 64
+    max_chunk: int = 8
+    batch_slots: int = 4
+
+
+def model_serving_mode(
+    mix: ServingMix, n_devices: int, mode: str, hw: HardwareModel = V5E
+) -> float:
+    """Predicted seconds to serve ``mix`` in ``mode`` ("split"|"merge").
+
+    Mirrors the engine's scheduling structure rather than a pure roofline:
+
+    * **prefill** is admission-bandwidth-bound — each engine packs at most
+      ``prefill_budget`` prompt tokens per scheduling iteration, so split
+      mode's n independent pack streams admit n× faster (the paper's
+      many-small-tasks story), while each merge iteration pays a barrier;
+    * **decode** is a sequence of fused chunk steps — the sequential depth
+      is the longest stream (or the queue serialized through the slots),
+      each step streams the weights once per engine (batch-amortized), so
+      merge mode's n-chip HBM makes memory-bound decode n× faster but
+      pays per-row activation collectives and per-chunk barriers.
+
+    Few long requests → merge wins (HBM). Many short ones → split wins
+    (admission bandwidth, no barriers). With n_devices == 1 both modes
+    degenerate to the same engine and the prediction collapses too.
+    """
+    assert mode in ("split", "merge"), mode
+    n = max(int(n_devices), 1)
+    chips = n if mode == "merge" else 1
+    replicas = 1 if mode == "merge" else n
+    barrier = hw.barrier_overhead if mode == "merge" else 0.0
+    # --- prefill: iterations are serialized per engine by the pack budget
+    share_p = mix.prompt_tokens / replicas
+    iters = -(-share_p // mix.prefill_budget) if share_p > 0 else 0.0
+    t_pack = max(
+        mix.prefill_budget * mix.flops_per_token / (chips * hw.peak_flops),
+        mix.hbm_bytes_per_token / (chips * hw.hbm_bw),
+    )
+    t_prefill = iters * (hw.launch_overhead + barrier + t_pack)
+    # --- decode: sequential chunk steps over the batched slots
+    share_d = mix.decode_tokens / replicas
+    b = min(mix.batch_slots, max(1, round(mix.n_requests / replicas)))
+    steps = max(mix.longest_tokens, share_d / b)
+    t_step = max(
+        b * mix.flops_per_token / (chips * hw.peak_flops),
+        mix.hbm_bytes_per_token / (chips * hw.hbm_bw),
+    )
+    if mode == "merge":
+        t_step += b * mix.coll_bytes_per_token / hw.ici_bw
+    dispatches = steps / mix.max_chunk
+    t_decode = steps * t_step + dispatches * (hw.launch_overhead + barrier)
+    return t_prefill + t_decode
+
+
+def serving_mode_advice(
+    mix: ServingMix, n_devices: int, hw: HardwareModel = V5E
+) -> tuple[str, dict[str, float]]:
+    """(best_mode, {"split": s, "merge": s}) for a windowed workload."""
+    seconds = {
+        m: model_serving_mode(mix, n_devices, m, hw) for m in ("split", "merge")
+    }
+    best = min(seconds, key=lambda m: (seconds[m], m))
+    return best, seconds

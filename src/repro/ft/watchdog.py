@@ -1,7 +1,10 @@
 """Heartbeat watchdog: straggler and failure detection.
 
-Controllers (training loops, pod tenants, data workers) register lanes and
-beat every step. The watchdog thread classifies lanes:
+Controllers (training loops, pod tenants, data workers, and the serving
+cluster's split-mode replica threads — see ``repro.serve.cluster``, which
+beats one lane per replica scheduling iteration and re-homes a dead
+replica's live requests onto survivors) register lanes and beat every
+step. The watchdog thread classifies lanes:
 
 * ``ok``        — beat within `straggler_after`
 * ``straggler`` — stale beyond `straggler_after` (mitigation hook fires:
@@ -73,6 +76,13 @@ class Watchdog:
     def status(self, lane: str) -> str:
         with self._lock:
             return self._lanes[lane].status
+
+    def stale_seconds(self, lane: str) -> float:
+        """Seconds since the lane's last beat — telemetry for supervisors
+        that want the raw staleness, not just the classified status (the
+        serving cluster reports it; tests assert against thresholds)."""
+        with self._lock:
+            return time.monotonic() - self._lanes[lane].last_beat
 
     def snapshot(self) -> dict[str, str]:
         with self._lock:

@@ -20,6 +20,8 @@ from repro.configs import get_arch
 from repro.core.modes import Mode
 from repro.models import LM
 from repro.serve import (
+    AdmissionPolicy,
+    AdmissionRejected,
     Request,
     SamplingParams,
     ServeCluster,
@@ -115,9 +117,25 @@ def main() -> None:
         help="max speculation depth (proposed tokens per slot per verify "
         "dispatch); default 8, adaptively shrunk per slot by acceptance",
     )
+    ap.add_argument(
+        "--max-queue", type=int, default=None,
+        help="admission control (cluster modes): bound each replica's wait "
+        "queue; arrivals beyond it are rejected 'queue_full' instead of "
+        "growing TTFT without bound",
+    )
+    ap.add_argument(
+        "--deadline-s", type=float, default=None,
+        help="admission control (cluster modes): per-request TTFT deadline; "
+        "arrivals whose predicted TTFT exceeds it are shed up front "
+        "('shed_deadline') rather than served hopelessly late",
+    )
     args = ap.parse_args()
     if args.prefix_cache and not args.kv_block_size:
         ap.error("--prefix-cache requires --kv-block-size")
+    admission_on = args.max_queue is not None or args.deadline_s is not None
+    if admission_on and args.cluster_mode == "single":
+        ap.error("--max-queue/--deadline-s need a cluster mode (admission "
+                 "control lives at the cluster layer)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -129,6 +147,9 @@ def main() -> None:
     if mode == "auto":
         mode = _resolve_auto(len(jax.devices()), args.requests, args.slots)
         print(f"cluster-mode auto -> {mode}")
+    if admission_on and mode == "single":
+        ap.error("--max-queue/--deadline-s need a cluster mode (admission "
+                 "control lives at the cluster layer)")
     spec_kw = {} if args.spec_k is None else {"k": args.spec_k}
     speculate = SpeculateConfig.parse(args.speculate, **spec_kw)
     common = dict(
@@ -141,6 +162,8 @@ def main() -> None:
         target = ServeEngine(model, params, **common)
         desc = "single-device engine"
     else:
+        if admission_on:
+            common["admission"] = AdmissionPolicy(max_queue=args.max_queue)
         target = ServeCluster(model, params, mode=Mode.parse(mode), **common)
         desc = f"{target!r}"
 
@@ -155,7 +178,7 @@ def main() -> None:
     handles = []
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2 + 1, args.prompt_len + 1))
-        handles.append(target.submit(
+        req = (
             Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
@@ -167,8 +190,13 @@ def main() -> None:
                     seed=None if args.sample_seed is None else args.sample_seed + i,
                     stop=tuple(args.stop),
                 ),
+                deadline_s=args.deadline_s,
             )
-        ))
+        )
+        try:
+            handles.append(target.submit(req))
+        except AdmissionRejected as rej:
+            print(f"req {i} rejected at admission: {rej}")
     if args.stream and handles:
         # the handle iterator drives the engine; every other request makes
         # progress in the same ticks — streaming is a view, not a mode
@@ -191,6 +219,24 @@ def main() -> None:
         f"TTFT p50={stats.ttft_p50*1e3:.1f}ms p99={stats.ttft_p99*1e3:.1f}ms  "
         f"TPOT p50={stats.tpot_p50*1e3:.2f}ms p99={stats.tpot_p99*1e3:.2f}ms"
     )
+    # backpressure / robustness counters: queue high-water mark and KV-pool
+    # admission failures come from the engine(s); shed/rejected/rehomed only
+    # move when the cluster's admission controller or failure recovery acted
+    bp = (
+        f"backpressure: queue_peak={getattr(stats, 'queue_peak', 0)} "
+        f"alloc_failures={getattr(stats, 'alloc_failures', 0)}"
+    )
+    if mode != "single":
+        # lifetime totals from the admission controller (run()'s stats deltas
+        # start at run() entry and would miss this launcher's submit-time
+        # rejections)
+        adm = target.admission
+        bp += (
+            f" shed={0 if adm is None else adm.shed}"
+            f" rejected={0 if adm is None else adm.rejected}"
+            f" rehomed={getattr(stats, 'rehomed', 0)}"
+        )
+    print(bp)
     if speculate is not None:
         print(
             f"speculate[{speculate.mode}]: "

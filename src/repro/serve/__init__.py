@@ -24,7 +24,23 @@ from repro.serve.cluster import (
     Router,
     ServeCluster,
 )
-from repro.serve.engine import Request, RequestHandle, ServeEngine, ServeStats
+from repro.serve.controller import (
+    AdmissionController,
+    AdmissionPolicy,
+    ControllerConfig,
+    FailurePolicy,
+    ReconfigController,
+    SwitchDecision,
+    TenantPolicy,
+    WindowSample,
+)
+from repro.serve.engine import (
+    AdmissionRejected,
+    Request,
+    RequestHandle,
+    ServeEngine,
+    ServeStats,
+)
 from repro.serve.kv_pool import BlockPool, PoolStats, blocks_for
 from repro.serve.prefix_cache import PrefixStats, RadixPrefixCache
 from repro.serve.sampling import (
@@ -55,6 +71,16 @@ __all__ = [
     "ClusterStats",
     "ReconfigureReport",
     "Router",
+    # supervision: reconfiguration control, admission, failure recovery
+    "ReconfigController",
+    "ControllerConfig",
+    "SwitchDecision",
+    "WindowSample",
+    "AdmissionController",
+    "AdmissionPolicy",
+    "AdmissionRejected",
+    "TenantPolicy",
+    "FailurePolicy",
     # speculative decoding
     "SpeculateConfig",
     "NGramDrafter",

@@ -26,12 +26,29 @@ temporal, single-device version; this module adds the spatial one):
 Both modes serve any greedy request stream with bit-identical outputs to a
 plain single-device engine (pinned by ``tests/test_multidev.py``): the
 cluster changes WHERE work runs, never what is computed.
+
+Robustness layers (all opt-in, see :mod:`repro.serve.controller`):
+
+* ``admission=AdmissionPolicy(...)`` gates every request (submit() and the
+  arrival stream alike) through per-tenant rate buckets, a bounded queue,
+  and deadline-based shedding — typed ``AdmissionRejected`` either raises
+  (submit) or marks the request ``finish_reason="rejected"`` (arrivals);
+* ``failure=FailurePolicy(...)`` arms a watchdog over the split-mode
+  controller threads: a replica whose heartbeat goes stale is declared
+  dead and its live requests re-home onto survivors, bit-identically for
+  seeded streams (``fold_in(seed, position)`` keying);
+* ``run_controlled(...)`` closes the loop: serve in control intervals and
+  let a :class:`~repro.serve.controller.ReconfigController` trigger
+  split↔merge switches when the perfmodel-predicted win clears the
+  measured switch cost.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
 from dataclasses import dataclass, field
 from typing import Mapping, Optional, Sequence
 
@@ -40,9 +57,19 @@ import jax
 from repro.common.utils import pytree_bytes
 from repro.core.modes import Mode
 from repro.dist.sharding import serving_mesh_info
+from repro.ft.watchdog import Watchdog
 from repro.models.model import LM
 from repro.serve.backend import DeviceBackend, ShardedBackend
+from repro.serve.controller import (
+    AdmissionController,
+    AdmissionPolicy,
+    FailurePolicy,
+    ReconfigController,
+    WindowSample,
+    build_continuation,
+)
 from repro.serve.engine import (
+    AdmissionRejected,
     Request,
     RequestHandle,
     ServeEngine,
@@ -73,21 +100,40 @@ class Router:
         self.load = [0.0] * n_replicas
         self.assigned = [0] * n_replicas
         self.tenant_home: dict[str, int] = {}
+        self.retired: set[int] = set()  # dead replicas: never routed to
 
     @staticmethod
     def cost(req: Request) -> float:
         return float(len(req.prompt) + req.max_new)
 
+    def peek(self, req: Request) -> int:
+        """The replica ``route()`` would pick, without committing load
+        (admission control inspects the prospective target's queue)."""
+        if (
+            req.tenant is not None
+            and self.tenant_home.get(req.tenant) is not None
+        ):
+            return self.tenant_home[req.tenant]
+        live = [j for j in range(self.n) if j not in self.retired] or list(
+            range(self.n)
+        )
+        return min(live, key=lambda j: (self.load[j], j))
+
     def route(self, req: Request) -> int:
-        if req.tenant is not None and req.tenant in self.tenant_home:
-            i = self.tenant_home[req.tenant]
-        else:
-            i = min(range(self.n), key=lambda j: (self.load[j], j))
-            if req.tenant is not None:
-                self.tenant_home[req.tenant] = i
+        i = self.peek(req)
+        if req.tenant is not None and req.tenant not in self.tenant_home:
+            self.tenant_home[req.tenant] = i
         self.load[i] += self.cost(req)
         self.assigned[i] += 1
         return i
+
+    def retire(self, replica: int) -> None:
+        """Take a dead replica out of rotation: JSQ skips it and its
+        tenants re-home to a survivor on their next request."""
+        self.retired.add(replica)
+        self.tenant_home = {
+            t: i for t, i in self.tenant_home.items() if i != replica
+        }
 
     def unassign(self, replica: int, req: Request) -> None:
         """Credit back a routed-but-unserved request (it is about to be
@@ -153,6 +199,12 @@ class ClusterStats:
     mode: str  # e.g. "split" or "split->merge"
     segments: list[SegmentStats]
     reconfigures: list[ReconfigureReport] = field(default_factory=list)
+    # robustness counters for THIS run (deltas, filled by the cluster):
+    shed: int = 0  # deadline-shed arrivals (shed_deadline)
+    rejected: int = 0  # rate_limited + queue_full arrivals
+    rehomed: int = 0  # live requests moved off a dead replica
+    stragglers: int = 0  # watchdog straggler flags (recovered or not)
+    dead_replicas: int = 0  # replicas declared dead during the run
 
     def _each(self, attr: str) -> list:
         return [getattr(r, attr) for s in self.segments for r in s.replicas]
@@ -192,6 +244,15 @@ class ClusterStats:
     @property
     def spec_acceptance(self) -> float:
         return self.spec_accepted / max(self.spec_proposed, 1)
+
+    @property
+    def queue_peak(self) -> int:
+        """High-water mark of any single replica's waiting queue."""
+        return max(self._each("queue_peak"), default=0)
+
+    @property
+    def alloc_failures(self) -> int:
+        return sum(self._each("alloc_failures"))
 
     @property
     def wall_seconds(self) -> float:
@@ -267,6 +328,8 @@ class ServeCluster:
         prefix_cache: bool = False,
         speculate=None,
         tenant_defaults: Optional[Mapping[str, SamplingParams]] = None,
+        admission: Optional[AdmissionPolicy] = None,
+        failure: Optional[FailurePolicy] = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -306,6 +369,20 @@ class ServeCluster:
         # cancellation through this; reconfigure() re-homes the entries)
         self._where: dict[Request, ServeEngine] = {}
         self._fabrics: dict[Mode, list[ServeEngine]] = {}
+        # ---- robustness state (see module docstring)
+        self.admission = (
+            AdmissionController(admission) if admission is not None else None
+        )
+        self.failure = failure
+        self.rehomed = 0
+        self.stragglers = 0
+        self._dead: set[int] = set()  # indices into the SPLIT fabric
+        self._rehome_lock = threading.Lock()
+        # orig -> (continuation, tokens committed before the death);
+        # cont -> orig for mapping the survivor's finished list back
+        self._rehomed_map: dict[Request, tuple[Request, int]] = {}
+        self._cont_orig: dict[Request, Request] = {}
+        self._seg_routes: dict[int, list] = {}  # replica -> current (t, req)s
         self.mode = Mode.parse(mode)
         self._ensure_fabric(self.mode)
 
@@ -377,6 +454,11 @@ class ServeCluster:
         split/merge switches and mid-stream reconfiguration."""
         if req.tenant is not None and req.tenant in self.tenant_defaults:
             req.apply_default_params(self.tenant_defaults[req.tenant])
+        if self.admission is not None:
+            self._admission_gate(req)  # raises AdmissionRejected
+        return self._submit_admitted(req)
+
+    def _submit_admitted(self, req: Request) -> RequestHandle:
         engines = self.engines
         if self.mode is Mode.MERGE:  # one fused engine, no routing
             i = 0
@@ -390,11 +472,58 @@ class ServeCluster:
         self._where[req] = engines[i]
         return handle
 
+    def _admission_gate(self, req: Request) -> None:
+        """Gate a request against its PROSPECTIVE target replica's queue:
+        depth bounds backpressure, queued cost feeds the TTFT predictor."""
+        engines = self.engines
+        i = 0 if self.mode is Mode.MERGE else self.router.peek(req)
+        target = engines[i]
+        depth = len(target.waiting)
+        queued = sum(Router.cost(r) for r in target.waiting) + sum(
+            float(r.params.max_new - len(r.generated))
+            for r in target.slot_req
+            if r is not None
+        )
+        self.admission.admit(req, queue_depth=depth, queue_cost=queued)
+
+    def _arrival_gate(self, eng: ServeEngine, replica: Optional[int] = None):
+        """Admission closure for one engine's arrival stream (engine.run
+        ``gate=``): gates against the engine's LIVE queue at each
+        request's scheduled arrival time. On rejection the pre-routed
+        request's load charge and ownership entry are rolled back before
+        the engine finalizes it as "rejected"."""
+        if self.admission is None:
+            return None
+        adm = self.admission
+
+        def gate(req: Request) -> None:
+            depth = len(eng.waiting)
+            queued = sum(Router.cost(r) for r in eng.waiting) + sum(
+                float(r.params.max_new - len(r.generated))
+                for r in eng.slot_req
+                if r is not None
+            )
+            try:
+                adm.admit(req, queue_depth=depth, queue_cost=queued)
+            except AdmissionRejected:
+                if replica is not None:
+                    self.router.unassign(replica, req)
+                self._where.pop(req, None)
+                raise
+
+        return gate
+
     def cancel(self, req: Request) -> None:
         """Abort a request wherever it currently lives (handle plumbing).
         Cancelling a request that already finished is a no-op, matching
         the engine-level semantics (a client-side timeout racing normal
-        completion must not crash)."""
+        completion must not crash). A re-homed request's cancel follows it
+        to the survivor's continuation; the sync pass then folds the
+        "cancelled" outcome back into the original handle."""
+        with self._rehome_lock:
+            pair = self._rehomed_map.get(req)
+        if pair is not None:
+            req = pair[0]
         eng = self._where.get(req)
         if eng is None:
             if req.finish_reason is not None:
@@ -405,12 +534,19 @@ class ServeCluster:
     def _handle_pump(self, req: Request) -> None:
         """Progress hook for a blocked handle iterator: drive the owning
         engine when this thread can, politely poll when a controller
-        thread owns it (split-mode replicas run under their own threads)."""
-        eng = self._where.get(req)
-        if eng is None or eng._running:
+        thread owns it (split-mode replicas run under their own threads).
+        For a re-homed request the survivor's CONTINUATION is pumped and
+        its progress synced back into the original (the handle's view)."""
+        with self._rehome_lock:
+            pair = self._rehomed_map.get(req)
+        target = pair[0] if pair is not None else req
+        eng = self._where.get(target)
+        if eng is None or eng._running or eng._poisoned:
             time.sleep(2e-4)
             return
-        eng._handle_pump(req)
+        eng._handle_pump(target)
+        if pair is not None:
+            self._sync_rehomed()
         if req.complete:
             self._handle_done(req)
 
@@ -461,58 +597,301 @@ class ServeCluster:
         self.reconfigures.append(rep)
         return rep
 
+    # --------------------------------------------------- failure / re-homing
+
+    def _make_tick(self, idx: int, wd: Optional[Watchdog]):
+        """Per-replica heartbeat closure for the serving loop's on_tick:
+        beat the watchdog lane, then run the (test-injectable) hook — in
+        that order, so a stalling hook leaves the beat stale and the
+        watchdog sees exactly the stall it is meant to catch."""
+        hook = self.failure.tick_hook if self.failure is not None else None
+        lane = f"replica{idx}"
+
+        def tick() -> None:
+            if wd is not None:
+                wd.beat(lane)
+            if hook is not None:
+                hook(idx)
+
+        return tick
+
+    def _on_straggler(self, lane: str, state) -> None:
+        self.stragglers += 1
+
+    def _on_dead(self, lane: str, state) -> None:
+        self._rehome_dead(int(lane.removeprefix("replica")))
+
+    def _rehome_dead(self, idx: int) -> None:
+        """Declare split replica ``idx`` dead and move its live requests
+        to survivors. Runs on the watchdog thread while the dead replica's
+        controller thread is stuck: the poison pill guarantees that if
+        that thread ever resumes, it aborts at its next iteration boundary
+        without touching the state re-homed here (beats only happen at
+        iteration boundaries, so a dead verdict implies the thread is
+        parked inside its tick hook or a dispatch, not mid-bookkeeping).
+
+        Requests with committed (harvested) tokens continue on a survivor
+        via :func:`build_continuation` — prompt' = prompt ++ committed —
+        and their remaining draws land at the same absolute positions, so
+        seeded streams stay bit-identical. Unharvested in-flight draws on
+        the dead replica are re-derived (same fold_in key, same value)."""
+        with self._rehome_lock:
+            if idx in self._dead:
+                return
+            engines = self._fabrics[Mode.SPLIT]
+            e = engines[idx]
+            e._poisoned = True
+            self._dead.add(idx)
+            self.router.retire(idx)
+            survivors = [
+                j for j in range(len(engines)) if j not in self._dead
+            ]
+            # work the dead replica DID finish is kept, not re-served
+            self.finished.extend(self._cont_orig.pop(r, r) for r in e.finished)
+            e.finished = []
+            if not survivors:
+                return  # whole fabric gone: handles stay blocked, by design
+            moved: list[Request] = []
+            for r in list(e.waiting):
+                if r.finish_reason is None:
+                    self.router.unassign(idx, r)
+                    moved.append(r)
+            e.waiting.clear()
+            for slot, r in enumerate(e.slot_req):
+                if r is not None and r.finish_reason is None:
+                    self.router.unassign(idx, r)
+                    moved.append(r)
+                e.slot_req[slot] = None
+            e.slot_len[:] = 0
+            e.slot_fed[:] = 0
+            e._prefilling.clear()
+            e._pending.clear()
+            # scheduled arrivals the dead loop never got to submit
+            seen = set(map(id, moved))
+            for _t, r in self._seg_routes.get(idx, ()):
+                if (
+                    r.finish_reason is None
+                    and r.submitted_at == 0.0
+                    and id(r) not in seen
+                ):
+                    self.router.unassign(idx, r)
+                    moved.append(r)
+            for r in moved:
+                self._resubmit_rehomed(r)
+            self.rehomed += len(moved)
+
+    def _resubmit_rehomed(self, req: Request) -> None:
+        """Hand one live request from a dead replica to a survivor.
+        Caller holds ``_rehome_lock``; the router already skips the dead
+        replica, so routing here lands on a survivor."""
+        committed = len(req.generated)
+        req.n_generated = committed  # in-flight draws will be re-derived
+        if committed >= req.params.max_new:
+            # fully harvested — nothing left to serve, just close it out
+            req.finish_reason = req.finish_reason or "length"
+            req.done_at = req.done_at or time.perf_counter()
+            self.finished.append(req)
+            return
+        if committed == 0:
+            # nothing committed: a clean restart IS the same stream
+            # (fold_in keying — first draw lands at the same position)
+            t = req.submitted_at
+            self._submit_admitted(req)
+            if t:
+                req.submitted_at = t  # keep the original TTFT clock
+            return
+        cont, base = build_continuation(req)
+        i = self.router.route(cont)
+        eng = self._fabrics[Mode.SPLIT][i]
+        eng.submit(cont)
+        cont.submitted_at = req.submitted_at  # recovery latency is visible
+        self._where[cont] = eng
+        self._where[req] = eng
+        self._rehomed_map[req] = (cont, base)
+        self._cont_orig[cont] = req
+
+    def _sync_rehomed(self) -> None:
+        """Fold re-homed continuations' progress back into their original
+        request objects — the handles clients hold point at the originals.
+        Safe to call from any thread; completed pairs are retired here
+        (the finished-list fold maps cont→orig separately)."""
+        with self._rehome_lock:
+            for orig, (cont, base) in list(self._rehomed_map.items()):
+                synced = len(orig.generated) - base
+                fresh = cont.generated[synced:]
+                if fresh:
+                    orig.generated.extend(fresh)
+                if (
+                    orig.first_token_at is None
+                    and cont.first_token_at is not None
+                ):
+                    orig.first_token_at = cont.first_token_at
+                if cont.complete:
+                    orig.n_generated = base + cont.n_generated
+                    orig.finish_reason = cont.finish_reason
+                    orig.done_at = cont.done_at
+                    del self._rehomed_map[orig]
+
     # -------------------------------------------------------------------- run
 
-    def _run_segment(self, seg_arrivals: list) -> SegmentStats:
+    def _run_segment(
+        self, seg_arrivals: list, deadline_s: Optional[float] = None
+    ) -> SegmentStats:
         engines = self.engines
         # arrival-stream requests take the same intake path as submit():
         # tenant default params attach and the ownership map learns their
         # engine (so handle.cancel() reaches a request that arrived
-        # mid-stream, and per-tenant policy is honoured either way)
+        # mid-stream, and per-tenant policy is honoured either way).
+        # Admission is NOT gated here: routing happens at handover but the
+        # gate fires at each request's scheduled arrival time, on the
+        # serving thread, against the live queue (engine.run's ``gate=``) —
+        # intake-time gating would wave an entire burst through because
+        # the queue was empty when the slice was handed over.
         for _, req in seg_arrivals:
             if req.tenant is not None and req.tenant in self.tenant_defaults:
                 req.apply_default_params(self.tenant_defaults[req.tenant])
         if self.mode is Mode.MERGE:
             for _, req in seg_arrivals:
                 self._where[req] = engines[0]
-            stats = [engines[0].run(arrivals=seg_arrivals or None)]
+            stats = [
+                engines[0].run(
+                    arrivals=seg_arrivals or None,
+                    deadline_s=deadline_s,
+                    gate=self._arrival_gate(engines[0]),
+                )
+            ]
         else:
             per: list[list] = [[] for _ in engines]
             for t, req in seg_arrivals:
                 i = self.router.route(req)
                 per[i].append((t, req))
                 self._where[req] = engines[i]
+            self._seg_routes = {i: pl for i, pl in enumerate(per)}
             if len(engines) == 1:  # degenerate split: no threads needed
-                stats = [engines[0].run(arrivals=(per[0] or None))]
+                stats = [
+                    engines[0].run(
+                        arrivals=(per[0] or None),
+                        deadline_s=deadline_s,
+                        gate=self._arrival_gate(engines[0]),
+                    )
+                ]
             else:
-                # one controller thread per replica — the paper's "each core
-                # driven by its own scalar core"; jax dispatch is thread-safe
-                # across disjoint engines
-                with ThreadPoolExecutor(len(engines)) as ex:
-                    futs = [
-                        ex.submit(e.run, arrivals=(pl or None))
-                        for e, pl in zip(engines, per)
-                    ]
-                    stats = [f.result() for f in futs]
-        for e, st in zip(engines, stats):
+                stats = self._run_split_threads(engines, per, deadline_s)
+            self._seg_routes = {}
+        self._sync_rehomed()
+        if not stats:
+            stats = [ServeStats()]
+        carrier = stats[0]  # stream-stats fold target (order-independent:
+        # the threaded path returns stats in completion order, and a dead
+        # replica's stats are lost with its thread)
+        for i, e in enumerate(engines):
+            if self.mode is not Mode.MERGE and i in self._dead:
+                continue  # folded once, at declaration time (_rehome_dead)
             # work served OUTSIDE run() — handle-driven streaming and idle
             # cancellations — landed in the engine's stream-stats; fold
             # every counter into this segment (and zero them) so
             # ClusterStats reports the whole session, not just the drains
             ss = e.stream_stats
-            st.total_tokens += ss.total_tokens
-            st.total_requests += ss.total_requests
-            st.ticks += ss.ticks
-            st.prefill_compiles += ss.prefill_compiles
-            st.cancelled += ss.cancelled
+            carrier.total_tokens += ss.total_tokens
+            carrier.total_requests += ss.total_requests
+            carrier.ticks += ss.ticks
+            carrier.prefill_compiles += ss.prefill_compiles
+            carrier.cancelled += ss.cancelled
             ss.total_tokens = ss.total_requests = ss.ticks = 0
             ss.prefill_compiles = ss.cancelled = 0
-            self.finished.extend(e.finished)
+            # a survivor's finished list may hold re-homed CONTINUATIONS —
+            # clients only know the originals, so map them back
+            self.finished.extend(self._cont_orig.pop(r, r) for r in e.finished)
             e.finished = []
         # drop completed requests from the ownership map (cancellation can
         # no longer reach them; keeps the map from growing unboundedly)
         self._where = {r: e for r, e in self._where.items() if r.finish_reason is None}
         return SegmentStats(str(self.mode), stats)
+
+    def _run_split_threads(
+        self,
+        engines: list[ServeEngine],
+        per: list[list],
+        deadline_s: Optional[float],
+    ) -> list[ServeStats]:
+        """One controller thread per replica — the paper's "each core
+        driven by its own scalar core"; jax dispatch is thread-safe across
+        disjoint engines. With a :class:`FailurePolicy` armed, a watchdog
+        monitors per-iteration heartbeats; a replica declared dead has its
+        future ABANDONED (never joined — shutdown(wait=False) leaves the
+        stuck thread to die on the poison pill) and its requests re-homed,
+        after which any survivor that already returned is re-run to drain
+        the work it inherited."""
+        wd = None
+        if self.failure is not None:
+            wd = Watchdog(
+                straggler_after=self.failure.straggler_after,
+                dead_after=self.failure.dead_after,
+                poll=self.failure.poll,
+                on_straggler=self._on_straggler,
+                on_dead=self._on_dead,
+            )
+            for i in range(len(engines)):
+                if i not in self._dead:
+                    wd.register(f"replica{i}")
+            wd.start()
+        ex = ThreadPoolExecutor(len(engines))
+        stats: list[ServeStats] = []
+        try:
+            futs = {
+                i: ex.submit(
+                    e.run,
+                    arrivals=(pl or None),
+                    deadline_s=deadline_s,
+                    on_tick=self._make_tick(i, wd),
+                    gate=self._arrival_gate(e, i),
+                )
+                for i, (e, pl) in enumerate(zip(engines, per))
+                if i not in self._dead
+            }
+            done: set[int] = set()
+            while futs:
+                if wd is not None:
+                    # a replica that finished its stream stops beating —
+                    # keep its lane fresh so only genuinely stuck threads
+                    # (not early finishers) can be declared dead
+                    for i in done:
+                        wd.beat(f"replica{i}")
+                for i in list(futs):
+                    if i in self._dead:
+                        futs.pop(i)  # abandoned: poison pill reaps it
+                        continue
+                    try:
+                        stats.append(futs[i].result(timeout=0.02))
+                    except _FutTimeout:
+                        continue
+                    futs.pop(i)
+                    done.add(i)
+            if wd is not None:  # concurrency over: nothing left to monitor
+                wd.stop()
+                wd = None
+            # survivors may have inherited re-homed work AFTER their run
+            # returned — drain it now (skipped under a deadline: the next
+            # control interval serves it)
+            if deadline_s is None:
+                progressed = True
+                while progressed:
+                    progressed = False
+                    for i, e in enumerate(engines):
+                        if i in self._dead:
+                            continue
+                        if e.waiting or any(
+                            r is not None for r in e.slot_req
+                        ):
+                            stats.append(
+                                e.run(on_tick=self._make_tick(i, None))
+                            )
+                            progressed = True
+        finally:
+            ex.shutdown(wait=False)
+            if wd is not None:
+                wd.stop()
+        return stats
 
     def run(self, arrivals=None, reconfigure_schedule=None) -> ClusterStats:
         """Drain all submitted work (+ an optional open-loop ``arrivals``
@@ -532,6 +911,7 @@ class ServeCluster:
         arr = sorted(arrivals or [], key=lambda a: a[0])
         segments: list[SegmentStats] = []
         reports: list[ReconfigureReport] = []
+        base = self._counter_base()
         elapsed = 0.0  # true wall time consumed before the current segment
         for idx in range(len(schedule) + 1):
             if idx < len(schedule):
@@ -551,17 +931,145 @@ class ServeCluster:
             # drain already lives inside seg.wall_seconds; only the
             # re-placement extends the clock beyond the segment
             elapsed += seg.wall_seconds + rep.place_seconds
+        return self._finish_stats(segments, reports, base)
+
+    def run_controlled(
+        self, arrivals=None, controller=None
+    ) -> ClusterStats:
+        """Closed-loop serving: slice the stream into control intervals,
+        observe a :class:`~repro.serve.controller.WindowSample` at each
+        boundary, and let the controller trigger split↔merge switches.
+
+        Each interval runs with ``deadline_s`` — in-flight slots drain at
+        the boundary but queued work stays queued, which is exactly the
+        reconfigure()-safe state — so a committed switch carries the
+        backlog to the new fabric. A ``controller`` defaults to
+        :meth:`ReconfigController.for_cluster`; anything with the same
+        ``interval_s`` / ``observe`` / ``note_switched`` surface works
+        (tests drive the machinery with scripted deciders)."""
+        ctl = (
+            controller
+            if controller is not None
+            else ReconfigController.for_cluster(self)
+        )
+        arr = sorted(arrivals or [], key=lambda a: a[0])
+        segments: list[SegmentStats] = []
+        reports: list[ReconfigureReport] = []
+        base = self._counter_base()
+        elapsed = 0.0
+        while True:
+            interval = ctl.interval_s
+            t_end = elapsed + interval
+            seg_arr = [(t - elapsed, r) for t, r in arr if t < t_end]
+            arr = [(t, r) for t, r in arr if t >= t_end]
+            seg = self._run_segment(seg_arr, deadline_s=interval)
+            segments.append(seg)
+            seg_wall = seg.wall_seconds
+            if arr and seg_wall < interval and not self._work_pending():
+                # idle gap: sleep the stream clock forward to the next
+                # arrival (bounded by one control interval)
+                gap = min(interval, arr[0][0] - elapsed) - seg_wall
+                if gap > 0:
+                    time.sleep(gap)
+                    seg_wall += gap
+            elapsed += seg_wall
+            # ---- observe + decide
+            sample = self._window_sample(seg, seg_arr, elapsed)
+            warm = self._other_mode(self.mode) in self._fabrics
+            decision = ctl.observe(sample, warm_target=warm)
+            if decision is not None and decision.mode is not self.mode:
+                self._sync_rehomed()
+                rep = self.reconfigure(
+                    decision.mode,
+                    drain_seconds=max(0.0, seg_wall - interval),
+                )
+                reports.append(rep)
+                ctl.note_switched(elapsed, rep)
+                elapsed += rep.place_seconds
+            # ---- service-rate feedback for the deadline predictor
+            if self.admission is not None:
+                toks = sum(r.total_tokens for r in seg.replicas)
+                live = max(len(seg.replicas), 1)
+                if toks and seg.wall_seconds > 0:
+                    self.admission.note_service_rate(
+                        toks / seg.wall_seconds / live
+                    )
+            if not arr and not self._work_pending():
+                break
+        return self._finish_stats(segments, reports, base)
+
+    def _work_pending(self) -> bool:
+        for i, e in enumerate(self.engines):
+            if self.mode is not Mode.MERGE and i in self._dead:
+                continue
+            if e.waiting or any(r is not None for r in e.slot_req):
+                return True
+        return False
+
+    def _window_sample(
+        self, seg: SegmentStats, seg_arr: list, elapsed: float
+    ) -> WindowSample:
+        depth = 0
+        for i, e in enumerate(self.engines):
+            if self.mode is not Mode.MERGE and i in self._dead:
+                continue
+            depth += len(e.waiting)
+        reqs = [r for _, r in seg_arr]
+        ttfts = [t for r in seg.replicas for t in r.ttfts]
+        tpots = [t for r in seg.replicas for t in r.tpots]
+        return WindowSample(
+            t=elapsed,
+            mode=str(self.mode),
+            queue_depth=depth,
+            n_requests=len(reqs),
+            prompt_tokens=sum(len(r.prompt) for r in reqs),
+            decode_tokens=sum(r.params.max_new for r in reqs),
+            longest_tokens=max(
+                (r.params.max_new for r in reqs), default=0
+            ),
+            n_tenants=len({r.tenant for r in reqs if r.tenant is not None}),
+            ttft_p99=percentile(ttfts, 99),
+            tpot_p99=percentile(tpots, 99),
+        )
+
+    @staticmethod
+    def _other_mode(mode: Mode) -> Mode:
+        return Mode.MERGE if mode is Mode.SPLIT else Mode.SPLIT
+
+    def _counter_base(self) -> dict:
+        adm = self.admission
+        return dict(
+            rehomed=self.rehomed,
+            stragglers=self.stragglers,
+            dead=len(self._dead),
+            shed=adm.shed if adm is not None else 0,
+            rejected=adm.rejected if adm is not None else 0,
+        )
+
+    def _finish_stats(
+        self,
+        segments: list[SegmentStats],
+        reports: list[ReconfigureReport],
+        base: dict,
+    ) -> ClusterStats:
         modes = [s.mode for s in segments]
         # collapse only ADJACENT repeats: a split->merge->split round trip
         # must read as such, not dedupe to "split->merge"
         mode_label = "->".join(
             m for i, m in enumerate(modes) if i == 0 or modes[i - 1] != m
         )
-        return ClusterStats(
+        st = ClusterStats(
             mode=mode_label,
             segments=segments,
             reconfigures=reports,
         )
+        st.rehomed = self.rehomed - base["rehomed"]
+        st.stragglers = self.stragglers - base["stragglers"]
+        st.dead_replicas = len(self._dead) - base["dead"]
+        if self.admission is not None:
+            st.shed = self.admission.shed - base["shed"]
+            st.rejected = self.admission.rejected - base["rejected"]
+        return st
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (

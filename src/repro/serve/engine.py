@@ -106,6 +106,33 @@ from repro.serve.sampling import (
 from repro.serve.speculate import SpeculateConfig, build_drafter
 
 
+class AdmissionRejected(ValueError):
+    """Typed submit-time rejection: the request was never queued.
+
+    ``reason`` distinguishes the four admission outcomes so clients and
+    the cluster router can react differently to each:
+
+    * ``"infeasible"``   — could never be served (e.g. needs more KV
+      blocks than the paged pool holds); retrying is pointless.
+    * ``"shed_deadline"`` — predicted TTFT exceeds the request's
+      ``deadline_s``; admitting it would only make it miss late.
+    * ``"rate_limited"``  — the tenant's token bucket is empty; retry
+      after backoff.
+    * ``"queue_full"``    — bounded-queue backpressure; retry after
+      backoff or raise the request's priority.
+
+    Subclasses :class:`ValueError` so pre-existing callers that caught
+    the bare infeasible-paged-request raise keep working.
+    """
+
+    REASONS = ("infeasible", "shed_deadline", "rate_limited", "queue_full")
+
+    def __init__(self, reason: str, detail: str = "") -> None:
+        assert reason in self.REASONS, reason
+        self.reason = reason
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+
+
 @dataclass(eq=False)
 class Request:
     """One serving request. Identity-based equality/hash: a Request is a
@@ -124,12 +151,14 @@ class Request:
     temperature: Optional[float] = None  # deprecated: use params=...
     params: Optional[SamplingParams] = None
     tenant: Optional[str] = None  # cluster router affinity key (optional)
+    deadline_s: Optional[float] = None  # TTFT budget: shed if predicted to miss
     generated: list[int] = field(default_factory=list)
     n_generated: int = 0  # tokens sampled so far (values may still be in flight)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
-    finish_reason: Optional[str] = None  # "length" | "stop" | "cancelled"
+    finish_reason: Optional[str] = None  # "length"|"stop"|"cancelled"|"rejected"
+    reject_reason: Optional[str] = None  # AdmissionRejected.reason when rejected
 
     def __post_init__(self):
         explicit = (
@@ -262,6 +291,15 @@ class ServeStats:
     spec_proposed: int = 0
     spec_accepted: int = 0
     spec_ticks: int = 0
+    # backpressure / robustness telemetry: queue high-water mark and paged
+    # allocation failures are engine-level (filled by run()); shed /
+    # rejected / re-homed counts only become nonzero at the cluster layer,
+    # which owns admission control and failure recovery
+    queue_peak: int = 0
+    alloc_failures: int = 0
+    shed: int = 0  # deadline-based load shedding (shed_deadline)
+    rejected: int = 0  # rate_limited + queue_full rejections
+    rehomed: int = 0  # live requests moved off a dead replica
     # per-request latency samples for the requests finished in this run:
     # TTFT = first token available - submitted; TPOT = mean inter-token time
     ttfts: list[float] = field(default_factory=list)
@@ -454,6 +492,11 @@ class ServeEngine:
         # noise next to a ~ms dispatch.
         self._drive_lock = threading.RLock()
         self._running = False  # a run() loop (possibly another thread) drives
+        # poison pill for replica-failure recovery: a cluster that declared
+        # this engine dead sets it so a stuck controller thread that later
+        # resumes aborts its run() at the next iteration boundary without
+        # touching state the survivors have already re-homed
+        self._poisoned = False
         self._stream_stats = ServeStats()  # accumulator for step()-driven serving
         # the cache is donated through all consumers — the engine never
         # holds two copies of the KV cache
@@ -1174,9 +1217,10 @@ class ServeEngine:
             if need > self.num_blocks:
                 # an admission-time wait could never resolve — reject at
                 # the submission boundary instead of spinning forever
-                raise ValueError(
+                raise AdmissionRejected(
+                    "infeasible",
                     f"request needs {need} KV blocks, pool holds "
-                    f"{self.num_blocks}"
+                    f"{self.num_blocks}",
                 )
         req.submitted_at = time.perf_counter()
         self.waiting.append(req)
@@ -1710,15 +1754,21 @@ class ServeEngine:
 
     # ------------------------------------------------------------------- run
 
-    def _service_once(self, stats: ServeStats) -> bool:
+    def _service_once(self, stats: ServeStats, admit: bool = True) -> bool:
         """ONE scheduling iteration — the unit both ``run()`` and the
         streaming ``step()`` are built from: apply cancellations, release
         stop-finished slots, admit, dispatch this iteration's fused
         tick(s), then harvest everything older than the newest in-flight
-        dispatch. Returns whether any work remains."""
+        dispatch. Returns whether any work remains.
+
+        ``admit=False`` drains in-flight slots without pulling from the
+        waiting queue — the controlled-run slice boundary (a cluster about
+        to reconfigure wants idle slots, not an empty queue)."""
         self._apply_cancels(stats)
         self._release_stopped(stats)
-        if self.paged:
+        if not admit:
+            pass
+        elif self.paged:
             self._admit_paged(stats)
         elif self.unified:
             self._admit_unified(stats, self._pending)
@@ -1776,8 +1826,10 @@ class ServeEngine:
     def _handle_pump(self, req: Request) -> None:
         """Make progress on behalf of a blocked handle iterator: drive the
         engine when this thread owns it, politely poll when a controller
-        thread (cluster split mode) does."""
-        if self._running:
+        thread (cluster split mode) does. A poisoned (declared-dead)
+        engine is never driven: the handle polls until the cluster has
+        re-homed its request onto a survivor."""
+        if self._running or self._poisoned:
             time.sleep(1e-4)
             return
         if self.step():
@@ -1789,14 +1841,38 @@ class ServeEngine:
                 "was it submitted to this engine?"
             )
 
-    def run(self, arrivals=None) -> ServeStats:
+    def run(
+        self, arrivals=None, *, deadline_s=None, on_tick=None, gate=None
+    ) -> ServeStats:
         """Drain all submitted requests; returns throughput + latency stats.
 
         ``arrivals`` optionally simulates an open-loop request stream: an
         iterable of ``(t_offset_seconds, Request)`` submitted once the run
-        clock passes each offset (mixed-arrival benchmarking)."""
+        clock passes each offset (mixed-arrival benchmarking).
+
+        ``gate`` is the admission hook for arrival-stream requests: called
+        with each due request BEFORE it joins the queue, it may raise
+        :class:`AdmissionRejected` — the request then finishes immediately
+        as ``"rejected"`` (an open-loop stream has no caller to raise
+        into). Gating happens at the scheduled arrival time against the
+        live queue, which is what makes deadline-based shedding honest: a
+        burst is rejected as the queue grows, not waved through because
+        the queue was empty when the batch was handed over.
+
+        ``deadline_s`` bounds the run to a control interval: once the run
+        clock passes it, admission stops and the loop exits as soon as the
+        in-flight slots drain — requests still waiting stay queued for the
+        next run (the cluster's controlled-serving slice boundary, which
+        leaves the engine reconfigure()-safe: idle slots, non-empty queue).
+
+        ``on_tick`` is called once per scheduling iteration OUTSIDE the
+        drive lock — the cluster's watchdog heartbeat and the test-only
+        fault-injection point. After each call the poison pill is checked:
+        a replica declared dead aborts here, at an iteration boundary,
+        without touching re-homed state."""
         stats = ServeStats()
         self._done_now = []
+        alloc_fail0 = self.pool.alloc_failures if self.paged else 0
         t0 = time.perf_counter()
         arr: deque = deque(
             sorted(arrivals, key=lambda a: a[0]) if arrivals else ()
@@ -1805,36 +1881,55 @@ class ServeEngine:
             self._running = True
         try:
             while True:
+                if on_tick is not None:
+                    on_tick()
+                if self._poisoned:
+                    break
                 now = time.perf_counter() - t0
                 while arr and arr[0][0] <= now:
                     t_off, req = arr.popleft()
+                    if gate is not None:
+                        try:
+                            gate(req)
+                        except AdmissionRejected as rej:
+                            req.finish_reason = "rejected"
+                            req.reject_reason = rej.reason
+                            req.submitted_at = t0 + t_off
+                            req.done_at = time.perf_counter()
+                            self.finished.append(req)
+                            continue
                     self.submit(req)
                     # the TTFT clock starts at the SCHEDULED arrival, not at
                     # whenever the loop got around to polling the deque —
                     # otherwise time spent inside a blocking dispatch hides
                     # queueing delay from the latency stats
                     req.submitted_at = t0 + t_off
+                stats.queue_peak = max(stats.queue_peak, len(self.waiting))
+                expired = deadline_s is not None and now >= deadline_s
                 if not (
                     any(r is not None for r in self.slot_req)
-                    or self.waiting
+                    or (self.waiting and not expired)
                     or arr
                     or self._cancels
                 ):
                     break
                 with self._drive_lock:  # serialize vs inline cancel/step()
-                    busy = self._service_once(stats)
+                    busy = self._service_once(stats, admit=not expired)
                 if not busy and arr:
                     # idle until the next scheduled arrival
                     wait = arr[0][0] - (time.perf_counter() - t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.001))
-            with self._drive_lock:
-                self._drain_pending()
-                self._release_stopped(stats)
+            if not self._poisoned:
+                with self._drive_lock:
+                    self._drain_pending()
+                    self._release_stopped(stats)
         finally:
             with self._cancel_lock:
                 self._running = False
         stats.wall_seconds = time.perf_counter() - t0
+        if self.paged:
+            stats.alloc_failures = self.pool.alloc_failures - alloc_fail0
         for req in self._done_now:
             if req.first_token_at is not None:
                 stats.ttfts.append(req.first_token_at - req.submitted_at)

@@ -1,0 +1,270 @@
+"""Serving supervisor units: perfmodel mode advice, the reconfiguration
+decision loop (hysteresis / confirmation / cooldown — never flaps), and
+admission control (token buckets, bounded queue, deadline shedding) with
+a fake clock. All host-side pure Python — no model, no devices."""
+
+import numpy as np
+import pytest
+
+from repro.core.modes import Mode
+from repro.core.perfmodel import ServingMix, serving_mode_advice
+from repro.serve import (
+    AdmissionController,
+    AdmissionPolicy,
+    AdmissionRejected,
+    ControllerConfig,
+    ReconfigController,
+    Request,
+    SamplingParams,
+    TenantPolicy,
+    WindowSample,
+)
+from repro.serve.controller import build_continuation
+
+# mixes with a verified preference under the default per-token costs
+# (2e9 flops / 1e9 HBM bytes per token) on 2 devices: many independent
+# short requests want split replicas; a couple of long decodes want the
+# merged fabric's n-times HBM bandwidth on the sequential chain
+MANY_SHORT = dict(
+    n_requests=64, prompt_tokens=64 * 16.0, decode_tokens=64 * 2.0,
+    longest_tokens=2.0, flops_per_token=2e9, hbm_bytes_per_token=1e9,
+)
+FEW_LONG = dict(
+    n_requests=2, prompt_tokens=2 * 16.0, decode_tokens=2 * 256.0,
+    longest_tokens=256.0, flops_per_token=2e9, hbm_bytes_per_token=1e9,
+)
+
+
+# ------------------------------------------------------ perfmodel advice
+
+
+def test_advice_prefers_split_for_many_short():
+    best, seconds = serving_mode_advice(ServingMix(**MANY_SHORT), 2)
+    assert best == "split"
+    assert seconds["split"] < seconds["merge"]
+
+
+def test_advice_prefers_merge_for_few_long():
+    best, seconds = serving_mode_advice(ServingMix(**FEW_LONG), 2)
+    assert best == "merge"
+    # the sequential decode chain rides the merged fabric's aggregate HBM
+    assert seconds["merge"] < 0.75 * seconds["split"]
+
+
+def test_advice_single_device_never_prefers_merge():
+    """n=1 degenerate: merge pays barriers for no extra bandwidth, so a
+    single-device controller never has a reason to switch."""
+    for mix in (MANY_SHORT, FEW_LONG):
+        best, _ = serving_mode_advice(ServingMix(**mix), 1)
+        assert best == "split"
+
+
+# ------------------------------------------------- reconfig decision loop
+
+
+def _sample(t, mode, mix, queue=0):
+    return WindowSample(
+        t=t, mode=mode, queue_depth=queue,
+        n_requests=mix["n_requests"],
+        prompt_tokens=int(mix["prompt_tokens"]),
+        decode_tokens=int(mix["decode_tokens"]),
+        longest_tokens=int(mix["longest_tokens"]),
+    )
+
+
+def _ctl(**over):
+    kw = dict(interval_s=0.1, window_s=0.1, cooldown_s=1.0,
+              confirm=2, hysteresis=1.5)
+    kw.update(over)
+    return ReconfigController(2, ControllerConfig(**kw))
+
+
+def test_controller_switch_needs_confirmation_streak():
+    ctl = _ctl()
+    # first long window: preference noted, no commit yet (confirm=2)
+    assert ctl.observe(_sample(0.1, "split", FEW_LONG)) is None
+    d = ctl.observe(_sample(0.2, "split", FEW_LONG))
+    assert d is not None and d.mode is Mode.MERGE
+    assert d.predicted_win_s > d.switch_cost_s
+    ctl.note_switched(0.2)
+    # already in the preferred mode: quiet
+    assert ctl.observe(_sample(0.3, "merge", FEW_LONG)) is None
+
+
+def test_controller_cooldown_blocks_flapping():
+    """An adversarial oscillating load cannot flap the fabric: after a
+    committed switch every opposite-direction decision inside cooldown_s
+    is suppressed, no matter how long the streak."""
+    ctl = _ctl(cooldown_s=5.0)
+    ctl.observe(_sample(0.1, "split", FEW_LONG))
+    d = ctl.observe(_sample(0.2, "split", FEW_LONG))
+    assert d is not None
+    ctl.note_switched(0.2)
+    # the same preference streak keeps re-confirming every interval, but
+    # nothing can commit inside the cooldown window
+    for i in range(20):
+        assert ctl.observe(_sample(0.3 + 0.1 * i, "split", FEW_LONG)) is None
+    # past the cooldown the same preference commits again
+    d2 = ctl.observe(_sample(5.3, "split", FEW_LONG))
+    assert d2 is not None and d2.mode is Mode.MERGE
+    assert ctl.switch_times == [0.2]
+
+
+def test_controller_hysteresis_blocks_marginal_win():
+    """The short mix's split-over-merge win (~3ms) never clears 1.5x the
+    cold switch cost (~90ms): a marginal preference holds the mode."""
+    ctl = _ctl()
+    for i in range(6):
+        assert ctl.observe(_sample(0.1 * (i + 1), "merge", MANY_SHORT)) is None
+
+
+def test_controller_idle_window_holds_mode():
+    # window shorter than the sampling spacing: every observation stands
+    # alone, so an idle interval truly presents an empty mix
+    ctl = _ctl(window_s=0.05)
+    idle = dict(n_requests=0, prompt_tokens=0.0, decode_tokens=0.0,
+                longest_tokens=0.0)
+    assert ctl.observe(_sample(0.1, "split", idle)) is None
+    # an idle window also resets the confirmation streak
+    ctl.observe(_sample(0.2, "split", FEW_LONG))
+    assert ctl.observe(_sample(0.3, "split", idle)) is None
+    assert ctl.observe(_sample(0.4, "split", FEW_LONG)) is None  # streak restarts
+
+
+def test_controller_cost_ewma_tracks_measured_switches():
+    class Rep:
+        def __init__(self, seconds, cached):
+            self.seconds, self.cached = seconds, cached
+
+    ctl = _ctl(cold_switch_s=0.060, warm_switch_s=0.006, cost_ewma=0.5)
+    ctl.note_switched(1.0, Rep(0.100, cached=False))
+    assert ctl.switch_cost(warm=False) == pytest.approx(0.080)
+    ctl.note_switched(2.0, Rep(0.002, cached=True))
+    assert ctl.switch_cost(warm=True) == pytest.approx(0.004)
+
+
+# ------------------------------------------------------ admission control
+
+
+def _req(rid=0, plen=8, max_new=8, tenant=None, deadline_s=None):
+    return Request(
+        rid=rid, prompt=np.zeros(plen, np.int32),
+        params=SamplingParams(max_new=max_new), tenant=tenant,
+        deadline_s=deadline_s,
+    )
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_admission_rejected_is_typed_valueerror():
+    rej = AdmissionRejected("queue_full", "detail here")
+    assert isinstance(rej, ValueError)  # legacy except ValueError still works
+    assert rej.reason == "queue_full"
+    assert "queue_full" in str(rej) and "detail here" in str(rej)
+    assert set(AdmissionRejected.REASONS) == {
+        "infeasible", "shed_deadline", "rate_limited", "queue_full",
+    }
+
+
+def test_token_bucket_rate_limits_and_refills():
+    clock = FakeClock()
+    # cost of _req() = 8 prompt + 8 max_new = 16; burst admits exactly 2
+    adm = AdmissionController(
+        AdmissionPolicy(tenants={"a": TenantPolicy(rate=16.0, burst=32.0)}),
+        clock=clock,
+    )
+    for rid in (0, 1):
+        adm.admit(_req(rid, tenant="a"), queue_depth=0, queue_cost=0.0)
+    with pytest.raises(AdmissionRejected) as e:
+        adm.admit(_req(2, tenant="a"), queue_depth=0, queue_cost=0.0)
+    assert e.value.reason == "rate_limited"
+    # another tenant is unaffected (default policy: infinite rate)
+    adm.admit(_req(3, tenant="b"), queue_depth=0, queue_cost=0.0)
+    # one second refills one request's worth of cost tokens
+    clock.t = 1.0
+    adm.admit(_req(4, tenant="a"), queue_depth=0, queue_cost=0.0)
+    assert adm.rate_limited == 1 and adm.admitted == 4
+
+
+def test_queue_bound_and_priority_headroom():
+    adm = AdmissionController(
+        AdmissionPolicy(
+            max_queue=4, priority_headroom=2.0,
+            tenants={"vip": TenantPolicy(priority=1)},
+        ),
+        clock=FakeClock(),
+    )
+    with pytest.raises(AdmissionRejected) as e:
+        adm.admit(_req(0), queue_depth=4, queue_cost=64.0)
+    assert e.value.reason == "queue_full"
+    # priority rides the deeper bound (4 x 2.0) before rejection
+    adm.admit(_req(1, tenant="vip"), queue_depth=4, queue_cost=64.0)
+    with pytest.raises(AdmissionRejected) as e:
+        adm.admit(_req(2, tenant="vip"), queue_depth=8, queue_cost=128.0)
+    assert e.value.reason == "queue_full"
+    assert adm.queue_full == 2 and adm.rejected == 2 and adm.shed == 0
+
+
+def test_deadline_shedding_uses_predicted_ttft():
+    adm = AdmissionController(
+        AdmissionPolicy(initial_tok_per_s=100.0), clock=FakeClock()
+    )
+    # 50 cost tokens queued ahead at 100 tok/s -> predicted TTFT 0.5s
+    assert adm.predict_ttft(50.0) == pytest.approx(0.5)
+    with pytest.raises(AdmissionRejected) as e:
+        adm.admit(_req(0, deadline_s=0.2), queue_depth=3, queue_cost=50.0)
+    assert e.value.reason == "shed_deadline"
+    adm.admit(_req(1, deadline_s=1.0), queue_depth=3, queue_cost=50.0)
+    # no deadline -> never shed, regardless of backlog
+    adm.admit(_req(2), queue_depth=3, queue_cost=1e9)
+    assert adm.shed == 1 and adm.admitted == 2
+
+
+def test_deadline_shedding_disabled_until_rate_known():
+    adm = AdmissionController(AdmissionPolicy(), clock=FakeClock())
+    adm.admit(_req(0, deadline_s=0.01), queue_depth=9, queue_cost=1e6)
+    adm.note_service_rate(100.0)
+    with pytest.raises(AdmissionRejected):
+        adm.admit(_req(1, deadline_s=0.01), queue_depth=9, queue_cost=1e6)
+
+
+def test_service_rate_feedback_is_ewma():
+    adm = AdmissionController(
+        AdmissionPolicy(initial_tok_per_s=100.0, rate_ewma=0.5),
+        clock=FakeClock(),
+    )
+    adm.note_service_rate(200.0)
+    assert adm.predict_ttft(150.0) == pytest.approx(1.0)  # rate now 150
+
+
+# -------------------------------------------------- re-homing continuation
+
+
+def test_build_continuation_prompt_budget_and_seed():
+    req = _req(rid=7, plen=4, max_new=10, tenant="a", deadline_s=0.5)
+    req.params = SamplingParams(max_new=10, temperature=0.8, seed=99)
+    req.generated = [3, 1, 4]
+    cont, committed = build_continuation(req)
+    assert committed == 3
+    np.testing.assert_array_equal(
+        cont.prompt, np.array([0, 0, 0, 0, 3, 1, 4], np.int32)
+    )
+    assert cont.params.max_new == 7
+    assert cont.params.seed == 99  # same stream, same fold_in(seed, pos) keys
+    assert cont.params.temperature == 0.8
+    assert cont.rid == 7 and cont.tenant == "a"
+
+
+def test_build_continuation_pins_engine_assigned_seed():
+    req = _req(rid=1, plen=4, max_new=10)
+    req.generated = [5]
+    req._bound = True
+    req._seed = 1234  # the dead engine had already bound a seed
+    cont, committed = build_continuation(req)
+    assert committed == 1 and cont.params.seed == 1234

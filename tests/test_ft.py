@@ -32,6 +32,67 @@ def test_watchdog_straggler_and_dead():
     assert not any(n == "fast" for _, n in events)
 
 
+def test_watchdog_stale_seconds():
+    wd = Watchdog(straggler_after=10.0, dead_after=20.0, poll=0.01).start()
+    wd.register("lane")
+    time.sleep(0.15)
+    stale = wd.stale_seconds("lane")
+    assert 0.1 <= stale < 5.0
+    wd.beat("lane")
+    assert wd.stale_seconds("lane") < stale
+    wd.stop()
+
+
+def test_watchdog_injected_thread_stall_escalates():
+    """A worker thread that stalls mid-loop walks ok -> straggler -> dead
+    while a healthy peer stays ok — the exact supervision contract the
+    serving cluster's split-mode replica threads rely on (there the dead
+    lane's requests re-home; see tests/test_serve_cluster.py)."""
+    import threading
+
+    events = []
+    wd = Watchdog(
+        straggler_after=0.1,
+        dead_after=0.25,
+        on_straggler=lambda n, s: events.append(("straggler", n)),
+        on_dead=lambda n, s: events.append(("dead", n)),
+        poll=0.01,
+    ).start()
+    stop = threading.Event()
+
+    def worker(lane, stall_at):
+        wd.register(lane)
+        for tick in range(200):
+            if stop.is_set():
+                return
+            wd.beat(lane, step=tick)
+            if tick == stall_at:
+                time.sleep(0.5)  # injected stall: no beats while "hung"
+            time.sleep(0.005)
+
+    threads = [
+        threading.Thread(target=worker, args=("replica0", -1)),
+        threading.Thread(target=worker, args=("replica1", 10)),
+    ]
+    for t in threads:
+        t.start()
+    t0 = time.monotonic()
+    while wd.status("replica1") != "dead" and time.monotonic() - t0 < 2.0:
+        time.sleep(0.01)
+    # snapshot BEFORE teardown: once beating stops, healthy lanes go stale too
+    final = wd.snapshot()
+    seen = list(events)
+    stop.set()
+    for t in threads:
+        t.join()
+    wd.stop()
+    assert final["replica0"] == "ok"
+    assert final["replica1"] == "dead"  # dead lanes need explicit revive
+    kinds = [k for k, n in seen if n == "replica1"]
+    assert kinds.index("straggler") < kinds.index("dead")
+    assert not any(n == "replica0" for _, n in seen)
+
+
 def test_watchdog_revive():
     wd = Watchdog(straggler_after=0.05, dead_after=0.1, poll=0.01).start()
     wd.register("lane")

@@ -429,3 +429,206 @@ def test_cluster_mid_stream_reconfigure_speculate(small_model):
     assert {r.rid: r.generated for r in cl.finished} == ref
     assert len(stats.reconfigures) == 1
     assert stats.spec_ticks > 0
+
+
+# ------------------------------- supervision: control loop, admission, failure
+
+
+def _seeded_reqs(cfg, n=4, *, max_new=24, seed=61):
+    """Explicit per-request seeds + temperature: bit-reproducible across
+    fabrics AND across a mid-stream re-homing (fold_in(seed, position))."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=6 + 3 * i).astype(np.int32),
+            params=SamplingParams(
+                max_new=max_new, temperature=0.9, top_p=0.85, seed=500 + i
+            ),
+            tenant="ab"[i % 2],
+        )
+        for i in range(n)
+    ]
+
+
+def test_engine_deadline_slice_resumes_bit_identical(small_model):
+    """run(deadline_s=...) is a clean pause point: queued work stays
+    queued, nothing is dropped, and resuming drains to the same tokens
+    as one uninterrupted run — the invariant run_controlled's control
+    intervals are built on."""
+    cfg, m, p = small_model
+    sizes = (5, 9, 13, 7)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=32)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    reqs = _reqs(cfg, sizes)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(deadline_s=0.0)  # expires before admitting anything new
+    assert len(eng.waiting) + sum(r.finish_reason is not None for r in reqs) > 0
+    eng.run()
+    assert {r.rid: r.generated for r in eng.finished} == ref
+
+
+def test_cluster_run_controlled_matches_reference(small_model):
+    """The closed control loop (interval slicing + observation) must be
+    invisible to the served streams: bit-identical to one plain engine,
+    and on one device the perfmodel never finds a switch worth paying for."""
+    from repro.serve import ReconfigController
+
+    cfg, m, p = small_model
+    sizes = (5, 12, 8, 17, 9)
+    ref = _engine_reference(m, p, _sampled_reqs(cfg, sizes),
+                            batch_slots=2, max_len=48)
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48,
+                      devices=[jax.devices()[0]])
+    ctl = ReconfigController.for_cluster(cl, interval_s=0.05)
+    arrivals = [(i * 0.002, r) for i, r in enumerate(_sampled_reqs(cfg, sizes))]
+    stats = cl.run_controlled(arrivals, controller=ctl)
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert stats.total_requests == len(sizes)
+    assert ctl.switch_times == []  # 1 device: merge never wins
+    assert len(ctl.samples) > 0
+
+
+def test_cluster_run_controlled_scripted_switch(small_model):
+    """A scripted decider drives the control loop's switch machinery: the
+    fabric reconfigures mid-stream, the controller hears note_switched,
+    and every stream stays bit-identical."""
+    from repro.serve import SwitchDecision
+
+    cfg, m, p = small_model
+    sizes = (5, 23, 11, 8, 17, 7)
+    ref = _engine_reference(m, p, _reqs(cfg, sizes), batch_slots=2, max_len=48)
+
+    class Scripted:
+        interval_s = 0.03
+        observed = 0
+        switched = []
+
+        def observe(self, sample, *, warm_target=False):
+            self.observed += 1
+            if self.observed == 2:
+                return SwitchDecision(
+                    mode=Mode.MERGE, predicted_win_s=1.0, switch_cost_s=0.0
+                )
+            return None
+
+        def note_switched(self, t, report=None):
+            self.switched.append((t, report))
+
+    cl = ServeCluster(m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48)
+    ctl = Scripted()
+    arrivals = [(i * 0.02, r) for i, r in enumerate(_reqs(cfg, sizes))]
+    stats = cl.run_controlled(arrivals, controller=ctl)
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert cl.mode is Mode.MERGE
+    assert len(ctl.switched) == 1 and len(stats.reconfigures) == 1
+    assert "merge" in stats.mode
+
+
+def test_cluster_admission_sheds_under_burst(small_model):
+    """An arrival burst far beyond capacity: deadline-based shedding
+    rejects up front (typed, with done_at set), admitted requests finish
+    normally, and the cluster counters account for every request."""
+    from repro.serve import AdmissionPolicy, ReconfigController
+
+    cfg, m, p = small_model
+    cl = ServeCluster(
+        m, p, mode=Mode.SPLIT, batch_slots=2, max_len=48,
+        devices=[jax.devices()[0]],
+        admission=AdmissionPolicy(max_queue=4, initial_tok_per_s=50.0),
+    )
+    cl.prewarm()
+    reqs = _reqs(cfg, (8,) * 12, max_new=8)
+    for r in reqs:
+        r.deadline_s = 0.05
+    ctl = ReconfigController.for_cluster(cl, interval_s=0.05)
+    stats = cl.run_controlled(
+        [(i * 0.001, r) for i, r in enumerate(reqs)], controller=ctl
+    )
+    shed = [r for r in reqs if r.finish_reason == "rejected"]
+    served = [r for r in reqs if r.finish_reason == "length"]
+    assert len(shed) > 0 and len(served) > 0
+    assert len(shed) + len(served) == len(reqs)
+    assert all(r.reject_reason == "shed_deadline" for r in shed)
+    assert all(r.done_at >= r.submitted_at > 0 for r in shed)
+    assert all(len(r.generated) == 8 for r in served)
+    assert stats.shed == len(shed) and stats.rejected == 0
+    assert stats.queue_peak >= 1
+
+
+def test_cluster_submit_queue_full_typed(small_model):
+    """Submit-time backpressure: the bounded queue rejects with the typed
+    AdmissionRejected (still a ValueError for legacy callers)."""
+    from repro.serve import AdmissionPolicy, AdmissionRejected
+
+    cfg, m, p = small_model
+    cl = ServeCluster(
+        m, p, mode=Mode.SPLIT, batch_slots=2, max_len=32,
+        devices=[jax.devices()[0]],
+        admission=AdmissionPolicy(max_queue=2),
+    )
+    reqs = _reqs(cfg, (6,) * 5)
+    admitted = 0
+    with pytest.raises(AdmissionRejected) as e:
+        for r in reqs:
+            cl.submit(r)
+            admitted += 1
+    assert e.value.reason == "queue_full"
+    assert isinstance(e.value, ValueError)
+    assert admitted == 2
+    cl.run()
+    assert len(cl.finished) == admitted
+
+
+def test_cluster_replica_death_rehomes_bit_identical(small_model):
+    """Kill one of two split replicas mid-decode (injected controller-
+    thread stall -> straggler -> dead): its live requests re-home onto the
+    survivor and every seeded stream completes bit-identical to an
+    unkilled single-engine run — fold_in(seed, position) keying makes the
+    continuation's draws independent of which engine draws them."""
+    import threading
+    import time as _time
+
+    from repro.serve import FailurePolicy
+
+    cfg, m, p = small_model
+    reqs = _seeded_reqs(cfg)
+    ref = _engine_reference(m, p, _seeded_reqs(cfg), batch_slots=2, max_len=64)
+
+    ticks: dict[int, int] = {}
+    lock = threading.Lock()
+
+    def stall(idx: int) -> None:
+        with lock:
+            ticks[idx] = ticks.get(idx, 0) + 1
+            n = ticks[idx]
+        if idx == 1 and n == 3:
+            _time.sleep(1.0)  # hung controller thread: heartbeats stop
+
+    d0 = jax.devices()[0]
+    cl = ServeCluster(
+        m, p, mode=Mode.SPLIT, batch_slots=2, max_len=64,
+        devices=[d0, d0],  # 2 replicas on 1 device: the 1-device CI lane
+        failure=FailurePolicy(
+            straggler_after=0.08, dead_after=0.25, poll=0.02, tick_hook=stall
+        ),
+    )
+    # heartbeats fire at iteration boundaries: compiles must be off the
+    # serving path or a replica mid-compile reads as dead (see FailurePolicy)
+    cl.prewarm(sampling=True)
+    for r in reqs:
+        cl.submit(r)
+    stats = cl.run()
+    assert {r.rid: r.generated for r in cl.finished} == ref
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert stats.dead_replicas == 1
+    assert stats.rehomed >= 1  # replica 1's live requests moved over
+    assert stats.stragglers >= 1  # straggler fired on the way to dead
+    # the dead replica stays retired: later submissions avoid it
+    late = _seeded_reqs(cfg, n=2, seed=77)
+    for r in late:
+        r.rid += 100
+        cl.submit(r)
+    cl.run()
+    assert all(r.finish_reason == "length" for r in late)
