@@ -59,8 +59,13 @@ _MACHINE_DEPENDENT = ("cpu_measured", "serve_engine")
 # how arrivals align with control-interval boundaries, so the rows ride
 # as trajectory telemetry while tests/test_serve_cluster.py asserts the
 # actual invariant (shedding engages, admitted tail bounded).
+# "_quant_" rows (int8 KV/weight serving) are wall-clock on the steady
+# drain and pool-layout dependent on the capacity pattern; the enforceable
+# invariants (f32-lane bit-identity, capacity gain at byte parity, TV /
+# greedy-agreement quality gates) live in tests/test_quant_serving.py.
 _REPORT_ONLY = (
     "_mixed_", "_cluster_", "_sampled_", "_paged_", "_spec_", "_overload_",
+    "_quant_",
 )
 
 

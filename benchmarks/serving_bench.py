@@ -777,6 +777,147 @@ def run_paged(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+# quantized-serving scenario (all rows report-only, "_quant_" in
+# check_regression): the int8 KV cache stores (head_dim + 4) bytes per
+# (position, head) row — int8 payload + one f32 scale — against f32's
+# 4 * head_dim, so a BYTE-parity pool holds ~3-4x the blocks and the
+# capacity pattern admits correspondingly more concurrent residents. The
+# steady row tracks what in-kernel dequant costs next to the GATED dense
+# f32 serve_engine row (which this PR leaves byte-identical: quantization
+# is opt-in); the weight row adds int8 matmul weights on top.
+QUANT_CAPACITY_MIX = ("short", (8, 13), 8)  # the max-headroom paged mix
+
+
+def _kv_bytes_per_block(model, block_size: int, kv_dtype) -> int:
+    """Measured HBM bytes of ONE pool block (all layers, K+V+scales)."""
+    pool = model.init_kv_pool(1, block_size, kv_dtype=kv_dtype)
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(pool))
+
+
+def _quant_capacity(model, params, cfg, num_blocks: int, kv_dtype) -> int:
+    """Peak concurrent residents on a ``num_blocks`` pool (the run_paged
+    capacity pattern: oversubscribe, step, sample slot occupancy)."""
+    _, (lo, hi), max_new = QUANT_CAPACITY_MIX
+    slots = num_blocks  # slot ceiling high enough that the pool binds
+    eng = ServeEngine(
+        model, params, batch_slots=slots,
+        max_len=PAGED_MAX_LEN, kv_block_size=PAGED_BLOCK_SIZE,
+        num_blocks=num_blocks, kv_dtype=kv_dtype,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(3 * slots):
+        s = int(rng.integers(lo, hi))
+        eng.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+                params=SamplingParams(max_new=max_new),
+            )
+        )
+    peak = 0
+    while eng.step():
+        peak = max(peak, sum(r is not None for r in eng.slot_req))
+    eng.run()  # drain bookkeeping
+    assert eng.pool.free == eng.num_blocks  # nothing leaked
+    return peak
+
+
+def run_quant(csv: bool = True) -> list[tuple[str, float, str]]:
+    """Quantized serving: int8-KV steady drain + capacity at byte parity."""
+    cfg, model, params = _model()
+    rows: list[tuple[str, float, str]] = []
+
+    # ---- steady-state drains: the dense-engine pattern from run(), once
+    # with the int8 KV cache and once with int8 weights stacked on top
+    for name, eng_kw, note in (
+        (
+            "serve_quant_steady_tok_per_s",
+            dict(kv_dtype="int8"),
+            "int8 KV rows + per-(pos, head) f32 scales, dequant in-kernel "
+            "(compare the gated f32 serve_engine_cpu_tok_per_s row)",
+        ),
+        (
+            "serve_quant_w8_steady_tok_per_s",
+            dict(kv_dtype="int8", weight_dtype="int8"),
+            "int8 KV AND int8 per-output-channel matmul weights "
+            "(qweight read-through dequant per scanned layer)",
+        ),
+    ):
+        eng = ServeEngine(model, params, batch_slots=4, max_len=96, **eng_kw)
+        rng = np.random.default_rng(0)
+
+        def submit(n: int, rid0: int) -> None:
+            for i in range(n):
+                s = PROMPT_LENS[i % len(PROMPT_LENS)]
+                eng.submit(
+                    Request(
+                        rid=rid0 + i,
+                        prompt=rng.integers(
+                            0, cfg.vocab_size, size=s
+                        ).astype(np.int32),
+                        params=SamplingParams(max_new=MAX_NEW),
+                    )
+                )
+
+        submit(WARMUP_REQUESTS, rid0=-WARMUP_REQUESTS)
+        eng.run()
+        best = None
+        for rep in range(3):
+            submit(MEASURED_REQUESTS, rid0=rep * MEASURED_REQUESTS)
+            stats = eng.run()
+            if best is None or stats.tokens_per_sec > best.tokens_per_sec:
+                best = stats
+        rows.append(
+            (
+                name,
+                best.tokens_per_sec,
+                f"{best.total_requests} reqs, {best.ticks} ticks, "
+                f"peak resident KV {best.kv_bytes_resident:,} B; " + note,
+            )
+        )
+
+    # ---- capacity at BYTE parity: both pools hold the bytes of the dense
+    # f32 cache (slots * max_len positions); the int8 pool turns the same
+    # byte budget into ~3-4x the blocks and admits more residents
+    bpb_f32 = _kv_bytes_per_block(model, PAGED_BLOCK_SIZE, None)
+    bpb_q8 = _kv_bytes_per_block(model, PAGED_BLOCK_SIZE, "int8")
+    blocks_f32 = PAGED_DENSE_SLOTS * PAGED_MAX_LEN // PAGED_BLOCK_SIZE
+    byte_budget = blocks_f32 * bpb_f32
+    blocks_q8 = byte_budget // bpb_q8
+    peak_f32 = _quant_capacity(model, params, cfg, blocks_f32, None)
+    peak_q8 = _quant_capacity(model, params, cfg, int(blocks_q8), "int8")
+    mix, (lo, hi), max_new = QUANT_CAPACITY_MIX
+    rows.append(
+        (
+            "serve_quant_bytes_per_block_ratio",
+            bpb_f32 / bpb_q8,
+            f"f32 {bpb_f32} B/block vs int8+scales {bpb_q8} B/block "
+            f"({PAGED_BLOCK_SIZE} positions, all layers)",
+        )
+    )
+    rows.append(
+        (
+            f"serve_quant_capacity_{mix}_residents",
+            float(peak_q8),
+            f"peak concurrent requests, prompts {lo}..{hi - 1} max_new "
+            f"{max_new}, int8 pool of {blocks_q8} blocks at byte parity "
+            f"with the f32 pool's {blocks_f32} ({byte_budget:,} B)",
+        )
+    )
+    rows.append(
+        (
+            "serve_quant_capacity_gain_x",
+            peak_q8 / max(peak_f32, 1),
+            f"int8 residents / f32 residents at the same pool bytes "
+            f"({peak_q8} vs {peak_f32})",
+        )
+    )
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
 # overload scenario (all rows report-only, "_overload_" in check_regression):
 # an arrival burst far beyond capacity hits the SAME single-replica cluster
 # three ways — uncongested (wide spacing: the latency floor), ungated
@@ -971,6 +1112,12 @@ def main() -> None:
         "shedding vs the ungated baseline) as JSON (also enables the "
         "scenario; report-only trajectory rows)",
     )
+    ap.add_argument(
+        "--quant-json", default=None, metavar="PATH",
+        help="write quantized-serving rows (int8-KV steady drain + "
+        "capacity at byte parity) as JSON (also enables the scenario; "
+        "report-only trajectory rows)",
+    )
     args = ap.parse_args()
 
     if args.cluster or args.cluster_json is not None:
@@ -991,6 +1138,7 @@ def main() -> None:
     if args.mixed_json is not None or (
         args.skip_steady and args.paged_json is None
         and args.spec_json is None and args.overload_json is None
+        and args.quant_json is None
     ):
         mixed = run_mixed(csv=True)
         if args.mixed_json:
@@ -1004,6 +1152,9 @@ def main() -> None:
     if args.overload_json is not None:
         ov = run_overload(csv=True)
         _write_json(args.overload_json, ov, "serving_overload")
+    if args.quant_json is not None:
+        quant = run_quant(csv=True)
+        _write_json(args.quant_json, quant, "serving_quant")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,24 @@
-"""Int8 gradient compression: symmetric per-chunk quantization + a ring
-all-reduce that moves int8 payloads (+ f32 scales) instead of f32 gradients.
+"""Int8 compression: symmetric per-chunk quantization (training collectives)
+plus per-row quantization (the serving KV cache's insert-time path).
 
 Used by the compressed-DP train step (:mod:`repro.train.step`) together with
 error feedback: the quantization residual is carried to the next step, so the
 running sum of transmitted gradients tracks the true sum (the EF-SGD
-invariant, property-tested in ``tests/test_property.py``).
+invariant, property-tested in ``tests/test_property.py``). The per-row
+variants back the quantized serving cache (:mod:`repro.serve.engine`
+``kv_dtype=``): one f32 scale per (position, head) row, updated O(written
+rows) at insert time.
 
 Quantization contract (pinned by the tests):
 
 * ``scale = amax / 127`` per chunk, round-to-nearest → per-element error is
   at most ``scale / 2 = amax / 254``;
 * any element with ``|x| > scale`` keeps its sign through the round trip.
+
+Everything here is pad-free: the tail chunk is reduced and scaled as its own
+segment instead of materializing a padded copy — these functions jit into
+serving ticks, where the repo's no-``jnp.pad`` jaxpr convention is pinned by
+``tests/test_hot_path.py``.
 """
 
 from __future__ import annotations
@@ -32,17 +40,38 @@ def quantize(x: jax.Array, *, chunk: int = CHUNK) -> tuple[jax.Array, jax.Array]
     Returns ``(q, scales)`` where ``q`` is int8 with x's shape and ``scales``
     is f32 ``[ceil(x.size / chunk)]`` (a scalar when one chunk suffices, so
     ``float(scale)`` works for small tensors). Wire payload: 1 byte/element +
-    the scales — ~3.98× smaller than f32.
+    the scales — ~3.98× smaller than f32. Pad-free: the full-chunk body and
+    the tail overhang are quantized as separate segments (shapes are static
+    at trace time, so the split is free) instead of padding to a rectangle.
     """
     x = jnp.asarray(x, jnp.float32)
     flat = x.reshape(-1)
     n = flat.shape[0]
-    n_chunks = max(-(-n // chunk), 1)
-    padded = jnp.pad(flat, (0, n_chunks * chunk - n)).reshape(n_chunks, chunk)
-    amax = jnp.max(jnp.abs(padded), axis=1)
+    if n == 0:  # degenerate: one all-zero chunk's scale, empty payload
+        return flat.astype(jnp.int8), jnp.float32(1.0 / _INT8_MAX)
+    n_full = n // chunk
+    rem = n - n_full * chunk
+    body = flat[: n_full * chunk].reshape(max(n_full, 1), -1)
+    tail = flat[n_full * chunk:]
+    amaxes = []
+    if n_full:
+        amaxes.append(jnp.max(jnp.abs(body), axis=1))
+    if rem:
+        amaxes.append(jnp.max(jnp.abs(tail), keepdims=True))
+    amax = amaxes[0] if len(amaxes) == 1 else jnp.concatenate(amaxes)
     scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
-    q = jnp.clip(jnp.round(padded / scale[:, None]), -_INT8_MAX, _INT8_MAX)
-    q = q.astype(jnp.int8).reshape(-1)[:n].reshape(x.shape)
+    parts = []
+    if n_full:
+        qb = jnp.clip(
+            jnp.round(body / scale[:n_full, None]), -_INT8_MAX, _INT8_MAX
+        )
+        parts.append(qb.reshape(-1))
+    if rem:
+        qt = jnp.clip(jnp.round(tail / scale[-1]), -_INT8_MAX, _INT8_MAX)
+        parts.append(qt)
+    q = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    q = q.astype(jnp.int8).reshape(x.shape)
+    n_chunks = n_full + (1 if rem else 0)
     return q, (scale[0] if n_chunks == 1 else scale)
 
 
@@ -50,11 +79,48 @@ def dequantize(q: jax.Array, scale: jax.Array, *, chunk: int = CHUNK) -> jax.Arr
     """Inverse of :func:`quantize`; returns f32 with ``q``'s shape."""
     flat = q.astype(jnp.float32).reshape(-1)
     n = flat.shape[0]
+    if n == 0:
+        return flat.reshape(q.shape)
     scale = jnp.atleast_1d(scale)
-    n_chunks = scale.shape[0]
-    padded = jnp.pad(flat, (0, n_chunks * chunk - n)).reshape(n_chunks, chunk)
-    out = padded * scale[:, None]
-    return out.reshape(-1)[:n].reshape(q.shape)
+    n_full = n // chunk
+    rem = n - n_full * chunk
+    parts = []
+    if n_full:
+        body = flat[: n_full * chunk].reshape(n_full, chunk)
+        parts.append((body * scale[:n_full, None]).reshape(-1))
+    if rem:
+        parts.append(flat[n_full * chunk:] * scale[n_full])
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return out.reshape(q.shape)
+
+
+# --------------------------------------------------------------- row-wise
+# The serving KV cache's quantization granularity: one scale per row over
+# the LAST axis (a (position, head) row of head_dim elements). Insert-time
+# quantization touches only the written rows' scales — O(rows written), not
+# O(cache) — and the scales live in the cache pytree so they travel through
+# paged block tables, prefix COW sharing and cluster re-homing with the
+# int8 payload they describe.
+
+
+def quantize_rows(x: jax.Array, store_dtype: Any) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row quantization over the last axis: ``(values,
+    scales)`` with one f32 scale per row. ``store_dtype=float32`` is the
+    identity lane — values pass through untouched with all-ones scales, so
+    the quantized *machinery* at f32 storage is bit-identical to the plain
+    path (``x * 1.0 == x`` in IEEE f32), which is what makes the quantized
+    code paths testable against the dense engine."""
+    if jnp.dtype(store_dtype) == jnp.float32:
+        return x, jnp.ones(x.shape[:-1], jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
+    q = jnp.clip(jnp.round(x / scale[..., None]), -_INT8_MAX, _INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows`; f32 with ``q``'s shape."""
+    return q.astype(jnp.float32) * scale[..., None]
 
 
 def ring_allreduce_q8(x: jax.Array, axis_name: str, *, chunk: int = CHUNK) -> jax.Array:

@@ -271,10 +271,14 @@ def replicated(info: MeshInfo) -> NamedSharding:
 
 
 # cache leaves whose dim 2 is the SEQUENCE axis ([L, B, S, ...]): the
-# attention K/V pools, the hybrid shared-block pools, and the MLA latent/
-# rope caches (see LM.init_cache). Everything else is recurrent state with
-# no positional axis.
-_SEQ_CACHE_KEYS = frozenset({"k", "v", "attn_k", "attn_v", "ckv", "krope"})
+# attention K/V pools, the hybrid shared-block pools, the MLA latent/rope
+# caches (see LM.init_cache), and the quantized cache's per-row scale
+# leaves [L, B, S, KV] (their KV dim shards with the payload's KV heads;
+# a replicated fallback still broadcasts cleanly against a head_dim-sharded
+# payload). Everything else is recurrent state with no positional axis.
+_SEQ_CACHE_KEYS = frozenset(
+    {"k", "v", "k_scale", "v_scale", "attn_k", "attn_v", "ckv", "krope"}
+)
 
 
 def serve_cache_shardings(cache_shape: Any, info: MeshInfo) -> Any:

@@ -88,11 +88,20 @@ def bucket_shape(shape: tuple[int, ...]) -> tuple[int, ...]:
     return tuple(bucket_dim(d) for d in shape)
 
 
-def cache_key(op: str, shape: tuple[int, ...], dtype: Any, backend: str) -> str:
+def cache_key(
+    op: str, shape: tuple[int, ...], dtype: Any, backend: str,
+    kv_dtype: Any = None,
+) -> str:
     """Stable string key over the bucketed shape: nearby shapes collide by
-    design so one sweep serves the whole bucket."""
+    design so one sweep serves the whole bucket. ``kv_dtype`` (the KV-cache
+    storage dtype, when it differs from the compute path — e.g. int8
+    quantized serving) appends a ``|kv<name>`` component ONLY when present,
+    so every pre-existing key string is unchanged (no schema bump)."""
     dims = "x".join(str(d) for d in bucket_shape(shape))
-    return f"v{_SCHEMA_VERSION}|{op}|{dims}|{np.dtype(dtype).name}|{backend}"
+    key = f"v{_SCHEMA_VERSION}|{op}|{dims}|{np.dtype(dtype).name}|{backend}"
+    if kv_dtype is not None:
+        key += f"|kv{np.dtype(kv_dtype).name}"
+    return key
 
 
 def sweep_enabled() -> bool:
@@ -144,11 +153,11 @@ class Autotuner:
 
     # ----------------------------------------------------------------- lookup
 
-    def lookup(self, op, shape, dtype, backend) -> Optional[Config]:
-        return self._load().get(cache_key(op, shape, dtype, backend))
+    def lookup(self, op, shape, dtype, backend, kv_dtype=None) -> Optional[Config]:
+        return self._load().get(cache_key(op, shape, dtype, backend, kv_dtype))
 
-    def store(self, op, shape, dtype, backend, config: Config) -> None:
-        self._load()[cache_key(op, shape, dtype, backend)] = dict(config)
+    def store(self, op, shape, dtype, backend, config: Config, kv_dtype=None) -> None:
+        self._load()[cache_key(op, shape, dtype, backend, kv_dtype)] = dict(config)
         self.save()
 
     def get(
@@ -158,11 +167,12 @@ class Autotuner:
         dtype: Any,
         backend: str,
         measure: Optional[Callable[[Config], float]] = None,
+        kv_dtype: Any = None,
     ) -> Config:
         """Cached winner, or (if sweeping is enabled) sweep-measure-persist,
         or the heuristic default. ``measure`` maps a candidate config to a
         wall-clock cost; ``None`` disables sweeping for this call."""
-        hit = self.lookup(op, shape, dtype, backend)
+        hit = self.lookup(op, shape, dtype, backend, kv_dtype)
         if hit is not None:
             return dict(hit)  # copy: callers must not mutate the cache
         if not self.sweep or measure is None:
@@ -178,7 +188,7 @@ class Autotuner:
         if best_cfg is None:
             best_cfg = dict(DEFAULTS[op])
         self.sweeps_run += 1
-        self.store(op, shape, dtype, backend, best_cfg)
+        self.store(op, shape, dtype, backend, best_cfg, kv_dtype)
         return dict(best_cfg)
 
 

@@ -75,6 +75,55 @@ def _decode_kernel(
         ).astype(o_ref.dtype)
 
 
+def _decode_kernel_q8(
+    lens_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref,
+    acc_ref, *, block_s: int, s_steps: int, window: int
+):
+    """The int8-cache variant: K/V tiles arrive int8 alongside their
+    per-(position, head) f32 scale rows; both widen in-register AFTER the
+    VMEM load, so no dequantized f32 cache copy ever exists in HBM — the
+    whole point of quantized serving on a memory-bound decode."""
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = lens_ref[pl.program_id(0)]
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        # in-register dequant: int8 tile * its per-row scale column
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0, :]  # [bs, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0, :]  # [bs, d]
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (d**-0.5)
+        kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= cur
+        if window:
+            valid &= kpos > cur - window
+        s = jnp.where(valid, s, NEG_INF)
+        vpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v_ok = vpos <= cur
+        if window:
+            v_ok &= vpos > cur - window
+        v = jnp.where(v_ok, v, 0.0)
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    live = si * block_s <= cur
+    if window:
+        live &= (si + 1) * block_s > cur - window
+    pl.when(live)(_compute)
+
+    @pl.when(si == s_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("window", "block_s", "interpret")
 )
@@ -87,26 +136,38 @@ def decode_attention(
     window: int = 0,
     block_s: int = 256,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """q: [B, KV, G, d]; k/v: [B, S_max, KV, d]; cur_len: [B] int32.
 
-    Returns [B, KV, G, d] attention outputs for the single new token."""
+    With ``k_scale``/``v_scale`` ([B, S_max, KV, 1] f32 — trailing
+    singleton so the scale rides the same 4-D BlockSpec index map as its
+    payload) K/V may be int8: tiles dequantize in-register inside the
+    kernel. Returns [B, KV, G, d] attention outputs for the new token."""
     b, kvh, g, d = q.shape
     s_max = k.shape[1]
     s_steps = pl.cdiv(s_max, block_s)
     grid = (b, kvh, s_steps)
+    quant = k_scale is not None
+    kv_spec = pl.BlockSpec(
+        (1, block_s, 1, d), lambda bi, hi, si, lens: (bi, si, hi, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, hi, si, lens: (bi, hi, 0, 0)),
+        kv_spec,
+    ]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, block_s, 1, 1), lambda bi, hi, si, lens: (bi, si, hi, 0)
+        )
+        in_specs += [scale_spec, kv_spec, scale_spec]
+    else:
+        in_specs.append(kv_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si, lens: (bi, hi, 0, 0)),
-            pl.BlockSpec(
-                (1, block_s, 1, d), lambda bi, hi, si, lens: (bi, si, hi, 0)
-            ),
-            pl.BlockSpec(
-                (1, block_s, 1, d), lambda bi, hi, si, lens: (bi, si, hi, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, d), lambda bi, hi, si, lens: (bi, hi, 0, 0)
         ),
@@ -118,9 +179,13 @@ def decode_attention(
     )
 
     cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    kern = _decode_kernel_q8 if quant else _decode_kernel
+    operands = (
+        (cur_len, q, k, k_scale, v, v_scale) if quant else (cur_len, q, k, v)
+    )
     return pl.pallas_call(
         functools.partial(
-            _decode_kernel, block_s=block_s, s_steps=s_steps, window=window
+            kern, block_s=block_s, s_steps=s_steps, window=window
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
@@ -128,4 +193,4 @@ def decode_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(cur_len, q, k, v)
+    )(*operands)

@@ -43,6 +43,80 @@ def _matmul_kernel(
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_q8_kernel(
+    a_ref, b_ref, s_ref, o_ref, acc_ref, *, k_steps: int, block_k: int,
+    k_size: int
+):
+    """Int8-RHS variant: the weight tile arrives int8 and widens in-register
+    AFTER the VMEM load — the int8 tile is the only RHS HBM traffic. The
+    per-output-channel dequant is algebraically a column scaling of the
+    finished accumulator (out[m,n] = (Σ_k a[m,k]·q[k,n])·s[n]), so it folds
+    into the flush multiply instead of touching every K tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...].astype(a.dtype)
+    if k_size % block_k:  # K tail: zero the overhang in both operands
+        s = pl.program_id(2)
+        ka = s * block_k + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        kb = s * block_k + jax.lax.broadcasted_iota(jnp.int32, b.shape, 0)
+        a = jnp.where(ka < k_size, a, 0)
+        b = jnp.where(kb < k_size, b, 0)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_q8(
+    a: jax.Array,
+    b_q8: jax.Array,
+    b_scale: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """[M,K] @ int8 [K,N] with per-output-channel f32 scales [N] -> [M,N].
+
+    The quantized-weight-serving matmul: ``b_q8`` is a symmetric int8
+    weight (``repro.models.quant``), ``b_scale`` its per-column scale.
+    Matches ``matmul(a, dequant(b))`` to f32 tolerance while never
+    materializing the dequantized weight."""
+    m, k = a.shape
+    k2, n = b_q8.shape
+    assert k == k2, (a.shape, b_q8.shape)
+    s2 = b_scale.reshape(1, n).astype(jnp.float32)
+    k_steps = pl.cdiv(k, block_k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), k_steps)
+    return pl.pallas_call(
+        functools.partial(
+            _matmul_q8_kernel, k_steps=k_steps, block_k=block_k, k_size=k
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b_q8, s2)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
 )

@@ -52,15 +52,19 @@ def _resolve(mode: Mode) -> str:
 
 @functools.lru_cache(maxsize=4096)
 def _plan(
-    op: str, shape: tuple[int, ...], dtype_name: str, backend: str, gen: int
+    op: str, shape: tuple[int, ...], dtype_name: str, backend: str, gen: int,
+    kv_dtype_name: Optional[str] = None,
 ) -> dict[str, int]:
     """Memoized block plan for one static (op, shape, dtype, backend) cell.
 
     ``gen`` is the tuner generation — swapping tuners (tests) invalidates
     every memoized plan without touching this cache directly.
+    ``kv_dtype_name`` keys quantized-cache attention separately (an int8
+    cache moves half/quarter the HBM bytes per tile, so its block-size
+    winner need not match the f32 cache's).
     """
     tuner = autotune.get_tuner()
-    hit = tuner.lookup(op, shape, dtype_name, backend)
+    hit = tuner.lookup(op, shape, dtype_name, backend, kv_dtype_name)
     if hit is not None:
         return dict(hit)
     # only build the measure closure (it allocates bucketed synthetic
@@ -70,11 +74,18 @@ def _plan(
         if tuner.sweep
         else None
     )
-    return tuner.get(op, shape, dtype_name, backend, measure=measure)
+    return tuner.get(
+        op, shape, dtype_name, backend, measure=measure, kv_dtype=kv_dtype_name
+    )
 
 
-def _blocks(op: str, shape: tuple[int, ...], dtype, backend: str) -> dict[str, int]:
-    return _plan(op, shape, jnp.dtype(dtype).name, backend, autotune.generation())
+def _blocks(
+    op: str, shape: tuple[int, ...], dtype, backend: str, kv_dtype=None
+) -> dict[str, int]:
+    return _plan(
+        op, shape, jnp.dtype(dtype).name, backend, autotune.generation(),
+        None if kv_dtype is None else jnp.dtype(kv_dtype).name,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +115,41 @@ def matmul(
         block_k = cfg["block_k"] if block_k is None else block_k
     return _matmul_k.matmul(
         a, b,
+        block_m=min(block_m, max(m0, 1)),
+        block_n=min(block_n, max(n0, 1)),
+        block_k=min(block_k, max(k0, 1)),
+        interpret=(m == "interpret"),
+    )
+
+
+def matmul_q8(
+    a,
+    b_q8,
+    b_scale,
+    *,
+    mode: Mode = "auto",
+    block: Optional[int] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+):
+    """[M,K] @ int8 [K,N] + per-output-channel scales [N] — the quantized
+    weight-serving matmul. Block plans key the tuner cache with the int8
+    RHS dtype (``|kvint8`` suffix) so f32 winners aren't reused blindly."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.matmul_q8(a, b_q8, b_scale)
+    m0, k0 = a.shape
+    n0 = b_q8.shape[1]
+    if block is not None:
+        block_m = block_n = block_k = block
+    if block_m is None or block_n is None or block_k is None:
+        cfg = _blocks("matmul", (m0, k0, n0), a.dtype, m, kv_dtype=b_q8.dtype)
+        block_m = cfg["block_m"] if block_m is None else block_m
+        block_n = cfg["block_n"] if block_n is None else block_n
+        block_k = cfg["block_k"] if block_k is None else block_k
+    return _matmul_k.matmul_q8(
+        a, b_q8, b_scale,
         block_m=min(block_m, max(m0, 1)),
         block_n=min(block_n, max(n0, 1)),
         block_k=min(block_k, max(k0, 1)),
@@ -258,13 +304,16 @@ def gqa_flash_attention(
 
 def decode_attention(
     q, k, v, cur_len, *, window: int = 0, mode: Mode = "auto",
-    block_s: Optional[int] = None,
+    block_s: Optional[int] = None, k_scale=None, v_scale=None,
 ):
     """Batched single-token decode attention against the KV cache.
 
     q: [B, H, d] (the new token's query heads); k/v: [B, S_max, KV, d]
     (decode-cache layout, possibly lower-precision storage); cur_len: []
-    or [B] tokens already cached per slot. Returns [B, H, d]."""
+    or [B] tokens already cached per slot. ``k_scale``/``v_scale``
+    ([B, S_max, KV] f32, the cache-resident scale leaves) mark K/V as
+    int8 rows — dequant happens inside the kernel / oracle, never as an
+    f32 cache copy. Returns [B, H, d]."""
     b, h, d = q.shape
     s_max, kvh = k.shape[1], k.shape[2]
     assert h % kvh == 0, (h, kvh)
@@ -272,23 +321,32 @@ def decode_attention(
     qg = q.reshape(b, kvh, g, d)
     m = _resolve(mode)
     if m == "ref":
-        out = ref.decode_attention(qg, k, v, cur_len, window=window)
+        out = ref.decode_attention(
+            qg, k, v, cur_len, window=window,
+            k_scale=k_scale, v_scale=v_scale,
+        )
     else:
         if block_s is None:
-            block_s = _blocks("decode_attention", k.shape, q.dtype, m)["block_s"]
-        # no pre-cast of the cache: the kernel upcasts per-tile (f8/bf16
-        # storage reads stay at storage width in HBM)
+            block_s = _blocks(
+                "decode_attention", k.shape, q.dtype, m,
+                kv_dtype=None if k_scale is None else k.dtype,
+            )["block_s"]
+        # no pre-cast of the cache: the kernel upcasts per-tile (int8/bf16
+        # storage reads stay at storage width in HBM); scales gain a
+        # trailing singleton so they ride the payloads' BlockSpec maps
         out = _decode_k.decode_attention(
             qg, k, v, cur_len,
             window=window, block_s=min(block_s, s_max),
             interpret=(m == "interpret"),
+            k_scale=None if k_scale is None else k_scale[..., None],
+            v_scale=None if v_scale is None else v_scale[..., None],
         )
     return out.reshape(b, h, d)
 
 
 def ragged_attention(
     q, k, v, tok_slot, tok_pos, *, window: int = 0, mode: Mode = "auto",
-    block_s: Optional[int] = None, valid=None,
+    block_s: Optional[int] = None, valid=None, k_scale=None, v_scale=None,
 ):
     """Packed variable-length attention: a flat token batch (decode
     singletons + prefill chunks from any mix of sequences) against the
@@ -310,24 +368,30 @@ def ragged_attention(
     m = _resolve(mode)
     if m == "ref":
         out = ref.ragged_attention(
-            qg, k, v, tok_slot, tok_pos, window=window, valid=valid
+            qg, k, v, tok_slot, tok_pos, window=window, valid=valid,
+            k_scale=k_scale, v_scale=v_scale,
         )
     else:
         if block_s is None:
-            block_s = _blocks("ragged_attention", k.shape, q.dtype, m)["block_s"]
-        # no pre-cast of the cache: the kernel upcasts per-tile (f8/bf16
+            block_s = _blocks(
+                "ragged_attention", k.shape, q.dtype, m,
+                kv_dtype=None if k_scale is None else k.dtype,
+            )["block_s"]
+        # no pre-cast of the cache: the kernel upcasts per-tile (int8/bf16
         # storage reads stay at storage width in HBM)
         out = _ragged_k.ragged_attention(
             qg, k, v, tok_slot, tok_pos,
             window=window, block_s=min(block_s, s_max),
             interpret=(m == "interpret"),
+            k_scale=None if k_scale is None else k_scale[..., None],
+            v_scale=None if v_scale is None else v_scale[..., None],
         )
     return out.reshape(t, h, d)
 
 
 def paged_ragged_attention(
     q, k, v, tok_seq, tok_pos, block_tables, *, window: int = 0,
-    mode: Mode = "auto", valid=None,
+    mode: Mode = "auto", valid=None, k_scale=None, v_scale=None,
 ):
     """Packed variable-length attention against a block-paged KV pool: the
     ``(slot, pos)`` descriptor indirection of :func:`ragged_attention`
@@ -350,17 +414,21 @@ def paged_ragged_attention(
         out = ref.paged_ragged_attention(
             qg, k, v, tok_seq, tok_pos, block_tables,
             window=window, valid=valid,
+            k_scale=k_scale, v_scale=v_scale,
         )
     else:
         out = _ragged_k.paged_ragged_attention(
             qg, k, v, tok_seq, tok_pos, block_tables,
             window=window, interpret=(m == "interpret"),
+            k_scale=None if k_scale is None else k_scale[..., None],
+            v_scale=None if v_scale is None else v_scale[..., None],
         )
     return out.reshape(t, h, d)
 
 
 def paged_decode_attention(
     q, k, v, cur_len, block_tables, *, window: int = 0, mode: Mode = "auto",
+    k_scale=None, v_scale=None,
 ):
     """Batched single-token decode attention against a block-paged pool.
 
@@ -377,11 +445,12 @@ def paged_decode_attention(
     if m == "ref":
         qg = q.reshape(b, kvh, h // kvh, d)
         out = ref.paged_decode_attention(
-            qg, k, v, cur_len, block_tables, window=window
+            qg, k, v, cur_len, block_tables, window=window,
+            k_scale=k_scale, v_scale=v_scale,
         )
         return out.reshape(b, h, d)
     cur = jnp.broadcast_to(jnp.asarray(cur_len), (b,))
     return paged_ragged_attention(
         q, k, v, jnp.arange(b, dtype=jnp.int32), cur, block_tables,
-        window=window, mode=mode,
+        window=window, mode=mode, k_scale=k_scale, v_scale=v_scale,
     )

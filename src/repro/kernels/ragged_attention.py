@@ -105,6 +105,54 @@ def _ragged_kernel(
         ).astype(o_ref.dtype)
 
 
+def _ragged_kernel_q8(
+    slot_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref,
+    l_ref, acc_ref, *, block_s: int, s_steps: int, window: int
+):
+    """Int8-cache variant: K/V tiles arrive int8 with per-(position, head)
+    f32 scale rows riding the same index map; both widen in-register after
+    the VMEM load — no dequantized f32 cache copy ever exists in HBM."""
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[pl.program_id(0)]
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        # in-register dequant: int8 tile * its per-row scale column
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0, :]  # [bs, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0, :]  # [bs, d]
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (d**-0.5)
+        kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= pos
+        if window:
+            valid &= kpos > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        vpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v_ok = vpos <= pos
+        if window:
+            v_ok &= vpos > pos - window
+        v = jnp.where(v_ok, v, 0.0)
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    live = si * block_s <= pos
+    if window:
+        live &= (si + 1) * block_s > pos - window
+    pl.when(live)(_compute)
+
+    @pl.when(si == s_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 def _paged_kernel(
     seq_ref, pos_ref, btab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     acc_ref, *, block_s: int, s_steps: int, window: int
@@ -116,6 +164,19 @@ def _paged_kernel(
     _ragged_kernel(
         seq_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         block_s=block_s, s_steps=s_steps, window=window,
+    )
+
+
+def _paged_kernel_q8(
+    seq_ref, pos_ref, btab_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+    m_ref, l_ref, acc_ref, *, block_s: int, s_steps: int, window: int
+):
+    # paged + quantized: the scale pools route through the SAME block-table
+    # index map as their payload pools, so a COW-shared block's scales are
+    # definitionally the ones fetched with it
+    _ragged_kernel_q8(
+        seq_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref,
+        l_ref, acc_ref, block_s=block_s, s_steps=s_steps, window=window,
     )
 
 
@@ -132,32 +193,43 @@ def ragged_attention(
     window: int = 0,
     block_s: int = 256,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """q: [T, KV, G, d] packed queries; k/v: [B, S_max, KV, d] batched cache;
-    tok_slot/tok_pos: [T] int32 per-token descriptors.
+    tok_slot/tok_pos: [T] int32 per-token descriptors. With ``k_scale``/
+    ``v_scale`` ([B, S_max, KV, 1] f32) the cache may be int8 — tiles
+    dequantize in-register inside the kernel.
 
     Returns [T, KV, G, d] attention outputs for every packed token."""
     t, kvh, g, d = q.shape
     s_max = k.shape[1]
     s_steps = pl.cdiv(s_max, block_s)
     grid = (t, kvh, s_steps)
+    quant = k_scale is not None
+    # the slot indirection lives in the index map: each token's K/V
+    # tiles stream straight from its cache row, no [T, S, KV, d]
+    # gather ever exists
+    kv_spec = pl.BlockSpec(
+        (1, block_s, 1, d),
+        lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda ti, hi, si, slots, poss: (ti, hi, 0, 0)),
+        kv_spec,
+    ]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, block_s, 1, 1),
+            lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
+        )
+        in_specs += [scale_spec, kv_spec, scale_spec]
+    else:
+        in_specs.append(kv_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ti, hi, si, slots, poss: (ti, hi, 0, 0)),
-            # the slot indirection lives in the index map: each token's K/V
-            # tiles stream straight from its cache row, no [T, S, KV, d]
-            # gather ever exists
-            pl.BlockSpec(
-                (1, block_s, 1, d),
-                lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
-            ),
-            pl.BlockSpec(
-                (1, block_s, 1, d),
-                lambda ti, hi, si, slots, poss: (slots[ti], si, hi, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, d), lambda ti, hi, si, slots, poss: (ti, hi, 0, 0)
         ),
@@ -170,9 +242,15 @@ def ragged_attention(
 
     tok_slot = jnp.asarray(tok_slot, jnp.int32)
     tok_pos = jnp.asarray(tok_pos, jnp.int32)
+    kern = _ragged_kernel_q8 if quant else _ragged_kernel
+    operands = (
+        (tok_slot, tok_pos, q, k, k_scale, v, v_scale)
+        if quant
+        else (tok_slot, tok_pos, q, k, v)
+    )
     return pl.pallas_call(
         functools.partial(
-            _ragged_kernel, block_s=block_s, s_steps=s_steps, window=window
+            kern, block_s=block_s, s_steps=s_steps, window=window
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, kvh, g, d), q.dtype),
@@ -180,7 +258,7 @@ def ragged_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(tok_slot, tok_pos, q, k, v)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -194,6 +272,8 @@ def paged_ragged_attention(
     *,
     window: int = 0,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Packed ragged attention against a block-paged KV pool.
 
@@ -203,13 +283,18 @@ def paged_ragged_attention(
     block_tables: [R, max_blocks] int32 mapping (sequence row, S tile) to a
     pool block (out-of-range sentinel = unallocated). The S tile size IS
     the pool's block_size — the pool layout already tiled the cache for
-    the kernel, so no extra blocking choice exists on this path.
+    the kernel, so no extra blocking choice exists on this path. With
+    ``k_scale``/``v_scale`` ([num_blocks, block_size, KV, 1] f32 scale
+    pools) the payload pools may be int8: the scales ride the SAME
+    block-table index map, so a COW-shared block always travels with the
+    scales that describe it.
 
     Returns [T, KV, G, d] attention outputs for every packed token."""
     t, kvh, g, d = q.shape
     nb, block_s = k.shape[0], k.shape[1]
     s_steps = block_tables.shape[1]
     grid = (t, kvh, s_steps)
+    quant = k_scale is not None
 
     def _kv_map(ti, hi, si, seqs, poss, btab):
         # (slot, pos) -> (block, offset): the tile's pool block comes from
@@ -217,16 +302,22 @@ def paged_ragged_attention(
         # (those tiles are masked dead by the position bound anyway)
         return (jnp.minimum(btab[seqs[ti], si], nb - 1), 0, hi, 0)
 
+    kv_spec = pl.BlockSpec((1, block_s, 1, d), _kv_map)
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, g, d), lambda ti, hi, si, seqs, poss, btab: (ti, hi, 0, 0)
+        ),
+        kv_spec,
+    ]
+    if quant:
+        scale_spec = pl.BlockSpec((1, block_s, 1, 1), _kv_map)
+        in_specs += [scale_spec, kv_spec, scale_spec]
+    else:
+        in_specs.append(kv_spec)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, g, d), lambda ti, hi, si, seqs, poss, btab: (ti, hi, 0, 0)
-            ),
-            pl.BlockSpec((1, block_s, 1, d), _kv_map),
-            pl.BlockSpec((1, block_s, 1, d), _kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, d), lambda ti, hi, si, seqs, poss, btab: (ti, hi, 0, 0)
         ),
@@ -240,9 +331,15 @@ def paged_ragged_attention(
     tok_seq = jnp.asarray(tok_seq, jnp.int32)
     tok_pos = jnp.asarray(tok_pos, jnp.int32)
     block_tables = jnp.asarray(block_tables, jnp.int32)
+    kern = _paged_kernel_q8 if quant else _paged_kernel
+    operands = (
+        (tok_seq, tok_pos, block_tables, q, k, k_scale, v, v_scale)
+        if quant
+        else (tok_seq, tok_pos, block_tables, q, k, v)
+    )
     return pl.pallas_call(
         functools.partial(
-            _paged_kernel, block_s=block_s, s_steps=s_steps, window=window
+            kern, block_s=block_s, s_steps=s_steps, window=window
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, kvh, g, d), q.dtype),
@@ -250,4 +347,4 @@ def paged_ragged_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(tok_seq, tok_pos, block_tables, q, k, v)
+    )(*operands)

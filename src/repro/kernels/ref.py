@@ -16,6 +16,18 @@ def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
 
 
+def matmul_q8(a: jax.Array, b_q8: jax.Array, b_scale: jax.Array) -> jax.Array:
+    """[M,K] @ int8 [K,N] with per-output-channel f32 scales [N].
+
+    Oracle for the fused kernel: scale the finished f32 accumulator by the
+    output column's scale (algebraically identical to dequantizing the
+    weight first, but matching the kernel's flush-time multiply exactly)."""
+    acc = jnp.dot(
+        a, b_q8.astype(a.dtype), preferred_element_type=jnp.float32
+    )
+    return (acc * b_scale.reshape(1, -1).astype(jnp.float32)).astype(a.dtype)
+
+
 def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
     return (alpha * x.astype(jnp.float32) + y.astype(jnp.float32)).astype(x.dtype)
 
@@ -85,6 +97,19 @@ def gqa_flash_attention(
     return jnp.einsum("bgqk,bkd->bgqd", p.astype(v.dtype), v)
 
 
+def dequant_kv(k: jax.Array, k_scale: jax.Array | None, dtype) -> jax.Array:
+    """Widen a (possibly int8) KV tensor to ``dtype`` and apply per-row
+    scales (one scale per ``[..., d]`` row, i.e. ``k.shape[:-1]``). With
+    ``k_scale=None`` this is the plain dtype cast the unquantized oracles
+    always did; with all-ones f32 scales it is bit-identical to that cast
+    (``x * 1.0 == x``), which is what makes the quantized machinery testable
+    at ``kv_dtype=f32``."""
+    kf = k.astype(dtype)
+    if k_scale is None:
+        return kf
+    return kf * k_scale[..., None].astype(dtype)
+
+
 def decode_attention(
     q: jax.Array,
     k: jax.Array,
@@ -92,14 +117,20 @@ def decode_attention(
     cur_len: jax.Array,
     *,
     window: int = 0,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Single-token grouped decode attention oracle.
 
     q: [B, KV, G, d]; k/v: [B, S_max, KV, d]; cur_len: [] or [B] tokens
     already cached (the new token was scattered at index cur_len, so key
-    position t is valid iff t <= cur_len). Returns [B, KV, G, d] in f32
-    softmax math, cast back to q.dtype.
+    position t is valid iff t <= cur_len). Optional ``k_scale``/``v_scale``
+    ([B, S_max, KV] f32) dequantize int8 K/V rows in-math — garbage scales
+    at invalid positions are as harmless as garbage K/V (masked lanes).
+    Returns [B, KV, G, d] in f32 softmax math, cast back to q.dtype.
     """
+    k = dequant_kv(k, k_scale, q.dtype)
+    v = dequant_kv(v, v_scale, q.dtype)
     b, kvh, g, d = q.shape
     s_max = k.shape[1]
     scale = d**-0.5
@@ -148,6 +179,8 @@ def ragged_attention(
     *,
     window: int = 0,
     valid: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Packed variable-length attention oracle (the unified-dispatch path).
 
@@ -155,8 +188,9 @@ def ragged_attention(
     chunks mixed); k/v: [B, S_max, KV, d] batched cache with the packed
     tokens' K/V already scattered at (tok_slot, tok_pos); tok_slot/tok_pos:
     [T] int32; ``valid`` optionally passes a precomputed
-    :func:`ragged_valid_mask`. Returns [T, KV, G, d] in f32 softmax math,
-    cast back to q.dtype.
+    :func:`ragged_valid_mask`; ``k_scale``/``v_scale`` ([B, S_max, KV] f32)
+    dequantize int8 caches per row. Returns [T, KV, G, d] in f32 softmax
+    math, cast back to q.dtype.
 
     Full-cross formulation: every packed token scores against EVERY slot's
     cache in one batched matmul per KV head, and the B-1 wrong slots are
@@ -166,6 +200,8 @@ def ragged_attention(
     are far cheaper on CPU than a per-token cache gather followed by T tiny
     batched dots, and the whole oracle is two dot_generals + one where.
     """
+    k = dequant_kv(k, k_scale, q.dtype)
+    v = dequant_kv(v, v_scale, q.dtype)
     t, kvh, g, d = q.shape
     b, s_max = k.shape[0], k.shape[1]
     scale = d**-0.5
@@ -218,16 +254,23 @@ def paged_decode_attention(
     block_tables: jax.Array,
     *,
     window: int = 0,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged single-token decode oracle: gather the per-sequence dense view
     from the pool, then the EXACT dense decode oracle — the paged engine's
-    greedy streams stay bit-identical to the slot-cache engine on CPU."""
+    greedy streams stay bit-identical to the slot-cache engine on CPU.
+    Scale pools ([num_blocks, block_size, KV] f32) ride the SAME gather
+    (``paged_gather`` is trailing-dim agnostic), so scales travel with their
+    blocks through tables, COW sharing and re-homing by construction."""
     return decode_attention(
         q,
         paged_gather(pool_k, block_tables),
         paged_gather(pool_v, block_tables),
         cur_len,
         window=window,
+        k_scale=None if k_scale is None else paged_gather(k_scale, block_tables),
+        v_scale=None if v_scale is None else paged_gather(v_scale, block_tables),
     )
 
 
@@ -241,10 +284,13 @@ def paged_ragged_attention(
     *,
     window: int = 0,
     valid: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged packed ragged oracle: the dense :func:`ragged_attention` over
     the block tables' gathered view (same masks, same math, bit-identical
-    to the dense path wherever positions are valid)."""
+    to the dense path wherever positions are valid). Scale pools gather
+    through the same tables as their payload blocks."""
     return ragged_attention(
         q,
         paged_gather(pool_k, block_tables),
@@ -253,6 +299,8 @@ def paged_ragged_attention(
         tok_pos,
         window=window,
         valid=valid,
+        k_scale=None if k_scale is None else paged_gather(k_scale, block_tables),
+        v_scale=None if v_scale is None else paged_gather(v_scale, block_tables),
     )
 
 

@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.dist.compression import quantize_rows
 from repro.kernels import ops
 from repro.models.layers import Params, apply_rope, dense_init, rms_norm
+from repro.models.quant import qweight
 
 NEG_INF = -1e30
 
@@ -246,9 +248,9 @@ def attention_apply(
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     impl = impl or cfg.attn_impl
 
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wq"], x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wk"], x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wv"], x.dtype))
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)
@@ -277,7 +279,7 @@ def attention_apply(
         o = chunked_attention(
             q, k, v, causal=True, chunk=cfg.attn_chunk, window=cfg.sliding_window
         )
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", o, qweight(params["wo"], o.dtype))
     if return_kv:
         return out, kv_cache
     return out
@@ -297,7 +299,9 @@ def attention_decode(
     cur_len: jax.Array,
     mesh_info=None,
     block_tables: Optional[jax.Array] = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+):
     """One decode step.
 
     x: [B, 1, d]; cache_k/v: [B, S_max, KV, hd]; cur_len: [] or [B] tokens
@@ -314,12 +318,22 @@ def attention_decode(
     touch another request's blocks), and attention dispatches through
     ``ops.paged_decode_attention``, whose CPU path is bit-identical to the
     dense gather.
+
+    With ``k_scale``/``v_scale`` ([B, S_max, KV] — or [num_blocks,
+    block_size, KV] paged — f32) the cache stores quantized rows: the new
+    token's K/V quantize per-(position, head) row at insert (O(written
+    rows), never a cache-sized requant), the scales scatter alongside the
+    payloads, and attention dequantizes inside the kernel. Returns a
+    5-tuple (out, new_k, new_v, new_k_scale, new_v_scale) in that case.
+    When the cache dtype is f32 the rows store verbatim with scale 1.0 —
+    bit-identical outputs to the unscaled path.
     """
     b, _, d = x.shape
+    quant = k_scale is not None
 
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wq"], x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wk"], x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, qweight(params["wv"], x.dtype))
     q = _head_constraint(q, mesh_info, 2)
     k = _head_constraint(k, mesh_info, 2)
     v = _head_constraint(v, mesh_info, 2)
@@ -332,16 +346,27 @@ def attention_decode(
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
 
+    if quant:
+        # per-(position, head)-row quantization of the freshly projected
+        # K/V — identity (payload, ones) when the cache stores f32
+        k, ks = quantize_rows(k, cache_k.dtype)
+        v, vs = quantize_rows(v, cache_v.dtype)
+
     if block_tables is None:
         # scatter the new k/v at cur_len
         cache_k = _scatter_step(cache_k, k, cur_len)
         cache_v = _scatter_step(cache_v, v, cur_len)
+        if quant:
+            k_scale = _scatter_step(k_scale, ks, cur_len)
+            v_scale = _scatter_step(v_scale, vs, cur_len)
 
         # grouped decode attention: never expands the cache to H heads
         # (materializing [B,S,H,hd] per layer is a groups× transient blowup
-        # at 32k context); cache may be f8 storage — compute in model dtype
+        # at 32k context); cache may be int8/f8 storage — the kernel widens
+        # per-tile in-register, so no dequantized cache copy exists
         o = ops.decode_attention(
-            q[:, 0], cache_k, cache_v, cur_len, window=cfg.sliding_window
+            q[:, 0], cache_k, cache_v, cur_len, window=cfg.sliding_window,
+            k_scale=k_scale, v_scale=v_scale,
         )[:, None]  # [B,1,H,hd]
     else:
         # paged: (slot, cur_len) -> (block, offset) through the sequence's
@@ -359,11 +384,16 @@ def attention_decode(
         cache_v = cache_v.at[blk, p % bs].set(
             v[:, 0].astype(cache_v.dtype), mode="drop"
         )
+        if quant:
+            k_scale = k_scale.at[blk, p % bs].set(ks[:, 0], mode="drop")
+            v_scale = v_scale.at[blk, p % bs].set(vs[:, 0], mode="drop")
         o = ops.paged_decode_attention(
             q[:, 0], cache_k, cache_v, cur_len, block_tables,
-            window=cfg.sliding_window,
+            window=cfg.sliding_window, k_scale=k_scale, v_scale=v_scale,
         )[:, None]
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", o, qweight(params["wo"], o.dtype))
+    if quant:
+        return out, cache_k, cache_v, k_scale, v_scale
     return out, cache_k, cache_v
 
 
@@ -379,7 +409,9 @@ def attention_packed(
     pack_slots: Optional[jax.Array] = None,
     mesh_info=None,
     block_tables: Optional[jax.Array] = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+):
     """Packed variable-length step: any mix of decode singletons and prefill
     chunks as ONE flat token batch (the unified serving dispatch).
 
@@ -410,10 +442,17 @@ def attention_packed(
     table rows. Prefix-shared blocks are never written here — the engine
     only feeds tokens past the matched prefix, so every scattered
     position lands in a private block (block-aligned copy-on-write).
+
+    With ``k_scale``/``v_scale`` the cache stores quantized rows (see
+    :func:`attention_decode`): the pack's T fresh K/V rows quantize at
+    insert and their scales scatter through the same (slot, pos) /
+    (block, offset) routing as the payloads — O(T) scale rows written per
+    step. Returns (out, new_k, new_v, new_k_scale, new_v_scale).
     """
-    q = jnp.einsum("td,dhk->thk", x, params["wq"])
-    k = jnp.einsum("td,dhk->thk", x, params["wk"])
-    v = jnp.einsum("td,dhk->thk", x, params["wv"])
+    quant = k_scale is not None
+    q = jnp.einsum("td,dhk->thk", x, qweight(params["wq"], x.dtype))
+    k = jnp.einsum("td,dhk->thk", x, qweight(params["wk"], x.dtype))
+    v = jnp.einsum("td,dhk->thk", x, qweight(params["wv"], x.dtype))
     q = _head_constraint(q, mesh_info, 1)
     k = _head_constraint(k, mesh_info, 1)
     v = _head_constraint(v, mesh_info, 1)
@@ -427,19 +466,29 @@ def attention_packed(
     k = apply_rope(k, pos, cfg.rope_theta)
 
     glob_slot = tok_slot if pack_slots is None else pack_slots[tok_slot]
+    if quant:
+        k, ks = quantize_rows(k, cache_k.dtype)  # [T,KV,hd] -> scale [T,KV]
+        v, vs = quantize_rows(v, cache_v.dtype)
     if block_tables is None:
         # one fused scatter for the whole pack replaces the per-admission
         # full-cache insert: O(T) rows written, never a cache-sized copy
         cache_k = cache_k.at[glob_slot, pos].set(k.astype(cache_k.dtype), mode="drop")
         cache_v = cache_v.at[glob_slot, pos].set(v.astype(cache_v.dtype), mode="drop")
+        if quant:
+            k_scale = k_scale.at[glob_slot, pos].set(ks, mode="drop")
+            v_scale = v_scale.at[glob_slot, pos].set(vs, mode="drop")
 
         if pack_slots is None:
             att_k, att_v = cache_k, cache_v
+            att_ks, att_vs = k_scale, v_scale
         else:  # P-row sub-cache view: attention work scales with the pack
             att_k, att_v = cache_k[pack_slots], cache_v[pack_slots]
+            att_ks = None if k_scale is None else k_scale[pack_slots]
+            att_vs = None if v_scale is None else v_scale[pack_slots]
         o = ops.ragged_attention(
             q, att_k, att_v, tok_slot, pos,
             window=cfg.sliding_window, valid=valid,
+            k_scale=att_ks, v_scale=att_vs,
         )  # [T, H, hd]
     else:
         # paged pool: same fused scatter through the (block, offset)
@@ -454,6 +503,9 @@ def attention_packed(
         blk = jnp.where(pos < maxb * bs, block_tables[glob_slot, bidx], nb)
         cache_k = cache_k.at[blk, pos % bs].set(k.astype(cache_k.dtype), mode="drop")
         cache_v = cache_v.at[blk, pos % bs].set(v.astype(cache_v.dtype), mode="drop")
+        if quant:
+            k_scale = k_scale.at[blk, pos % bs].set(ks, mode="drop")
+            v_scale = v_scale.at[blk, pos % bs].set(vs, mode="drop")
 
         att_btab = (
             block_tables if pack_slots is None else block_tables[pack_slots]
@@ -461,8 +513,11 @@ def attention_packed(
         o = ops.paged_ragged_attention(
             q, cache_k, cache_v, tok_slot, pos, att_btab,
             window=cfg.sliding_window, valid=valid,
+            k_scale=k_scale, v_scale=v_scale,
         )  # [T, H, hd]
-    out = jnp.einsum("thk,hkd->td", o, params["wo"])
+    out = jnp.einsum("thk,hkd->td", o, qweight(params["wo"], o.dtype))
+    if quant:
+        return out, cache_k, cache_v, k_scale, v_scale
     return out, cache_k, cache_v
 
 

@@ -96,10 +96,12 @@ def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
 
 
 def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
-    h = jnp.einsum("...d,df->...f", x, params["w_in"])
-    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    from repro.models.quant import qweight  # read-through int8 dequant
+
+    h = jnp.einsum("...d,df->...f", x, qweight(params["w_in"], x.dtype))
+    g = jnp.einsum("...d,df->...f", x, qweight(params["w_gate"], x.dtype))
     h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
-    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+    return jnp.einsum("...f,fd->...d", h, qweight(params["w_out"], x.dtype))
 
 
 # ---------------------------------------------------------------------------

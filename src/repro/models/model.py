@@ -289,10 +289,23 @@ class LM:
         """KV/latent cache storage dtype (f8 option halves decode HBM)."""
         return jnp.dtype(self.cfg.kv_cache_dtype or self.cfg.dtype)
 
-    def init_cache(self, batch: int, max_len: int) -> Params:
-        """Decode cache pytree (zeros). Layout per family documented inline."""
+    def init_cache(
+        self, batch: int, max_len: int, kv_dtype: Optional[Any] = None
+    ) -> Params:
+        """Decode cache pytree (zeros). Layout per family documented inline.
+
+        ``kv_dtype`` opts the positional-KV cache into quantized-row
+        storage: K/V leaves store that dtype (int8 for quantized serving;
+        f32 keeps the scale machinery but stays bit-identical to the plain
+        path) and per-(position, head) f32 ``k_scale``/``v_scale`` leaves
+        ``[L, B, S, KV]`` live IN the cache pytree — they thread through
+        scan/donation/COW exactly like the payloads they describe."""
         cfg, dt = self.cfg, self.cache_dtype
         L = cfg.n_layers
+        if kv_dtype is not None and not self.supports_packed:
+            raise ValueError(
+                f"family {cfg.family!r}/mla has no positional KV to quantize"
+            )
         if cfg.family in ("dense", "moe"):
             if cfg.mla is not None:
                 m = cfg.mla
@@ -301,6 +314,14 @@ class LM:
                     "krope": jnp.zeros((L, batch, max_len, m.rope_head_dim), dt),
                 }
             kv, hd = cfg.n_kv_heads, cfg.head_dim
+            if kv_dtype is not None:
+                qdt = jnp.dtype(kv_dtype)
+                return {
+                    "k": jnp.zeros((L, batch, max_len, kv, hd), qdt),
+                    "v": jnp.zeros((L, batch, max_len, kv, hd), qdt),
+                    "k_scale": jnp.ones((L, batch, max_len, kv), jnp.float32),
+                    "v_scale": jnp.ones((L, batch, max_len, kv), jnp.float32),
+                }
             return {
                 "k": jnp.zeros((L, batch, max_len, kv, hd), dt),
                 "v": jnp.zeros((L, batch, max_len, kv, hd), dt),
@@ -329,7 +350,9 @@ class LM:
             }
         raise ValueError(cfg.family)
 
-    def init_kv_pool(self, num_blocks: int, block_size: int) -> Params:
+    def init_kv_pool(
+        self, num_blocks: int, block_size: int, kv_dtype: Optional[Any] = None
+    ) -> Params:
         """Block-paged KV pool (zeros): ``[L, num_blocks, block_size, KV,
         hd]`` per leaf — the dense cache's ``[B, S_max]`` plane refactored
         into shared, individually-ownable blocks (paged serving,
@@ -337,13 +360,28 @@ class LM:
         sequence b = b * max_blocks + i) this is a pure reshape of
         ``init_cache(B, max_blocks * block_size)`` — paging adds an
         indirection, not a new layout. Positional-KV families only (the
-        same constraint as ``supports_packed``)."""
+        same constraint as ``supports_packed``).
+
+        ``kv_dtype`` adds quantized-row storage exactly as in
+        :meth:`init_cache`: scale leaves ``[L, num_blocks, block_size,
+        KV]`` f32 are pool-shaped, so block-granular ownership (COW,
+        prefix sharing, re-homing) carries the scales with their blocks
+        for free."""
         cfg, dt = self.cfg, self.cache_dtype
         if not self.supports_packed:
             raise ValueError(
                 f"family {cfg.family!r}/mla has no positional KV to page"
             )
         kv, hd = cfg.n_kv_heads, cfg.head_dim
+        if kv_dtype is not None:
+            qdt = jnp.dtype(kv_dtype)
+            L = cfg.n_layers
+            return {
+                "k": jnp.zeros((L, num_blocks, block_size, kv, hd), qdt),
+                "v": jnp.zeros((L, num_blocks, block_size, kv, hd), qdt),
+                "k_scale": jnp.ones((L, num_blocks, block_size, kv), jnp.float32),
+                "v_scale": jnp.ones((L, num_blocks, block_size, kv), jnp.float32),
+            }
         return {
             "k": jnp.zeros((cfg.n_layers, num_blocks, block_size, kv, hd), dt),
             "v": jnp.zeros((cfg.n_layers, num_blocks, block_size, kv, hd), dt),
@@ -523,6 +561,13 @@ class LM:
                 blk["attn"], cfg, h, cache_l["ckv"], cache_l["krope"], cur_len
             )
             new_cache = {"ckv": ckv, "krope": krope}
+        elif "k_scale" in cache_l:  # quantized-row cache: scales ride along
+            a, ck, cv, cks, cvs = attn_mod.attention_decode(
+                blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len,
+                mesh_info=self.mesh_info, block_tables=block_tables,
+                k_scale=cache_l["k_scale"], v_scale=cache_l["v_scale"],
+            )
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
         else:
             a, ck, cv = attn_mod.attention_decode(
                 blk["attn"], cfg, h, cache_l["k"], cache_l["v"], cur_len,
@@ -564,11 +609,21 @@ class LM:
         """One layer over a packed [T] token batch. cache_l has no L axis."""
         cfg = self.cfg
         h = rms_norm(x, blk["norm1"], cfg.norm_eps)
-        a, ck, cv = attn_mod.attention_packed(
-            blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
-            tok_slot, tok_pos, valid, pack_slots,
-            mesh_info=self.mesh_info, block_tables=block_tables,
-        )
+        if "k_scale" in cache_l:  # quantized-row cache: scales ride along
+            a, ck, cv, cks, cvs = attn_mod.attention_packed(
+                blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
+                tok_slot, tok_pos, valid, pack_slots,
+                mesh_info=self.mesh_info, block_tables=block_tables,
+                k_scale=cache_l["k_scale"], v_scale=cache_l["v_scale"],
+            )
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            a, ck, cv = attn_mod.attention_packed(
+                blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
+                tok_slot, tok_pos, valid, pack_slots,
+                mesh_info=self.mesh_info, block_tables=block_tables,
+            )
+            new_cache = {"k": ck, "v": cv}
         x = x + a
         h = rms_norm(x, blk["norm2"], cfg.norm_eps)
         if "moe" in blk:
@@ -578,7 +633,7 @@ class LM:
             x = x + out[0]
         else:
             x = x + mlp_apply(blk["mlp"], h)
-        return x, {"k": ck, "v": cv}
+        return x, new_cache
 
     def packed_step(
         self,

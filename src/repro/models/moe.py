@@ -156,7 +156,15 @@ def moe_apply(
 
     Returns (out [B,S,d], aux scalar).
     """
+    from repro.models.quant import qweight  # read-through int8 dequant
+
     b, s, d = x.shape
+    # dequantize the expert stacks at entry (per-layer transient under the
+    # scan; the router is never quantized — see repro.models.quant); the
+    # unquantized path passes the original arrays through untouched
+    w_in = qweight(params["w_in"], x.dtype)
+    w_gate = qweight(params["w_gate"], x.dtype)
+    w_out = qweight(params["w_out"], x.dtype)
 
     if mesh_info is not None and mesh_info.model_size > 1:
         from jax.sharding import PartitionSpec as P
@@ -183,15 +191,15 @@ def moe_apply(
             ),
             out_specs=(P(batch_axes, None, None), P()),
             check_vma=False,
-        )(x, params["router"], params["w_in"], params["w_gate"], params["w_out"])
+        )(x, params["router"], w_in, w_gate, w_out)
         aux = aux  # identical on all shards
     else:
         out_flat, aux = _moe_shard(
             x.reshape(b * s, d),
             params["router"],
-            params["w_in"],
-            params["w_gate"],
-            params["w_out"],
+            w_in,
+            w_gate,
+            w_out,
             cfg,
             None,
         )

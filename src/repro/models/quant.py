@@ -1,0 +1,116 @@
+"""Int8 weight serving: one-shot post-load quantization of matmul weights.
+
+:func:`quantize_params` replaces each eligible stacked matmul weight leaf
+with a ``{"q8": int8, "scale": f32}`` sub-dict — symmetric per-output-channel
+quantization (amax over the weight's reduction axes, keepdims so the scale
+broadcasts back without reshapes). Resident param bytes drop ~4x from f32
+while everything precision-critical stays exact: MoE routers (they feed an
+expert argmax — a half-ulp logit flip reroutes a token to a different
+expert), norms, embeddings, and the unembedding head are never touched.
+
+:func:`qweight` is the read-through used at every consuming einsum site:
+dense leaves pass through untouched (the fully-unquantized path is
+byte-identical to before this module existed), quantized leaves dequantize
+at the point of use — inside the scanned layer body, so the transient dense
+weight exists for ONE layer at a time while the resident stack stays int8.
+On TPU the Pallas ``matmul_q8`` kernel (:mod:`repro.kernels.matmul`) is the
+fused analogue: the int8 tile is the only RHS HBM traffic and the
+per-output-channel dequant multiply folds into the accumulator flush.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+_INT8_MAX = 127.0
+
+# subtrees whose leaves are stacked [L, ...] matmul weights; everything
+# outside (embeddings, final norm, hybrid's weight-tied shared block whose
+# leaves drop the L axis and so index differently) stays dense
+_STACK_KEYS = ("blocks", "dense_blocks", "moe_blocks")
+
+
+def _reduction_axes(name: str, ndim: int) -> Optional[tuple[int, ...]]:
+    """Stacked-weight reduction (input) axes for an eligible leaf name.
+
+    Axis 0 is always L. ``wq/wk/wv`` [L, d, H, hd] contract d; ``wo``
+    [L, H, hd, d] contracts (H, hd); the MLP triple is [L, d, ff] /
+    [L, ff, d] at ndim 3 and the stacked MoE experts [L, E, d, ff] /
+    [L, E, ff, d] at ndim 4 (per-expert scales fall out of keepdims).
+    ``router`` is deliberately absent: quantizing it perturbs top-k expert
+    selection, a routing flip — not a rounding error.
+    """
+    if name in ("wq", "wk", "wv"):
+        return (1,)
+    if name == "wo":
+        return (1, 2)
+    if name in ("w_in", "w_gate", "w_out"):
+        return (1,) if ndim == 3 else (2,)
+    return None
+
+
+def quantize_leaf(w: jax.Array, axes: tuple[int, ...]) -> dict[str, jax.Array]:
+    """Symmetric int8 over ``axes`` (keepdims scales): the same
+    ``scale = amax/127`` contract as the KV-cache rows and the gradient
+    compressor (``repro.dist.compression``)."""
+    wf = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=tuple(axes), keepdims=True)
+    scale = jnp.where(amax > 0.0, amax, 1.0) / _INT8_MAX
+    q = jnp.clip(jnp.round(wf / scale), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+    return {"q8": q, "scale": scale}
+
+
+def is_quantized(leaf: Any) -> bool:
+    return isinstance(leaf, dict) and "q8" in leaf
+
+
+def qweight(w: Any, dtype: Any = None) -> jax.Array:
+    """Read-through dequant: dense weights pass through verbatim; a
+    ``{"q8", "scale"}`` leaf widens in one fused multiply at the einsum
+    site (per-layer transient — the resident copy stays int8)."""
+    if is_quantized(w):
+        dense = w["q8"].astype(jnp.float32) * w["scale"]
+        return dense if dtype is None else dense.astype(dtype)
+    return w
+
+
+def quantize_params(params: Any, weight_dtype: Any = "int8") -> Any:
+    """Quantize every eligible stacked matmul weight in a params pytree.
+
+    ``weight_dtype`` of ``None``/``"f32"``/``"float32"`` is the identity
+    (the tree is returned untouched — opt-in means the default path never
+    changes object identity, let alone bytes); ``"int8"`` rewrites eligible
+    leaves to ``{"q8", "scale"}`` sub-dicts. The returned tree is a new
+    dict structure; unquantized leaves are shared, not copied.
+    """
+    if weight_dtype in (None, "f32", "float32") or (
+        not isinstance(weight_dtype, str)
+        and jnp.dtype(weight_dtype) == jnp.float32
+    ):
+        return params
+    if jnp.dtype("int8" if weight_dtype == "i8" else weight_dtype) != jnp.int8:
+        raise ValueError(f"unsupported weight dtype: {weight_dtype!r}")
+
+    def walk(tree: Any, in_stack: bool) -> Any:
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for name, leaf in tree.items():
+            if isinstance(leaf, dict):
+                out[name] = walk(leaf, in_stack or name in _STACK_KEYS)
+                continue
+            axes = (
+                _reduction_axes(name, getattr(leaf, "ndim", 0))
+                if in_stack
+                else None
+            )
+            if axes is not None and leaf.ndim >= 3:
+                out[name] = quantize_leaf(leaf, axes)
+            else:
+                out[name] = leaf
+        return out
+
+    return walk(params, False)

@@ -255,6 +255,19 @@ class ClusterStats:
         return sum(self._each("alloc_failures"))
 
     @property
+    def kv_bytes_resident(self) -> int:
+        """Peak dtype-aware resident KV bytes across any one segment
+        (replicas within a segment are resident CONCURRENTLY, so they sum;
+        segments are sequential, so the cluster peak is the max)."""
+        return max(
+            (
+                sum(r.kv_bytes_resident for r in s.replicas)
+                for s in self.segments
+            ),
+            default=0,
+        )
+
+    @property
     def wall_seconds(self) -> float:
         # replicas within a segment run concurrently (max); segments and
         # reconfigurations are sequential (sum). A reconfigure's DRAIN
@@ -327,6 +340,8 @@ class ServeCluster:
         num_blocks: Optional[int] = None,
         prefix_cache: bool = False,
         speculate=None,
+        kv_dtype=None,
+        weight_dtype=None,
         tenant_defaults: Optional[Mapping[str, SamplingParams]] = None,
         admission: Optional[AdmissionPolicy] = None,
         failure: Optional[FailurePolicy] = None,
@@ -355,6 +370,12 @@ class ServeCluster:
             # bit-identical across modes because acceptance is exact-match
             # against the same fold_in(seed, position) draws
             speculate=speculate,
+            # quantized serving passes through unchanged: every fabric
+            # (split replicas AND the merged TP engine) stores the same
+            # int8 rows + scales, so a mid-stream SPLIT<->MERGE switch
+            # re-homes requests across identically-quantized caches
+            kv_dtype=kv_dtype,
+            weight_dtype=weight_dtype,
         )
         self.router = Router(len(self.devices))
         self.finished: list[Request] = []

@@ -169,12 +169,26 @@ class ReconfigController:
         cluster's own parameters (weights bytes ≈ HBM stream per step;
         ~2 FLOPs per weight per token) and whose scheduling constants
         mirror the cluster's engine kwargs."""
+        import jax
+        import numpy as np
+
         from repro.common.utils import pytree_bytes
 
-        pb = float(pytree_bytes(cluster.params))
+        # measure the RESIDENT tree (a live engine's, if one exists): with
+        # int8 weight serving the engines hold ~4x fewer bytes than the f32
+        # tree the cluster was constructed with, and the per-step HBM
+        # stream follows the resident bytes while the FLOPs follow the
+        # weight COUNT — the two must be derived independently, never as
+        # bytes/4 (that assumption only held when every param was f32)
+        engines = cluster._fabrics.get(cluster.mode) or []
+        tree = engines[0].params if engines else cluster.params
+        pb = float(pytree_bytes(tree))
+        n_weights = float(
+            sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(tree))
+        )
         kw = cluster._engine_kw
         cfg_kw = dict(
-            flops_per_token=2.0 * pb / 4.0,  # f32 params
+            flops_per_token=2.0 * n_weights,  # ~2 FLOPs per weight per token
             hbm_bytes_per_token=pb,
             prefill_budget=kw.get("prefill_budget", 64),
             max_chunk=kw.get("max_chunk", 8),

@@ -92,6 +92,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.models.quant import quantize_params
 from repro.serve.backend import PlacementBackend, resolve_backend
 from repro.serve.kv_pool import BlockPool, blocks_for
 from repro.serve.prefix_cache import RadixPrefixCache
@@ -297,6 +298,11 @@ class ServeStats:
     # which owns admission control and failure recovery
     queue_peak: int = 0
     alloc_failures: int = 0
+    # peak resident KV bytes observed over the run, dtype-aware (an int8
+    # cache reports ~4x fewer bytes than f32 for the same positions):
+    # dense = the constant cache allocation, paged = peak used_blocks x
+    # measured bytes_per_block — the number capacity planning should read
+    kv_bytes_resident: int = 0
     shed: int = 0  # deadline-based load shedding (shed_deadline)
     rejected: int = 0  # rate_limited + queue_full rejections
     rehomed: int = 0  # live requests moved off a dead replica
@@ -329,6 +335,26 @@ class ServeStats:
     @property
     def tpot_p99(self) -> float:
         return percentile(self.tpots, 99)
+
+
+def _norm_kv_dtype(kv_dtype):
+    """Engine-level kv_dtype normalization: ``None`` means the plain
+    (scale-less) cache; ``"f32"``/``"float32"`` opts into the quantized-row
+    machinery with an f32 store and identity scales (the bit-identity test
+    lane); anything else must resolve to int8."""
+    if kv_dtype is None:
+        return None
+    if isinstance(kv_dtype, str):
+        if kv_dtype in ("f32", "float32"):
+            return jnp.float32
+        kv_dtype = "int8" if kv_dtype == "i8" else kv_dtype
+    try:
+        dt = jnp.dtype(kv_dtype)
+    except TypeError as e:
+        raise ValueError(f"unsupported kv_dtype: {kv_dtype!r}") from e
+    if dt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.int8)):
+        raise ValueError(f"unsupported kv_dtype: {kv_dtype!r}")
+    return dt
 
 
 def _bucket_len(s: int, max_len: int) -> int:
@@ -375,13 +401,29 @@ class ServeEngine:
         num_blocks: Optional[int] = None,
         prefix_cache: bool = False,
         speculate=None,
+        kv_dtype=None,
+        weight_dtype=None,
     ):
         self.model = model
         # EVERY host→device crossing goes through the backend: the engine
         # itself is placement-agnostic (single device, pinned replica
         # device, or tensor-parallel mesh — see serve/backend.py)
         self.backend = resolve_backend(backend)
-        self.params = self.backend.put_params(model, params)
+        # quantized serving knobs (both opt-in; None = today's exact path):
+        # * kv_dtype: "int8" stores K/V rows quantized with per-(pos, head)
+        #   f32 scales resident in the cache pytree, dequantized inside the
+        #   attention kernels; "f32" keeps the full scale machinery but an
+        #   f32 store (identity scales) — the bit-identity test lane. None
+        #   is the plain cache: no scale leaves, byte-identical to before.
+        # * weight_dtype: "int8" rewrites eligible stacked matmul weights
+        #   to {"q8", "scale"} sub-dicts (repro.models.quant); consuming
+        #   einsums dequantize per layer via the qweight read-through.
+        self.kv_dtype = _norm_kv_dtype(kv_dtype)
+        self.weight_dtype = weight_dtype
+        self.quant_kv = self.kv_dtype is not None
+        self.params = self.backend.put_params(
+            model, quantize_params(params, weight_dtype)
+        )
         self.B = batch_slots
         self.max_len = max_len
         self.seed = seed
@@ -394,6 +436,11 @@ class ServeEngine:
             )
         self.prefill_budget = max(int(prefill_budget), 1)
         self.max_chunk = max(int(max_chunk), 1)
+        if self.quant_kv and not self.unified:
+            # model.prefill builds a scale-less B=1 cache — the legacy
+            # insert path cannot carry scales. Quantized KV rides the
+            # packed/chunked tier exclusively (see _admit_unified).
+            raise ValueError("kv_dtype requires the unified packed engine")
         # speculative decoding (serve/speculate.py): a drafter proposes up
         # to spec_k tokens per decoding slot and ONE packed verify dispatch
         # scores every (slot, offset) row; accepted prefixes commit through
@@ -451,7 +498,17 @@ class ServeEngine:
                 if prefix_cache else None
             )
             self.cache = self.backend.put_cache(
-                model, model.init_kv_pool(self.num_blocks, self.kv_block_size)
+                model,
+                model.init_kv_pool(
+                    self.num_blocks, self.kv_block_size, kv_dtype=self.kv_dtype
+                ),
+            )
+            # dtype-aware byte accounting: measure ONE block's HBM weight
+            # from the live pool leaves (K + V payloads + scale planes over
+            # all L layers) — never assume blocks are f32
+            self.pool.bytes_per_block = sum(
+                int(leaf.nbytes) // self.num_blocks
+                for leaf in jax.tree.leaves(self.cache)
             )
             # per-slot block lists (host) + the [B, max_blocks] device
             # table; unallocated entries hold the out-of-range sentinel
@@ -467,7 +524,16 @@ class ServeEngine:
                 raise ValueError("prefix_cache=True requires kv_block_size")
             self.pool = None
             self.prefix = None
-            self.cache = self.backend.put_cache(model, model.init_cache(batch_slots, max_len))
+            self.cache = self.backend.put_cache(
+                model,
+                model.init_cache(batch_slots, max_len, kv_dtype=self.kv_dtype),
+            )
+        # dense cache bytes are allocation-constant; paged residency is
+        # used_blocks x bytes_per_block (see kv_bytes_resident)
+        self._dense_kv_bytes = (
+            0 if self.paged
+            else sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))
+        )
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_len = np.zeros(batch_slots, np.int32)  # host mirror (counts)
         self.slot_fed = np.zeros(batch_slots, np.int32)  # prompt tokens fed
@@ -1140,9 +1206,10 @@ class ServeEngine:
                 if kk >= self.spec_k:
                     break
                 kk *= 2
-        if self.paged:
-            # paged admission routes every request through the packed tier
-            # (one code path writes the pool) — no fused-admission shapes
+        if self.paged or self.quant_kv:
+            # paged and quantized-KV admission route every request through
+            # the packed tier (one code path writes the cache/pool) — no
+            # fused-admission shapes exist to warm
             return
         # the EXACT prompt buckets _admit_unified can produce: every power
         # of two up to the fused-tier limit, plus the max_len-capped bucket
@@ -1356,7 +1423,12 @@ class ServeEngine:
                 if self.spec is not None:
                     self._spec_ewma[slot] = 1.0  # optimistic: probe deep first
                     self.drafter.reset_slot(slot)
-                if s > self.prefill_budget:  # chunked ragged tier
+                if self.quant_kv or s > self.prefill_budget:
+                    # chunked ragged tier. A quantized-KV engine routes
+                    # EVERY admission here: the fused tier's model.prefill
+                    # builds a scale-less B=1 cache that cannot insert into
+                    # a scale-bearing one, and the packed scatter is the one
+                    # code path that quantizes rows at write time.
                     self.slot_len[slot] = 0
                     self.slot_fed[slot] = 0
                     self._prefilling.append(slot)
@@ -1774,6 +1846,9 @@ class ServeEngine:
             self._admit_unified(stats, self._pending)
         else:
             self._admit(stats)
+        stats.kv_bytes_resident = max(
+            stats.kv_bytes_resident, self.kv_bytes_resident()
+        )
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             self._drain_pending()
@@ -1803,6 +1878,16 @@ class ServeEngine:
         while len(self._pending) > 1:
             self._harvest(self._pending.popleft())
         return True
+
+    def kv_bytes_resident(self) -> int:
+        """Actual HBM bytes of KV state resident right now, dtype-aware.
+        Dense engines report the constant cache allocation (every slot's
+        worst case is always resident); paged engines report used blocks
+        times the measured per-block weight — which is how an int8 pool
+        shows ~4x the requests in the same byte budget."""
+        if self.paged:
+            return self.pool.used * self.pool.bytes_per_block
+        return self._dense_kv_bytes
 
     @property
     def stream_stats(self) -> ServeStats:
@@ -1928,6 +2013,9 @@ class ServeEngine:
             with self._cancel_lock:
                 self._running = False
         stats.wall_seconds = time.perf_counter() - t0
+        stats.kv_bytes_resident = max(
+            stats.kv_bytes_resident, self.kv_bytes_resident()
+        )
         if self.paged:
             stats.alloc_failures = self.pool.alloc_failures - alloc_fail0
         for req in self._done_now:

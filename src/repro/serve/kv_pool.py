@@ -38,7 +38,14 @@ import numpy as np
 def blocks_for(prompt_len: int, max_new: int, max_len: int, block_size: int) -> int:
     """Worst-case block count for one request: positions ``0 ..
     min(prompt_len + max_new, max_len) - 1``, rounded up to whole blocks.
-    Admission reserves all of them up front — decode never allocates."""
+    Admission reserves all of them up front — decode never allocates.
+
+    Block counts are position counts, NOT bytes: what a block weighs in HBM
+    depends on the pool leaves' dtypes (an int8 K/V row plus its f32 scale
+    is ``head_dim + 4`` bytes per head vs f32's ``4 * head_dim``), so byte
+    math lives in dtype-aware accounting (``PoolStats.kv_bytes_resident``,
+    fed by the engine's measured per-block bytes) — never in a
+    ``slots × f32`` assumption here."""
     total = min(prompt_len + max_new, max_len)
     return -(-total // block_size)
 
@@ -51,10 +58,21 @@ class PoolStats:
     used_blocks: int
     allocs: int
     alloc_failures: int
+    # actual HBM bytes of ONE pool block across every cache leaf (all L
+    # layers, K + V payloads + any scale planes), measured from the live
+    # pool's dtypes by the engine — 0 when the owner didn't wire it up
+    bytes_per_block: int = 0
 
     @property
     def utilization(self) -> float:
         return self.used_blocks / max(self.num_blocks, 1)
+
+    @property
+    def kv_bytes_resident(self) -> int:
+        """Dtype-aware resident KV bytes: used blocks × measured block
+        weight. An int8 pool reports ~4x fewer bytes for the same block
+        count — the number capacity planning should use."""
+        return self.used_blocks * self.bytes_per_block
 
 
 class BlockPool:
@@ -78,6 +96,9 @@ class BlockPool:
         self._free: list[int] = list(range(self.num_blocks - 1, -1, -1))
         self.allocs = 0
         self.alloc_failures = 0
+        # set by the engine from the live device pool's leaf dtypes (this
+        # module never touches jax); 0 until wired
+        self.bytes_per_block = 0
 
     # ------------------------------------------------------------ allocation
 
@@ -142,6 +163,7 @@ class BlockPool:
             used_blocks=self.used,
             allocs=self.allocs,
             alloc_failures=self.alloc_failures,
+            bytes_per_block=self.bytes_per_block,
         )
 
     def __repr__(self) -> str:  # debugging aid

@@ -77,7 +77,9 @@ def test_watchdog_injected_thread_stall_escalates():
     for t in threads:
         t.start()
     t0 = time.monotonic()
-    while wd.status("replica1") != "dead" and time.monotonic() - t0 < 2.0:
+    # snapshot().get, not status(): the lanes register inside the worker
+    # threads, and on a loaded host this loop can poll before they've run
+    while wd.snapshot().get("replica1") != "dead" and time.monotonic() - t0 < 2.0:
         time.sleep(0.01)
     # snapshot BEFORE teardown: once beating stops, healthy lanes go stale too
     final = wd.snapshot()

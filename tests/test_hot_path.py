@@ -110,6 +110,36 @@ def test_decode_attention_dispatch_no_pad():
     assert "pad" not in prims, prims
 
 
+@pytest.mark.parametrize("n", [2048, 2500, 700])  # whole, ragged, tail-only
+def test_compression_quantize_dequantize_no_pad(n):
+    """The int8 compressor jits into serving ticks and the compressed-DP
+    train step: the body + tail split must never materialize a jnp.pad
+    copy of the gradient/cache tensor."""
+    from repro.dist import compression as comp
+
+    x = jnp.zeros((n,), jnp.float32)
+    prims = _top_level_primitives(lambda a: comp.quantize(a)[0], x)
+    assert "pad" not in prims, prims
+    q, s = comp.quantize(x)
+    prims = _top_level_primitives(lambda a: comp.dequantize(a, s), q)
+    assert "pad" not in prims, prims
+
+
+def test_quantize_rows_no_pad_and_identity_lane():
+    """Insert-time KV row quantization: pad-free in both lanes, and the
+    f32 store lane is the exact identity (values untouched, ones scales)."""
+    from repro.dist import compression as comp
+
+    x = jnp.zeros((7, 3, 16), jnp.float32)
+    for dt in (jnp.int8, jnp.float32):
+        prims = _top_level_primitives(
+            lambda a: comp.quantize_rows(a, dt)[0], x
+        )
+        assert "pad" not in prims, prims
+    v, s = comp.quantize_rows(x, jnp.float32)
+    assert v is x and s.shape == (7, 3)
+
+
 def _gqa_cfg():
     return ArchConfig(
         name="tiny", family="dense", n_layers=1, d_model=32, n_heads=4,
