@@ -36,6 +36,12 @@ Two measured scenarios:
   tensor-parallel engine), plus the measured ``reconfigure()`` cost — the
   paper's CSR-write number — cold (first placement) and warm (cached
   fabric). Report-only trajectory rows.
+* **heterogeneous cluster** (``--hetero-json``) — a mixed tenant stream
+  (chat tenants pinned to a dense+MLA model, bulk tenants to a
+  constant-memory SSM model) over a split cluster with one model per
+  replica, dispatched by the model-aware router. Reports per-model TTFT,
+  total throughput, and the SSM replica's constant state bytes against
+  the attention replica's KV cache. Report-only trajectory rows.
 """
 
 from __future__ import annotations
@@ -1057,6 +1063,117 @@ def run_overload(csv: bool = True) -> list[tuple[str, float, str]]:
     return rows
 
 
+# heterogeneous scenario: a mixed tenant stream (latency-sensitive chat
+# tenants pinned to the MLA model, bulk tenants to the constant-memory SSM
+# model) over a 2-replica split cluster with one model per replica. The
+# router dispatches by model name; the rows report per-model latency and
+# the SSM capacity story (constant state bytes vs the attention replica's
+# length-proportional cache).
+HETERO_REQUESTS = 24
+HETERO_MAX_NEW = 8
+HETERO_PROMPT_RANGE = (8, 41)
+HETERO_IAT_S = 0.004
+
+
+def _hetero_models():
+    cfg_a = get_arch("minicpm3-4b").reduced()  # dense + MLA latents
+    cfg_b = get_arch("falcon-mamba-7b").reduced()  # pure mamba1
+    m_a, m_b = LM(cfg_a), LM(cfg_b)
+    return (
+        (cfg_a, m_a, m_a.init(jax.random.key(0))),
+        (cfg_b, m_b, m_b.init(jax.random.key(1))),
+    )
+
+
+def _hetero_stream(cfg_a, cfg_b, seed: int = 13):
+    rng = np.random.default_rng(seed)
+    tenants = ("chat0", "chat1", "bulk0", "bulk1")
+    out = []
+    for i in range(HETERO_REQUESTS):
+        tenant = tenants[i % len(tenants)]
+        cfg = cfg_a if tenant.startswith("chat") else cfg_b
+        plen = int(rng.integers(*HETERO_PROMPT_RANGE))
+        out.append(
+            (
+                i * HETERO_IAT_S,
+                Request(
+                    rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(
+                        np.int32
+                    ),
+                    params=SamplingParams(max_new=HETERO_MAX_NEW),
+                    tenant=tenant,
+                ),
+            )
+        )
+    return out
+
+
+def run_hetero(csv: bool = True) -> list[tuple[str, float, str]]:
+    """Heterogeneous split cluster: MLA + SSM models behind the
+    model-aware router, mixed per-tenant stream. Report-only (_hetero_)
+    trajectory rows; the bit-identity and typed-rejection invariants are
+    pinned in tests."""
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = _hetero_models()
+    devs = jax.devices()
+    # one replica per model: two real devices when the lane has them, two
+    # engines time-sharing one device otherwise (same routing semantics)
+    pair = list(devs[:2]) if len(devs) >= 2 else [devs[0], devs[0]]
+    cl = ServeCluster(
+        models={"mla": (m_a, p_a), "ssm": (m_b, p_b)},
+        tenant_models={
+            "chat0": "mla", "chat1": "mla", "bulk0": "ssm", "bulk1": "ssm",
+        },
+        batch_slots=4, max_len=96, devices=pair,
+    )
+    cl.prewarm()
+    stream = _hetero_stream(cfg_a, cfg_b)
+    stats = cl.run(stream)
+    reqs = [r for _, r in stream]
+    mla_reqs = [r for r in reqs if r.model == "mla"]
+    ssm_reqs = [r for r in reqs if r.model == "ssm"]
+    plan = cl.replica_plan()
+    eng_mla = cl.engines[plan["mla"][0]]
+    eng_ssm = cl.engines[plan["ssm"][0]]
+    toks = sum(len(r.generated) for r in reqs)
+    rows = [
+        (
+            "serve_hetero_tok_per_s",
+            toks / max(stats.wall_seconds, 1e-9),
+            f"{HETERO_REQUESTS} reqs ({len(mla_reqs)} MLA + {len(ssm_reqs)} "
+            f"SSM) at {HETERO_IAT_S * 1e3:.0f}ms IAT over one replica per "
+            "model, routed by tenant",
+        ),
+        (
+            "serve_hetero_mla_ttft_p99_s",
+            _ttft_p99(mla_reqs),
+            "chat tenants on the MLA replica (compressed latent cache)",
+        ),
+        (
+            "serve_hetero_ssm_ttft_p99_s",
+            _ttft_p99(ssm_reqs),
+            "bulk tenants on the SSM replica (constant recurrent state)",
+        ),
+        (
+            "serve_hetero_ssm_kv_bytes",
+            float(eng_ssm.kv_bytes_resident()),
+            "SSM replica state bytes — constant in max_len AND in tokens "
+            "served (no block pool, nothing paged)",
+        ),
+        (
+            "serve_hetero_kv_bytes_ratio",
+            eng_mla.kv_bytes_resident() / max(eng_ssm.kv_bytes_resident(), 1),
+            "attention-replica KV bytes / SSM-replica state bytes at the "
+            "same slots+max_len — the capacity flex of pinning SSM bulk "
+            "traffic onto its own replica",
+        ),
+    ]
+    if csv:
+        for n, v, d in rows:
+            print(f"{n},{v:.6g},{d}")
+    return rows
+
+
 def _write_json(path: str, rows, benchmark: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     payload = {
@@ -1118,6 +1235,12 @@ def main() -> None:
         "capacity at byte parity) as JSON (also enables the scenario; "
         "report-only trajectory rows)",
     )
+    ap.add_argument(
+        "--hetero-json", default=None, metavar="PATH",
+        help="write heterogeneous-cluster rows (mixed MLA + SSM tenant "
+        "stream, one model per split replica) as JSON (also enables the "
+        "scenario; report-only trajectory rows)",
+    )
     args = ap.parse_args()
 
     if args.cluster or args.cluster_json is not None:
@@ -1138,7 +1261,7 @@ def main() -> None:
     if args.mixed_json is not None or (
         args.skip_steady and args.paged_json is None
         and args.spec_json is None and args.overload_json is None
-        and args.quant_json is None
+        and args.quant_json is None and args.hetero_json is None
     ):
         mixed = run_mixed(csv=True)
         if args.mixed_json:
@@ -1155,6 +1278,9 @@ def main() -> None:
     if args.quant_json is not None:
         quant = run_quant(csv=True)
         _write_json(args.quant_json, quant, "serving_quant")
+    if args.hetero_json is not None:
+        het = run_hetero(csv=True)
+        _write_json(args.hetero_json, het, "serving_hetero")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 CHUNK = 1024
 
 _INT8_MAX = 127.0
+_F8_MAX = 448.0  # float8_e4m3fn max finite value
 
 
 def quantize(x: jax.Array, *, chunk: int = CHUNK) -> tuple[jax.Array, jax.Array]:
@@ -110,9 +111,16 @@ def quantize_rows(x: jax.Array, store_dtype: Any) -> tuple[jax.Array, jax.Array]
     the quantized *machinery* at f32 storage is bit-identical to the plain
     path (``x * 1.0 == x`` in IEEE f32), which is what makes the quantized
     code paths testable against the dense engine."""
-    if jnp.dtype(store_dtype) == jnp.float32:
+    dt = jnp.dtype(store_dtype)
+    if dt == jnp.float32:
         return x, jnp.ones(x.shape[:-1], jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=-1)
+    if dt == jnp.dtype(jnp.float8_e4m3fn):
+        # fp8 store: scale rows to the e4m3 representable range, keep the
+        # same per-row f32 scales — the dequant path is dtype-generic
+        scale = jnp.where(amax > 0, amax, 1.0) / _F8_MAX
+        q = jnp.clip(x / scale[..., None], -_F8_MAX, _F8_MAX)
+        return q.astype(dt), scale
     scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
     q = jnp.clip(jnp.round(x / scale[..., None]), -_INT8_MAX, _INT8_MAX)
     return q.astype(jnp.int8), scale

@@ -389,6 +389,51 @@ def ragged_attention(
     return out.reshape(t, h, d)
 
 
+def mla_ragged_attention(
+    q_eff, q_rope, ckv, krope, tok_slot, tok_pos, *, scale: float,
+    mode: Mode = "auto", block_s: Optional[int] = None, valid=None,
+):
+    """Packed ragged attention over the MLA compressed latent cache.
+
+    q_eff: [T, H, r] absorbed queries; q_rope: [T, H, rope]; ckv:
+    [B, S_max, r] latent cache (keys AND values); krope: [B, S_max, rope];
+    ``scale`` the absorbed softmax scale ((nope+rope)**-0.5). Returns
+    [T, H, r] latent outputs.
+
+    The non-ref modes reuse the existing ragged kernel as a latent-space
+    MQA: keys = concat(ckv, krope) under ONE shared KV head, values = ckv
+    zero-padded to key width, and the query pre-scaled by
+    ``scale * (r+rope)**0.5`` to cancel the kernel's internal
+    ``d**-0.5`` — the padded value lanes read back as zeros and are
+    sliced off. No MLA-specific kernel needs to exist for the packed
+    path to ride the tuned dispatch."""
+    t, h, r = q_eff.shape
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.mla_ragged_attention(
+            q_eff, q_rope, ckv, krope, tok_slot, tok_pos,
+            scale=scale, valid=valid,
+        )
+    rope = q_rope.shape[-1]
+    d_tot = r + rope
+    gain = scale * d_tot**0.5  # kernel divides by sqrt(d_tot); we undo it
+    q_cat = jnp.concatenate([q_eff * gain, q_rope * gain], axis=-1)
+    qg = q_cat.reshape(t, 1, h, d_tot)  # ONE shared latent KV head
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+    v_pad = jnp.concatenate([ckv, jnp.zeros_like(krope)], axis=-1)[:, :, None, :]
+    s_max = k_cat.shape[1]
+    if block_s is None:
+        block_s = _blocks("ragged_attention", k_cat.shape, q_eff.dtype, m)[
+            "block_s"
+        ]
+    out = _ragged_k.ragged_attention(
+        qg, k_cat, v_pad, tok_slot, tok_pos,
+        window=0, block_s=min(block_s, s_max),
+        interpret=(m == "interpret"),
+    )  # [T, 1, H, d_tot]
+    return out.reshape(t, h, d_tot)[..., :r]
+
+
 def paged_ragged_attention(
     q, k, v, tok_seq, tok_pos, block_tables, *, window: int = 0,
     mode: Mode = "auto", valid=None, k_scale=None, v_scale=None,

@@ -109,9 +109,11 @@ def _ragged_kernel_q8(
     slot_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref,
     l_ref, acc_ref, *, block_s: int, s_steps: int, window: int
 ):
-    """Int8-cache variant: K/V tiles arrive int8 with per-(position, head)
-    f32 scale rows riding the same index map; both widen in-register after
-    the VMEM load — no dequantized f32 cache copy ever exists in HBM."""
+    """Quantized-cache variant: K/V tiles arrive in the narrow store dtype
+    (int8 or float8_e4m3fn — the widen below is dtype-generic) with
+    per-(position, head) f32 scale rows riding the same index map; both
+    widen in-register after the VMEM load — no dequantized f32 cache copy
+    ever exists in HBM."""
     si = pl.program_id(2)
 
     @pl.when(si == 0)

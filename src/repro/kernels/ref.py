@@ -222,6 +222,51 @@ def ragged_attention(
     return out.reshape(kvh, t, g, d).transpose(1, 0, 2, 3).astype(q.dtype)
 
 
+def mla_ragged_attention(
+    q_eff: jax.Array,
+    q_rope: jax.Array,
+    ckv: jax.Array,
+    krope: jax.Array,
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    *,
+    scale: float,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Packed ragged attention in MLA latent space (absorbed decode form).
+
+    q_eff: [T, H, r] queries pre-absorbed through W_uk (r = kv_lora_rank);
+    q_rope: [T, H, rope] decoupled-RoPE queries; ckv: [B, S_max, r]
+    compressed latent cache (doubles as K and V); krope: [B, S_max, rope]
+    shared rope keys; tok_slot/tok_pos: [T] int32 pack descriptors;
+    ``scale`` is the softmax scale — (nope + rope)**-0.5, NOT derived from
+    the latent width (the latent dot replaces an H-head nope-dim dot, so
+    the head-dim scale survives absorption). Returns [T, H, r] latent
+    outputs; the caller decompresses through W_uv.
+
+    Same full-cross formulation as :func:`ragged_attention`, specialized to
+    MLA's MQA structure: ONE shared latent "head" serves every query head,
+    scores are the sum of the latent and rope dots, and the value readout
+    re-reads the latent cache itself.
+    """
+    t, h, r = q_eff.shape
+    b, s_max = ckv.shape[0], ckv.shape[1]
+    if valid is None:
+        valid = ragged_valid_mask(tok_slot, tok_pos, b, s_max)
+    qe = q_eff.transpose(1, 0, 2).astype(jnp.float32)  # [H, T, r]
+    qr = q_rope.transpose(1, 0, 2).astype(jnp.float32)  # [H, T, rope]
+    kl = ckv.reshape(b * s_max, r).astype(jnp.float32)  # [B·S, r]
+    kr = krope.reshape(b * s_max, krope.shape[-1]).astype(jnp.float32)
+    scores = (
+        jnp.einsum("htr,sr->hts", qe, kl) + jnp.einsum("htk,sk->hts", qr, kr)
+    ) * scale  # [H, T, B·S]
+    valid_ts = valid.reshape(t, b * s_max)
+    scores = jnp.where(valid_ts[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,sr->htr", probs, kl)  # latent-space readout
+    return out.transpose(1, 0, 2).astype(q_eff.dtype)
+
+
 def paged_gather(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     """Materialize dense cache rows from a block-paged pool.
 

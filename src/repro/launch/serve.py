@@ -7,6 +7,15 @@ Usage:
 
   # multi-device (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=2):
   ... -m repro.launch.serve --arch codeqwen1.5-7b --reduced --cluster-mode split
+
+  # heterogeneous: different models pinned per split replica, requests
+  # round-robined across them (the router dispatches by model name):
+  ... -m repro.launch.serve --reduced --model chat=minicpm3-4b \
+      --model bulk=falcon-mamba-7b --cluster-mode split
+
+  # closed-loop: serve under a ReconfigController that switches split<->
+  # merge mid-stream when the perfmodel-predicted win clears switch cost:
+  ... -m repro.launch.serve --arch codeqwen1.5-7b --reduced --cluster-mode auto
 """
 
 from __future__ import annotations
@@ -31,19 +40,42 @@ from repro.serve import (
 
 
 def _resolve_auto(n_devices: int, n_requests: int, slots: int) -> str:
-    """``--cluster-mode auto``: match the fabric to the workload (the
-    paper's whole point). Many independent requests over several devices
-    want split (concurrent latency-sensitive streams, one replica each);
-    otherwise merge the fabric into one wide engine so a few large
-    requests see every device."""
+    """``--cluster-mode auto`` on one device degenerates to a single
+    engine; with several devices the STARTING mode matches the workload
+    (many independent requests want split replicas, few large ones want
+    the merged wide engine) and a ReconfigController owns every switch
+    after that — auto serves through ``run_controlled``, the paper's
+    closed control loop, not a one-shot static guess."""
     if n_devices <= 1:
         return "single"
     return "split" if n_requests >= 2 * slots else "merge"
 
 
+def _parse_models(pairs: list[str], ap: argparse.ArgumentParser) -> dict[str, str]:
+    """``--model name=arch`` pairs -> ordered {name: arch}; the first
+    entry is the cluster's primary model (unpinned requests land there)."""
+    out: dict[str, str] = {}
+    for pair in pairs:
+        name, sep, arch = pair.partition("=")
+        if not sep or not name or not arch:
+            ap.error(f"--model wants NAME=ARCH, got {pair!r}")
+        if name in out:
+            ap.error(f"--model names {name!r} twice")
+        out[name] = arch
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument(
+        "--model", action="append", default=None, metavar="NAME=ARCH",
+        help="heterogeneous serving: repeat to pin several named models "
+        "onto one split cluster (one model per replica, cost-weighted "
+        "placement); requests round-robin across the names and the router "
+        "dispatches each to its model's replicas. Mutually exclusive with "
+        "--arch; needs a split-capable cluster mode",
+    )
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -118,11 +150,13 @@ def main() -> None:
         "dispatch); default 8, adaptively shrunk per slot by acceptance",
     )
     ap.add_argument(
-        "--kv-dtype", choices=("f32", "int8"), default="f32",
+        "--kv-dtype", choices=("f32", "int8", "fp8"), default="f32",
         help="KV cache storage dtype: f32 (default, byte-identical to "
-        "before the flag existed) or int8 — rows quantized at insert time "
-        "with per-(position, head) f32 scales, dequantized inside the "
-        "attention kernels. ~3-4x fewer resident KV bytes per position",
+        "before the flag existed), int8, or fp8 (float8_e4m3fn) — rows "
+        "quantized at insert time with per-(position, head) f32 scales, "
+        "dequantized inside the attention kernels. Both narrow lanes are "
+        "~3-4x fewer resident KV bytes per position; fp8 trades int8's "
+        "peak accuracy for dynamic range on small elements",
     )
     ap.add_argument(
         "--weight-dtype", choices=("f32", "int8"), default="f32",
@@ -144,21 +178,45 @@ def main() -> None:
     args = ap.parse_args()
     if args.prefix_cache and not args.kv_block_size:
         ap.error("--prefix-cache requires --kv-block-size")
+    if (args.arch is None) == (args.model is None):
+        ap.error("pass exactly one of --arch or --model NAME=ARCH")
     admission_on = args.max_queue is not None or args.deadline_s is not None
     if admission_on and args.cluster_mode == "single":
         ap.error("--max-queue/--deadline-s need a cluster mode (admission "
                  "control lives at the cluster layer)")
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = LM(cfg)
-    params = model.init(jax.random.key(args.seed))
+    def build(arch: str, seed: int):
+        cfg = get_arch(arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        model = LM(cfg)
+        return cfg, model, model.init(jax.random.key(seed))
 
+    named = None  # {name: (cfg, LM, params)} when --model pairs were given
+    if args.model is not None:
+        named = {
+            name: build(arch, args.seed + i)
+            for i, (name, arch) in enumerate(
+                _parse_models(args.model, ap).items()
+            )
+        }
+        cfg, model, params = next(iter(named.values()))  # primary model
+    else:
+        cfg, model, params = build(args.arch, args.seed)
+
+    hetero = named is not None and len(named) > 1
+    controlled = False  # auto: serve under a ReconfigController
     mode = args.cluster_mode
     if mode == "auto":
         mode = _resolve_auto(len(jax.devices()), args.requests, args.slots)
-        print(f"cluster-mode auto -> {mode}")
+        controlled = mode != "single" and not hetero  # hetero stays split
+        if hetero:
+            mode = "split"
+        print(f"cluster-mode auto -> {mode}"
+              + (" (closed-loop run_controlled)" if controlled else ""))
+    if hetero and mode != "split":
+        ap.error("--model with several names is split-only (one model per "
+                 "replica; merge cannot fuse different parameterizations)")
     if admission_on and mode == "single":
         ap.error("--max-queue/--deadline-s need a cluster mode (admission "
                  "control lives at the cluster layer)")
@@ -180,7 +238,18 @@ def main() -> None:
     else:
         if admission_on:
             common["admission"] = AdmissionPolicy(max_queue=args.max_queue)
-        target = ServeCluster(model, params, mode=Mode.parse(mode), **common)
+        if named is not None:
+            target = ServeCluster(
+                models={n: (m, p) for n, (_, m, p) in named.items()},
+                mode=Mode.parse(mode), **common,
+            )
+            plan = target.replica_plan()
+            if plan is not None:
+                print("placement: " + "  ".join(
+                    f"{n}->replicas{ix}" for n, ix in plan.items()
+                ))
+        else:
+            target = ServeCluster(model, params, mode=Mode.parse(mode), **common)
         desc = f"{target!r}"
 
     # production serving compiles once, then serves: every dispatch variant
@@ -191,13 +260,19 @@ def main() -> None:
         target.prewarm(sampling=sampling)
 
     rng = np.random.default_rng(args.seed)
+    names = list(named) if named is not None else [None]
     handles = []
     for i in range(args.requests):
+        # heterogeneous streams round-robin across the pinned models; each
+        # request samples its prompt from ITS model's vocabulary
+        name = names[i % len(names)]
+        req_cfg = cfg if name is None else named[name][0]
         plen = int(rng.integers(args.prompt_len // 2 + 1, args.prompt_len + 1))
         req = (
             Request(
                 rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+                prompt=rng.integers(0, req_cfg.vocab_size, size=plen).astype(np.int32),
+                model=name,
                 params=SamplingParams(
                     max_new=args.max_new,
                     temperature=args.temperature,
@@ -220,14 +295,33 @@ def main() -> None:
         for tok in handles[0]:
             print(tok, end=" ", flush=True)
         print(f"[{handles[0].finish_reason}]")
-    stats = target.run()
+    if controlled:
+        # auto: the closed loop — interval slicing, window observation,
+        # controller-committed split<->merge switches, measured costs
+        stats = target.run_controlled()
+        for rep in stats.reconfigures:
+            print(f"controller switch: {rep}")
+    else:
+        stats = target.run()
     # in --stream mode part (or all) of the work was served by the handle-
     # driven pump BEFORE run(), so report totals from the request objects
     # and keep the timed-drain stats for throughput/latency
     done = list(target.finished)
     n_cancelled = sum(r.finish_reason == "cancelled" for r in done)
+    arch_label = (
+        cfg.name if named is None
+        else "+".join(f"{n}:{c.name}" for n, (c, _, _) in named.items())
+    )
+    if named is not None:
+        per_model = {n: 0 for n in named}
+        for r in done:
+            if r.model in per_model:
+                per_model[r.model] += len(r.generated)
+        print("per-model tokens: " + "  ".join(
+            f"{n}={t}" for n, t in per_model.items()
+        ))
     print(
-        f"arch={cfg.name} [{desc}] requests={len(done) - n_cancelled} "
+        f"arch={arch_label} [{desc}] requests={len(done) - n_cancelled} "
         f"(+{n_cancelled} cancelled) "
         f"generated_tokens={sum(len(r.generated) for r in done)}\n"
         f"drain: {stats.total_tokens} decode tokens, {stats.ticks} ticks, "

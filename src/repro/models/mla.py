@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models.attention import NEG_INF, chunked_attention, dense_attention
 from repro.models.layers import Params, apply_rope, dense_init, rms_norm
 
@@ -107,6 +108,65 @@ def mla_apply(
 # ---------------------------------------------------------------------------
 # Absorbed decode with compressed cache
 # ---------------------------------------------------------------------------
+
+
+def mla_packed(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache_ckv: jax.Array,
+    cache_krope: jax.Array,
+    tok_slot: jax.Array,
+    tok_pos: jax.Array,
+    valid: jax.Array | None = None,
+    pack_slots: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Packed variable-length MLA step over the compressed latent cache —
+    the latent-space twin of ``attention_packed`` (unified serving
+    dispatch: decode singletons and prefill chunks as ONE flat batch).
+
+    x: [T, d] packed hidden states; cache_ckv: [B, S_max, kv_lora];
+    cache_krope: [B, S_max, rope_dim]; tok_slot/tok_pos: [T] int32. The
+    pack's fresh latents are ONE fused O(T) scatter (bucket-padding
+    positions drop), then every token attends in absorbed form against
+    the compressed cache. With ``pack_slots`` ([P] int32) attention reads
+    only those P gathered latent rows. Returns (out [T, d], new_ckv,
+    new_krope)."""
+    m = cfg.mla
+    pos = jnp.asarray(tok_pos, jnp.int32)
+
+    q = _project_q(params, cfg, x[None])[0]  # [T,H,nope+rope]
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    ckv = jnp.einsum("td,dr->tr", x, params["wkv_a"])  # [T,kv_lora+rope]
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, None, :], pos, cfg.rope_theta)[:, 0, :]
+
+    glob_slot = tok_slot if pack_slots is None else pack_slots[tok_slot]
+    cache_ckv = cache_ckv.at[glob_slot, pos].set(
+        c_kv.astype(cache_ckv.dtype), mode="drop"
+    )
+    cache_krope = cache_krope.at[glob_slot, pos].set(
+        k_rope.astype(cache_krope.dtype), mode="drop"
+    )
+    if pack_slots is None:
+        att_ckv, att_krope = cache_ckv, cache_krope
+    else:  # P-row sub-cache view: attention work scales with the pack
+        att_ckv, att_krope = cache_ckv[pack_slots], cache_krope[pack_slots]
+
+    # absorb W_uk into q (q_eff [T,H,kv_lora]) and attend in latent space
+    w_uk = params["wkv_b"][..., : m.nope_head_dim]  # [r,H,nope]
+    q_eff = jnp.einsum("thk,rhk->thr", q_nope, w_uk)
+    lat = ops.mla_ragged_attention(
+        q_eff, q_rope, att_ckv, att_krope, tok_slot, pos,
+        scale=(m.nope_head_dim + m.rope_head_dim) ** -0.5, valid=valid,
+    )  # [T,H,r]
+    w_uv = params["wkv_b"][..., m.nope_head_dim :]  # [r,H,v]
+    o = jnp.einsum("thr,rhv->thv", lat.astype(x.dtype), w_uv)
+    out = jnp.einsum("thv,hvd->td", o, params["wo"])
+    return out, cache_ckv, cache_krope
 
 
 def mla_decode(

@@ -302,9 +302,9 @@ class LM:
         scan/donation/COW exactly like the payloads they describe."""
         cfg, dt = self.cfg, self.cache_dtype
         L = cfg.n_layers
-        if kv_dtype is not None and not self.supports_packed:
+        if kv_dtype is not None and not self.has_positional_kv:
             raise ValueError(
-                f"family {cfg.family!r}/mla has no positional KV to quantize"
+                f"family {self.family_tag!r} has no positional KV to quantize"
             )
         if cfg.family in ("dense", "moe"):
             if cfg.mla is not None:
@@ -359,8 +359,8 @@ class LM:
         :mod:`repro.serve.kv_pool`). With identity block tables (block i of
         sequence b = b * max_blocks + i) this is a pure reshape of
         ``init_cache(B, max_blocks * block_size)`` — paging adds an
-        indirection, not a new layout. Positional-KV families only (the
-        same constraint as ``supports_packed``).
+        indirection, not a new layout. Positional-KV families only
+        (``has_positional_kv``).
 
         ``kv_dtype`` adds quantized-row storage exactly as in
         :meth:`init_cache`: scale leaves ``[L, num_blocks, block_size,
@@ -368,9 +368,9 @@ class LM:
         prefix sharing, re-homing) carries the scales with their blocks
         for free."""
         cfg, dt = self.cfg, self.cache_dtype
-        if not self.supports_packed:
+        if not self.has_positional_kv:
             raise ValueError(
-                f"family {cfg.family!r}/mla has no positional KV to page"
+                f"family {self.family_tag!r} has no positional KV to page"
             )
         kv, hd = cfg.n_kv_heads, cfg.head_dim
         if kv_dtype is not None:
@@ -590,15 +590,84 @@ class LM:
         out, new_cache = fn(blk["mamba"], cfg, h, cache_l)
         return x + out, new_cache
 
+    def _ssm_packed(
+        self, params: Params, cache: Params, x: jax.Array,
+        tok_pos: jax.Array, pack_slots: jax.Array, max_len: int,
+    ) -> tuple[jax.Array, Params]:
+        """Single-slot packed chunk for the recurrent-state family.
+
+        x: [T, d] embedded tokens — ONE contiguous chunk of slot
+        ``pack_slots[0]``'s stream (ascending positions, bucket padding
+        after the real rows with the ``tok_pos >= max_len`` sentinel).
+        Gathers that slot's (h, conv) state, runs the state-passing chunk
+        scan per layer, and scatters the updated state back — O(chunk)
+        work and O(1) state bytes regardless of how long the stream gets.
+        A chunk that starts at position 0 recycles the state slot (zeros
+        in, like a fresh sequence) — admission needs no separate cache
+        wipe, mirroring how attention slots tolerate stale rows."""
+        cfg = self.cfg
+        pos = jnp.asarray(tok_pos, jnp.int32)
+        slot = jnp.asarray(pack_slots, jnp.int32)[0]
+        n_real = jnp.sum(pos < max_len).astype(jnp.int32)
+        fresh = pos[0] == 0  # first chunk of a prompt
+        fn = (
+            ssm_mod.mamba1_packed
+            if cfg.ssm.variant == "mamba1"
+            else ssm_mod.mamba2_packed
+        )
+
+        def body(xx, xs):
+            blk, cl = xs  # cl leaves: [B, ...] (no L axis)
+            sl = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0),
+                cl,
+            )
+            sl = jax.tree.map(
+                lambda c: jnp.where(fresh, jnp.zeros_like(c), c), sl
+            )
+            h = rms_norm(xx, blk["norm"], cfg.norm_eps)
+            out, new_sl = fn(blk["mamba"], cfg, h, sl, n_real)
+            ncl = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=0
+                ),
+                cl, new_sl,
+            )
+            return xx + out, ncl
+
+        xb, new_cache = jax.lax.scan(body, x[None], (params["blocks"], cache))
+        return xb[0], new_cache
+
     # ------------------------------------------------------------ packed step
 
     @property
     def supports_packed(self) -> bool:
-        """Whether the unified ragged prefill+decode dispatch applies: the
-        packed path needs a positional KV cache it can scatter into at
-        arbitrary (slot, position). SSM/hybrid recurrent state and the MLA
-        latent cache keep the exact-length prefill + per-step decode path."""
+        """Whether the unified ragged prefill+decode dispatch applies.
+
+        Dense/MoE attention scatters positional K/V rows, MLA scatters
+        compressed latent rows (``mla_packed``), and SSM rides a
+        state-passing single-slot chunk (``mamba{1,2}_packed`` — the
+        engine packs recurrent-state admissions one slot per pack).
+        Hybrid interleaves recurrent state with a shared attention cache
+        and keeps the exact-length prefill + per-step decode path."""
+        return self.cfg.family in ("dense", "moe", "ssm")
+
+    @property
+    def has_positional_kv(self) -> bool:
+        """Whether the decode cache stores one K/V row per position — the
+        precondition for paging (block pool indirection) and quantized-row
+        storage. The MLA latent cache is positional but compressed-latent
+        shaped (no per-head K/V rows for the quant/paged plumbing), and
+        SSM state is constant-size — neither pages nor quantizes."""
         return self.cfg.family in ("dense", "moe") and self.cfg.mla is None
+
+    @property
+    def family_tag(self) -> str:
+        """Human-readable family label for error messages ('moe+mla' when
+        the attention is latent, else the bare family)."""
+        if self.cfg.mla is not None:
+            return f"{self.cfg.family}+mla"
+        return self.cfg.family
 
     def _block_packed(
         self, blk: Params, x: jax.Array, cache_l: Params,
@@ -609,7 +678,13 @@ class LM:
         """One layer over a packed [T] token batch. cache_l has no L axis."""
         cfg = self.cfg
         h = rms_norm(x, blk["norm1"], cfg.norm_eps)
-        if "k_scale" in cache_l:  # quantized-row cache: scales ride along
+        if cfg.mla is not None:  # latent-space packed step (never paged)
+            a, nckv, nkrope = mla_mod.mla_packed(
+                blk["attn"], cfg, h, cache_l["ckv"], cache_l["krope"],
+                tok_slot, tok_pos, valid, pack_slots,
+            )
+            new_cache = {"ckv": nckv, "krope": nkrope}
+        elif "k_scale" in cache_l:  # quantized-row cache: scales ride along
             a, ck, cv, cks, cvs = attn_mod.attention_packed(
                 blk["attn"], cfg, h, cache_l["k"], cache_l["v"],
                 tok_slot, tok_pos, valid, pack_slots,
@@ -645,6 +720,7 @@ class LM:
         out_rows: Optional[jax.Array] = None,
         pack_slots: Optional[jax.Array] = None,
         block_tables: Optional[jax.Array] = None,
+        max_len: Optional[int] = None,
     ) -> tuple[jax.Array, Params]:
         """Unified ragged prefill+decode step: one flat [T] token batch where
         each token carries its own (cache slot, absolute position) — decode
@@ -666,16 +742,35 @@ class LM:
         resolves to (block, offset) through the slot's table row — the
         SAME step otherwise (same descriptors, same mask, same sampling
         rows), which is what keeps paged and dense serving bit-identical.
+
+        SSM packs carry one slot per pack (``pack_slots[0]``; the engine
+        enforces pack width 1 for recurrent families): the whole [T] batch
+        is one contiguous chunk of that slot's stream, and ``max_len`` is
+        required — tok_pos >= max_len identifies the bucket padding whose
+        rows must be state-identities rather than merely masked.
         """
         cfg = self.cfg
         assert self.supports_packed, cfg.family
         x = embed_tokens(params["embed"], tokens)  # [T, d]
+        if cfg.family == "ssm":
+            assert block_tables is None, "SSM state is never paged"
+            assert max_len is not None, "SSM packed step needs max_len"
+            assert pack_slots is not None, "SSM packs carry pack_slots"
+            x, new_cache = self._ssm_packed(
+                params, cache, x, tok_pos, pack_slots, max_len
+            )
+            if out_rows is not None:
+                x = x[out_rows]
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            return unembed(params["embed"], x), new_cache
         # the attention mask depends only on the pack descriptors — compute
         # it once and share it across every layer
         from repro.kernels import ref as _ref
 
         if block_tables is None:
-            k_leaf = cache["k"]  # [L, B, S_max, KV, hd]
+            # [L, B, S_max, KV, hd] positional rows or [L, B, S_max, r]
+            # compressed latents — batch/seq axes sit in the same places
+            k_leaf = cache["ckv"] if cfg.mla is not None else cache["k"]
             n_rows = k_leaf.shape[1] if pack_slots is None else len(pack_slots)
             s_max = k_leaf.shape[2]
         else:  # pool leaf [L, NB, bs, KV, hd]: S_max = table width * block
@@ -728,8 +823,8 @@ class LM:
         :meth:`packed_step`) — dense/moe positional-KV families only.
         """
         cfg = self.cfg
-        if block_tables is not None and not self.supports_packed:
-            raise ValueError(f"family {cfg.family!r}/mla has no paged path")
+        if block_tables is not None and not self.has_positional_kv:
+            raise ValueError(f"family {self.family_tag!r} has no paged path")
         if "embeds" in batch:
             x = batch["embeds"].astype(self.dtype)
         else:

@@ -54,6 +54,26 @@ def conv_step(state: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
     return y, full[:, 1:, :]
 
 
+def _conv_carried(
+    x_pre: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array,
+    n_real: jax.Array,
+):
+    """Causal conv over a chunk with a carried cross-chunk tail.
+
+    x_pre: [B, S, C] this chunk's pre-conv rows — the first ``n_real`` are
+    real, the rest bucket padding AFTER every real row; conv_state:
+    [B, K-1, C] the slot's last K-1 real pre-conv rows (zeros for a fresh
+    sequence, which reproduces the left-zero-padded conv exactly).
+    Returns (x_c [B, S, C] conv outputs for the S new rows, new_state
+    [B, K-1, C] = the last K-1 REAL pre-conv rows, sliced at the dynamic
+    chunk length so padding never enters a future window)."""
+    k = w.shape[0]
+    x_ext = jnp.concatenate([conv_state.astype(x_pre.dtype), x_pre], axis=1)
+    x_c = causal_conv1d(x_ext, w, b)[:, k - 1 :, :]
+    new_state = jax.lax.dynamic_slice_in_dim(x_ext, n_real, k - 1, axis=1)
+    return x_c, new_state
+
+
 # ---------------------------------------------------------------------------
 # Mamba1
 # ---------------------------------------------------------------------------
@@ -222,6 +242,53 @@ def mamba1_decode(
     return out[:, None, :], {"h": h, "conv": conv_state}
 
 
+def mamba1_packed(
+    params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+    n_real: jax.Array,
+) -> tuple[jax.Array, Params]:
+    """State-passing packed chunk: ONE slot's contiguous prompt chunk (plus
+    bucket padding AFTER the real rows) through the chunked selective scan,
+    carrying the decode cache {'h', 'conv'} across chunks — constant-memory
+    chunked prefill for the serving engine's packed tier.
+
+    x: [B, S, d] with the first ``n_real`` rows real. Padding rows are
+    scan identities (dt forced to 0 → exp(0·A) = 1 and dt·B·x = 0, both
+    exact in fp) so the returned state is precisely the state after the
+    real rows; padding y rows are garbage the caller never samples."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    dt_rank = max(d // 16, 1)
+    N = s_cfg.state
+
+    real = jnp.arange(s) < n_real  # [S]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = _conv_carried(
+        x_in, cache["conv"], params["conv_w"], params["conv_b"], n_real
+    )
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bsd,de->bse", x_c, params["x_proj"])
+    dt_r, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    dt = jnp.where(real[None, :, None], dt, 0.0)  # pads: state identity
+    A = -jnp.exp(params["A_log"])
+    chunk = min(s_cfg.chunk, s)
+    if s % chunk:
+        chunk = s
+    y, h_final = _selective_scan_chunked(
+        x_c, dt, A, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+        cache["h"], chunk,
+    )
+    y = y + params["D"] * x_c.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    return out, {"h": h_final, "conv": conv_state.astype(cache["conv"].dtype)}
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 (SSD)
 # ---------------------------------------------------------------------------
@@ -257,10 +324,14 @@ def _ssd_chunked(
     Bm: jax.Array,  # [B, S, G, N]
     Cm: jax.Array,  # [B, S, G, N]
     chunk: int,
+    state0: jax.Array | None = None,  # [B, H, P, N] carried-in state
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked SSD: y[s] = Σ_{t<=s} C_s·B_t · exp(Σ_{j∈(t,s]} dt_j A) · dt_t · x_t.
 
     Returns (y [B,S,H,P], final_state [B,H,P,N]). G (groups) broadcast to H.
+    ``state0`` carries a previous chunk's state in (packed serving feeds a
+    long prompt as budget-bounded chunks); None keeps the fresh-sequence
+    zeros this function always used.
     """
     b, s, h, p = xh.shape
     g, n = Bm.shape[2], Bm.shape[3]
@@ -306,9 +377,10 @@ def _ssd_chunked(
         )
         return state_new, (y_intra + y_inter)
 
-    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
     state, ys = jax.lax.scan(
-        chunk_body, state0, (x_c, dt_c, B_c, C_c)
+        chunk_body, state0.astype(jnp.float32), (x_c, dt_c, B_c, C_c)
     )
     y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
     return y, state
@@ -401,3 +473,43 @@ def mamba2_decode(
     y = rms_norm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
     out = jnp.einsum("be,ed->bd", y, params["out_proj"])
     return out[:, None, :], {"h": h, "conv": conv_state}
+
+
+def mamba2_packed(
+    params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+    n_real: jax.Array,
+) -> tuple[jax.Array, Params]:
+    """State-passing packed chunk for Mamba2/SSD (see :func:`mamba1_packed`
+    — same contract: one slot's contiguous chunk, first ``n_real`` rows
+    real, dt-masked padding rows are exact state identities)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    G, N = s_cfg.n_groups, s_cfg.state
+
+    real = jnp.arange(s) < n_real
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC_raw, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    xBC, conv_state = _conv_carried(
+        xBC_raw, cache["conv"], params["conv_w"], params["conv_b"], n_real
+    )
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+
+    xh = xs.reshape(b, s, nh, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    dt = jnp.where(real[None, :, None], dt, 0.0)  # pads: state identity
+    A = -jnp.exp(params["A_log"])  # [H]
+    Bm = Bm.reshape(b, s, G, N)
+    Cm = Cm.reshape(b, s, G, N)
+    chunk = min(s_cfg.chunk, s)
+    if s % chunk:
+        chunk = s
+    y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, chunk, state0=cache["h"])
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"h": h_final, "conv": conv_state.astype(cache["conv"].dtype)}

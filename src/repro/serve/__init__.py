@@ -20,6 +20,7 @@ from repro.serve.backend import (
 )
 from repro.serve.cluster import (
     ClusterStats,
+    NoModelReplica,
     ReconfigureReport,
     Router,
     ServeCluster,
@@ -33,6 +34,8 @@ from repro.serve.controller import (
     SwitchDecision,
     TenantPolicy,
     WindowSample,
+    model_token_cost,
+    plan_hetero_placement,
 )
 from repro.serve.engine import (
     AdmissionRejected,
@@ -71,6 +74,10 @@ __all__ = [
     "ClusterStats",
     "ReconfigureReport",
     "Router",
+    # heterogeneous serving (multi-model split clusters)
+    "NoModelReplica",
+    "model_token_cost",
+    "plan_hetero_placement",
     # supervision: reconfiguration control, admission, failure recovery
     "ReconfigController",
     "ControllerConfig",

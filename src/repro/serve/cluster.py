@@ -67,6 +67,7 @@ from repro.serve.controller import (
     ReconfigController,
     WindowSample,
     build_continuation,
+    plan_hetero_placement,
 )
 from repro.serve.engine import (
     AdmissionRejected,
@@ -84,6 +85,25 @@ from repro.serve.sampling import SamplingParams
 # =============================================================================
 
 
+class NoModelReplica(AdmissionRejected):
+    """No live replica serves the model a request is pinned to.
+
+    A heterogeneous cluster pins one model per split replica; a request
+    whose ``model`` names nothing in the placement — or whose model's
+    replicas are all dead — cannot be served anywhere, and silently
+    routing it to a *different* model would return the wrong
+    distribution. Typed as an :class:`AdmissionRejected` (reason
+    ``"infeasible"``) so the submit/arrival rejection plumbing treats it
+    like any other capacity rejection."""
+
+    def __init__(self, model: Optional[str], detail: str = "") -> None:
+        self.model = model
+        super().__init__(
+            "infeasible",
+            detail or f"no live replica serves model {model!r}",
+        )
+
+
 class Router:
     """Join-shortest-queue request routing with per-tenant affinity.
 
@@ -93,31 +113,54 @@ class Router:
     ``tenant`` sticks to the replica its tenant first landed on (KV/prefix
     locality and per-tenant isolation beat perfect balance); tenant-less
     requests always take the shortest queue, ties to the lowest index.
+
+    With ``replica_model`` set (heterogeneous cluster), each replica is
+    pinned to one named model and a request carrying ``model=`` only
+    routes among that model's replicas — JSQ and tenant affinity apply
+    *within* the compatible set, and a tenant's home is honoured only
+    when it serves the requested model (a tenant mixing models keeps its
+    home for the home's model and JSQ-routes the rest). An empty
+    compatible set raises :class:`NoModelReplica`.
     """
 
-    def __init__(self, n_replicas: int) -> None:
+    def __init__(
+        self,
+        n_replicas: int,
+        replica_model: Optional[Sequence[Optional[str]]] = None,
+    ) -> None:
         self.n = n_replicas
         self.load = [0.0] * n_replicas
         self.assigned = [0] * n_replicas
         self.tenant_home: dict[str, int] = {}
         self.retired: set[int] = set()  # dead replicas: never routed to
+        self.replica_model = (
+            list(replica_model) if replica_model is not None else None
+        )
 
     @staticmethod
     def cost(req: Request) -> float:
         return float(len(req.prompt) + req.max_new)
 
-    def peek(self, req: Request) -> int:
-        """The replica ``route()`` would pick, without committing load
-        (admission control inspects the prospective target's queue)."""
-        if (
-            req.tenant is not None
-            and self.tenant_home.get(req.tenant) is not None
-        ):
-            return self.tenant_home[req.tenant]
+    def _candidates(self, req: Request) -> list[int]:
         live = [j for j in range(self.n) if j not in self.retired] or list(
             range(self.n)
         )
-        return min(live, key=lambda j: (self.load[j], j))
+        if req.model is None or self.replica_model is None:
+            return live
+        cand = [j for j in live if self.replica_model[j] == req.model]
+        if not cand:
+            raise NoModelReplica(req.model)
+        return cand
+
+    def peek(self, req: Request) -> int:
+        """The replica ``route()`` would pick, without committing load
+        (admission control inspects the prospective target's queue)."""
+        cand = self._candidates(req)
+        if req.tenant is not None:
+            home = self.tenant_home.get(req.tenant)
+            if home is not None and home in cand:
+                return home
+        return min(cand, key=lambda j: (self.load[j], j))
 
     def route(self, req: Request) -> int:
         i = self.peek(req)
@@ -325,9 +368,12 @@ class ServeCluster:
 
     def __init__(
         self,
-        model: LM,
-        params,
+        model: Optional[LM] = None,
+        params=None,
         *,
+        models: Optional[Mapping[str, tuple]] = None,
+        placement: Optional[Mapping[str, int]] = None,
+        tenant_models: Optional[Mapping[str, str]] = None,
         mode: Mode | str = Mode.SPLIT,
         devices: Optional[Sequence] = None,
         batch_slots: int = 4,
@@ -346,10 +392,41 @@ class ServeCluster:
         admission: Optional[AdmissionPolicy] = None,
         failure: Optional[FailurePolicy] = None,
     ) -> None:
-        self.model = model
-        self.params = params
         self.devices = list(devices) if devices is not None else list(jax.devices())
         assert self.devices, "ServeCluster needs at least one device"
+        # ---- heterogeneous serving: {name: (model-or-config, params)}
+        if models is not None:
+            if model is not None or params is not None:
+                raise ValueError(
+                    "pass either (model, params) or models={...}, not both"
+                )
+            if not models:
+                raise ValueError("models={} names no model to serve")
+            self.models = {
+                name: self._norm_model_spec(name, spec)
+                for name, spec in models.items()
+            }
+            # first entry is the cluster's primary model: requests with no
+            # model pin default to it, and single-engine introspection
+            # (ReconfigController.for_cluster reads .params) sees it
+            self.model, self.params = next(iter(self.models.values()))
+        else:
+            if model is None or params is None:
+                raise ValueError(
+                    "ServeCluster needs (model, params) or models={...}"
+                )
+            self.models = None
+            self.model = model
+            self.params = params
+        self.tenant_models: dict[str, str] = dict(tenant_models or {})
+        if self.tenant_models and self.models is None:
+            raise ValueError("tenant_models= needs models={...}")
+        for t, name in self.tenant_models.items():
+            if name not in (self.models or {}):
+                raise ValueError(
+                    f"tenant_models[{t!r}] names unknown model {name!r}"
+                )
+        self._replica_model = self._plan_replicas(placement)
         self.seed = seed
         # paged kwargs pass straight through: split mode gets one
         # independent pool + prefix tree PER replica (tenant-affinity
@@ -377,7 +454,7 @@ class ServeCluster:
             kv_dtype=kv_dtype,
             weight_dtype=weight_dtype,
         )
-        self.router = Router(len(self.devices))
+        self.router = Router(len(self.devices), replica_model=self._replica_model)
         self.finished: list[Request] = []
         self.reconfigures: list[ReconfigureReport] = []
         # per-tenant default SamplingParams: a request submitted WITHOUT
@@ -405,7 +482,103 @@ class ServeCluster:
         self._cont_orig: dict[Request, Request] = {}
         self._seg_routes: dict[int, list] = {}  # replica -> current (t, req)s
         self.mode = Mode.parse(mode)
+        if self.mode is Mode.MERGE and self._hetero:
+            raise ValueError(
+                f"merge mode cannot fuse {len(self.models)} different "
+                "models into one engine; a heterogeneous cluster is "
+                "split-only"
+            )
         self._ensure_fabric(self.mode)
+
+    # ------------------------------------------------------------ hetero glue
+
+    @staticmethod
+    def _norm_model_spec(name: str, spec) -> tuple[LM, object]:
+        """Normalize one ``models=`` entry to ``(LM, params)``. Accepts
+        ``(LM, params)`` or ``(ArchConfig, params)`` — a config is wrapped
+        in a fresh LM, so callers can hand archs straight from
+        :func:`repro.configs.get_arch`."""
+        try:
+            head, params = spec
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"models[{name!r}] must be (model, params); got {type(spec)}"
+            ) from None
+        if isinstance(head, LM):
+            return head, params
+        if hasattr(head, "n_layers"):  # an ArchConfig
+            return LM(head), params
+        raise ValueError(
+            f"models[{name!r}][0] must be an LM or ArchConfig, "
+            f"got {type(head)}"
+        )
+
+    @property
+    def _hetero(self) -> bool:
+        return self.models is not None and len(self.models) > 1
+
+    def _plan_replicas(self, placement) -> Optional[list[str]]:
+        """Pin one model name per split replica (None = homogeneous).
+        ``placement`` overrides the planner's replica counts; either way
+        every model gets ≥1 replica and counts sum to the device count.
+        Assignment is contiguous in ``models`` insertion order — replica
+        index blocks, deterministic for tests and logs."""
+        if self.models is None:
+            return None
+        n = len(self.devices)
+        if placement is not None:
+            counts = dict(placement)
+            unknown = set(counts) - set(self.models)
+            if unknown:
+                raise ValueError(f"placement names unknown models {unknown}")
+            missing = set(self.models) - set(counts)
+            if missing or any(c < 1 for c in counts.values()):
+                raise ValueError(
+                    "placement must give every model at least one replica"
+                )
+            if sum(counts.values()) != n:
+                raise ValueError(
+                    f"placement sums to {sum(counts.values())}, "
+                    f"cluster has {n} devices"
+                )
+        else:
+            counts = plan_hetero_placement(
+                {name: m.cfg for name, (m, _) in self.models.items()}, n
+            )
+        out: list[str] = []
+        for name in self.models:
+            out.extend([name] * counts[name])
+        return out
+
+    def replica_plan(self) -> Optional[dict[str, list[int]]]:
+        """{model name: replica indices} for a heterogeneous cluster
+        (None when homogeneous) — the placement the planner or the
+        ``placement=`` override committed to."""
+        if self._replica_model is None:
+            return None
+        plan: dict[str, list[int]] = {name: [] for name in self.models}
+        for i, name in enumerate(self._replica_model):
+            plan[name].append(i)
+        return plan
+
+    def _resolve_model(self, req: Request) -> None:
+        """Pin a request to a named model before routing: explicit
+        ``req.model`` wins, then the tenant's ``tenant_models`` mapping,
+        then the primary (first) model. Unknown names raise
+        :class:`NoModelReplica` — routing a request onto a *different*
+        model would silently change the distribution it samples from."""
+        if self.models is None:
+            return
+        if req.model is None and req.tenant is not None:
+            req.model = self.tenant_models.get(req.tenant)
+        if req.model is None:
+            req.model = next(iter(self.models))
+        if req.model not in self.models:
+            raise NoModelReplica(
+                req.model,
+                f"model {req.model!r} is not in this cluster's placement "
+                f"({list(self.models)})",
+            )
 
     # ----------------------------------------------------------------- fabric
 
@@ -427,6 +600,12 @@ class ServeCluster:
                 e.reset()
             return True, 0
         if mode is Mode.MERGE:
+            if self._hetero:
+                raise ValueError(
+                    f"merge mode cannot fuse {len(self.models)} different "
+                    "models into one engine; a heterogeneous cluster is "
+                    "split-only"
+                )
             info = serving_mesh_info(self.devices)
             if info.model_size > 1:
                 # a fresh LM view carrying the mesh: decode/packed attention
@@ -442,13 +621,18 @@ class ServeCluster:
                 )
             ]
         else:
-            engines = [
-                ServeEngine(
-                    self.model, self.params, seed=self.seed + i,
-                    backend=DeviceBackend(d), **self._engine_kw,
+            engines = []
+            for i, d in enumerate(self.devices):
+                if self._replica_model is not None:
+                    m, p = self.models[self._replica_model[i]]
+                else:
+                    m, p = self.model, self.params
+                engines.append(
+                    ServeEngine(
+                        m, p, seed=self.seed + i,
+                        backend=DeviceBackend(d), **self._engine_kw,
+                    )
                 )
-                for i, d in enumerate(self.devices)
-            ]
         jax.block_until_ready([e.params for e in engines])
         jax.block_until_ready([e.cache for e in engines])
         self._fabrics[mode] = engines
@@ -475,6 +659,7 @@ class ServeCluster:
         split/merge switches and mid-stream reconfiguration."""
         if req.tenant is not None and req.tenant in self.tenant_defaults:
             req.apply_default_params(self.tenant_defaults[req.tenant])
+        self._resolve_model(req)  # raises NoModelReplica on unknown names
         if self.admission is not None:
             self._admission_gate(req)  # raises AdmissionRejected
         return self._submit_admitted(req)
@@ -591,6 +776,14 @@ class ServeCluster:
         in-flight slots) — ``run()`` drains before returning, and the
         scheduled mid-stream path measures its drain into the report."""
         mode = Mode.parse(mode)
+        if mode is Mode.MERGE and self._hetero:
+            # refuse BEFORE draining queues — a failed fabric build after
+            # the collect loop below would strand the carried requests
+            raise ValueError(
+                f"merge mode cannot fuse {len(self.models)} different "
+                "models into one engine; a heterogeneous cluster is "
+                "split-only"
+            )
         carried: list[Request] = []
         routed = self.mode is not Mode.MERGE  # split queues went through JSQ
         for idx, e in enumerate(self.engines):
@@ -698,7 +891,13 @@ class ServeCluster:
                     self.router.unassign(idx, r)
                     moved.append(r)
             for r in moved:
-                self._resubmit_rehomed(r)
+                try:
+                    self._resubmit_rehomed(r)
+                except NoModelReplica as exc:
+                    # every replica serving this request's model died —
+                    # close it out rather than continue on a survivor
+                    # running a DIFFERENT model (wrong distribution)
+                    self._mark_unroutable(r, exc)
             self.rehomed += len(moved)
 
     def _resubmit_rehomed(self, req: Request) -> None:
@@ -753,6 +952,15 @@ class ServeCluster:
                     orig.done_at = cont.done_at
                     del self._rehomed_map[orig]
 
+    def _mark_unroutable(self, req: Request, exc: NoModelReplica) -> None:
+        """Close out a request no live replica can serve (typed rejection,
+        same bookkeeping as an arrival-stream admission rejection)."""
+        req.finish_reason = "rejected"
+        req.reject_reason = exc.reason
+        req.done_at = time.perf_counter()
+        self._where.pop(req, None)
+        self.finished.append(req)
+
     # -------------------------------------------------------------------- run
 
     def _run_segment(
@@ -768,9 +976,20 @@ class ServeCluster:
         # serving thread, against the live queue (engine.run's ``gate=``) —
         # intake-time gating would wave an entire burst through because
         # the queue was empty when the slice was handed over.
+        rejected: list[Request] = []
         for _, req in seg_arrivals:
             if req.tenant is not None and req.tenant in self.tenant_defaults:
                 req.apply_default_params(self.tenant_defaults[req.tenant])
+            try:
+                self._resolve_model(req)
+            except NoModelReplica as exc:
+                self._mark_unroutable(req, exc)
+                rejected.append(req)
+        if rejected:
+            dropped = set(map(id, rejected))
+            seg_arrivals = [
+                (t, r) for t, r in seg_arrivals if id(r) not in dropped
+            ]
         if self.mode is Mode.MERGE:
             for _, req in seg_arrivals:
                 self._where[req] = engines[0]
@@ -784,7 +1003,14 @@ class ServeCluster:
         else:
             per: list[list] = [[] for _ in engines]
             for t, req in seg_arrivals:
-                i = self.router.route(req)
+                try:
+                    i = self.router.route(req)
+                except NoModelReplica as exc:
+                    # the pinned model's replicas are all dead: reject —
+                    # serving the request on a different model's survivor
+                    # would silently answer from the wrong distribution
+                    self._mark_unroutable(req, exc)
+                    continue
                 per[i].append((t, req))
                 self._where[req] = engines[i]
             self._seg_routes = {i: pl for i, pl in enumerate(per)}
@@ -998,6 +1224,8 @@ class ServeCluster:
             sample = self._window_sample(seg, seg_arr, elapsed)
             warm = self._other_mode(self.mode) in self._fabrics
             decision = ctl.observe(sample, warm_target=warm)
+            if decision is not None and decision.mode is Mode.MERGE and self._hetero:
+                decision = None  # un-mergeable: pinned models keep it split
             if decision is not None and decision.mode is not self.mode:
                 self._sync_rehomed()
                 rep = self.reconfigure(

@@ -38,7 +38,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Callable, Mapping, Optional
+from typing import Any, Callable, Mapping, Optional
 
 import numpy as np
 
@@ -61,6 +61,8 @@ __all__ = [
     "TenantPolicy",
     "WindowSample",
     "build_continuation",
+    "model_token_cost",
+    "plan_hetero_placement",
 ]
 
 
@@ -450,6 +452,78 @@ class FailurePolicy:
     tick_hook: Optional[Callable[[int], None]] = None
 
 
+def model_token_cost(cfg) -> float:
+    """Relative per-decode-token serving cost of one architecture.
+
+    The heterogeneous placement planner only needs *ratios* between the
+    models sharing a cluster, so this is a deliberately small perfmodel
+    keyed on what each family's decode step actually streams per token:
+
+    * attention families are HBM-bound on the KV read — cost ∝ layers ×
+      bytes-per-position row. MLA reads the compressed latent row
+      (``kv_lora_rank + rope_head_dim``); GQA reads ``2 × n_kv_heads ×
+      head_dim``.
+    * SSM families never touch a growing cache — the recurrence is
+      flops-bound on the state update: cost ∝ layers × inner width
+      (``d_model × expand``) × state size, scaled down by the hardware's
+      flops:HBM byte ratio stand-in (the constant only shifts SSM vs
+      attention weighting, not SSM vs SSM).
+
+    Hybrids take the max of their two lanes (the decode step runs both).
+    """
+    L = cfg.n_layers
+    attn_row = 0.0
+    if cfg.mla is not None:
+        attn_row = float(cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim)
+    elif cfg.family in ("dense", "moe", "hybrid"):
+        attn_row = float(2 * cfg.n_kv_heads * cfg.head_dim)
+    ssm_cost = 0.0
+    if cfg.ssm is not None:
+        inner = cfg.d_model * cfg.ssm.expand
+        # ~flops:bytes ratio stand-in; keeps SSM state math comparable
+        # to an HBM row read rather than dominating it.
+        ssm_cost = inner * cfg.ssm.state / 256.0
+    return float(L) * max(attn_row * 4.0, ssm_cost, 1.0)  # f32 bytes/row
+
+
+def plan_hetero_placement(
+    model_cfgs: Mapping[str, Any], n_devices: int
+) -> dict[str, int]:
+    """Replica counts per model for a split cluster of ``n_devices``.
+
+    Every model gets at least one replica (a model with zero replicas
+    cannot serve at all — availability beats proportionality); the
+    remaining devices go to models by largest remainder on their
+    :func:`model_token_cost` weights, so the expensive-per-token model
+    gets the capacity. Deterministic: ties break on insertion order of
+    ``model_cfgs``.
+    """
+    names = list(model_cfgs)
+    if not names:
+        raise ValueError("plan_hetero_placement: no models")
+    if n_devices < len(names):
+        raise ValueError(
+            f"{len(names)} models need at least {len(names)} devices; "
+            f"have {n_devices}"
+        )
+    costs = {n: model_token_cost(model_cfgs[n]) for n in names}
+    total = sum(costs.values())
+    counts = {n: 1 for n in names}
+    spare = n_devices - len(names)
+    if spare:
+        quotas = {n: spare * costs[n] / total for n in names}
+        floors = {n: int(math.floor(quotas[n])) for n in names}
+        for n in names:
+            counts[n] += floors[n]
+        left = spare - sum(floors.values())
+        by_rem = sorted(
+            names, key=lambda n: (-(quotas[n] - floors[n]), names.index(n))
+        )
+        for n in by_rem[:left]:
+            counts[n] += 1
+    return counts
+
+
 def build_continuation(req: Request) -> tuple[Request, int]:
     """(continuation, committed) for re-homing a partially-served request.
 
@@ -484,5 +558,6 @@ def build_continuation(req: Request) -> tuple[Request, int]:
             req.params, max_new=req.params.max_new - committed, seed=seed
         ),
         tenant=req.tenant,
+        model=req.model,
     )
     return cont, committed

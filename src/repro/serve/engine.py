@@ -73,9 +73,16 @@ Shared hot-path structure:
   computes (count-based termination never waits on token values);
 * the decode cache is donated through every dispatch — the engine never
   holds two copies of the KV cache;
-* SSM/hybrid/MLA archs (no positional KV cache to scatter into) keep the
-  legacy path: exact-length (SSM) or pow2-bucketed (attention) B=1 prefill
-  with per-slot insert, plus the same fused decode chunks.
+* MLA archs ride the same packed dispatch with a latent cache: one
+  compressed ``c_kv`` row (+ decoupled-RoPE key) per position instead of
+  per-head K/V, attention as the latent-MQA specialization of the ragged
+  kernel, the scatter writing one latent row per token;
+* SSM archs serve with NO positional cache at all: per-slot
+  ``(conv_state, ssd_state)``, chunked prefill as single-slot
+  state-passing scans through the same T-bucket ladder, constant
+  resident bytes (paged/quantized/speculate are typed refusals);
+* hybrid archs (attention + SSM interleaved) keep the legacy
+  per-request tier, flagged by a one-time RuntimeWarning per process.
 """
 
 from __future__ import annotations
@@ -152,6 +159,7 @@ class Request:
     temperature: Optional[float] = None  # deprecated: use params=...
     params: Optional[SamplingParams] = None
     tenant: Optional[str] = None  # cluster router affinity key (optional)
+    model: Optional[str] = None  # heterogeneous cluster: pin to a named model
     deadline_s: Optional[float] = None  # TTFT budget: shed if predicted to miss
     generated: list[int] = field(default_factory=list)
     n_generated: int = 0  # tokens sampled so far (values may still be in flight)
@@ -341,18 +349,26 @@ def _norm_kv_dtype(kv_dtype):
     """Engine-level kv_dtype normalization: ``None`` means the plain
     (scale-less) cache; ``"f32"``/``"float32"`` opts into the quantized-row
     machinery with an f32 store and identity scales (the bit-identity test
-    lane); anything else must resolve to int8."""
+    lane); ``"fp8"``/``"float8_e4m3"`` stores rows as float8_e4m3fn (same
+    per-row scales, wider dynamic range than int8 at the same byte cost);
+    anything else must resolve to int8."""
     if kv_dtype is None:
         return None
     if isinstance(kv_dtype, str):
         if kv_dtype in ("f32", "float32"):
             return jnp.float32
+        if kv_dtype in ("f8", "fp8", "float8", "float8_e4m3", "float8_e4m3fn"):
+            return jnp.float8_e4m3fn
         kv_dtype = "int8" if kv_dtype == "i8" else kv_dtype
     try:
         dt = jnp.dtype(kv_dtype)
     except TypeError as e:
         raise ValueError(f"unsupported kv_dtype: {kv_dtype!r}") from e
-    if dt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.int8)):
+    if dt not in (
+        jnp.dtype(jnp.float32),
+        jnp.dtype(jnp.int8),
+        jnp.dtype(jnp.float8_e4m3fn),
+    ):
         raise ValueError(f"unsupported kv_dtype: {kv_dtype!r}")
     return dt
 
@@ -372,6 +388,25 @@ _T_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128)
 # max admitting slots per pack (the P in the sub-cache gather); admissions
 # beyond it join the next tick's pack
 _PACK_WIDTH = 2
+
+# family tags already warned about riding the legacy tier (once per process)
+_LEGACY_WARNED: set = set()
+
+
+def _warn_legacy_tier(tag: str) -> None:
+    """One-time heads-up that a family serves on the slow legacy tier:
+    blocking B=1 prefill + full-cache insert + host-side first-token sample
+    per admission, no packed ragged dispatch. Correct, but every admission
+    stalls all decode slots."""
+    if tag in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(tag)
+    warnings.warn(
+        f"family {tag!r} has no packed path; serving on the legacy "
+        "prefill+insert tier (each admission blocks the decode slots)",
+        RuntimeWarning,
+        stacklevel=3,
+    )
 
 
 def _bucket_tokens(t: int) -> int:
@@ -427,13 +462,31 @@ class ServeEngine:
         self.B = batch_slots
         self.max_len = max_len
         self.seed = seed
-        # unified ragged dispatch needs a positional KV cache (dense/moe,
-        # non-MLA); other families keep the legacy prefill+insert path
+        # unified ragged dispatch covers positional-KV attention (dense/
+        # moe), the MLA compressed-latent cache, and single-slot SSM state
+        # chunks; only hybrid (attention+SSM interleaved per block) keeps
+        # the legacy prefill+insert path
         self.unified = model.supports_packed if unified is None else unified
         if self.unified and not model.supports_packed:
             raise ValueError(
-                f"family {model.cfg.family!r}/mla has no packed path"
+                f"family {model.family_tag!r} has no packed path "
+                "(pass unified=False to serve it on the legacy tier)"
             )
+        if not self.unified:
+            _warn_legacy_tier(model.family_tag)
+        # recurrent-state packs are single-stream: ONE slot per pack, so
+        # the whole [T] chunk is a contiguous run of that slot's positions
+        # and the state-passing chunk scan applies verbatim. Attention
+        # packs keep the multi-slot width.
+        self._pack_width = 1 if model.cfg.family == "ssm" else _PACK_WIDTH
+        # families whose admissions must ALWAYS ride the chunked packed
+        # tier (never the fused prefill+insert dispatch): quantized KV
+        # (the packed scatter is the one write path that quantizes rows)
+        # and SSM (exact-length B=1 prefill would compile per prompt
+        # length; the chunk scan reuses the T-bucket ladder instead)
+        self._chunk_only_admit = (
+            self.kv_dtype is not None or model.cfg.family == "ssm"
+        )
         self.prefill_budget = max(int(prefill_budget), 1)
         self.max_chunk = max(int(max_chunk), 1)
         if self.quant_kv and not self.unified:
@@ -453,6 +506,14 @@ class ServeEngine:
             if not self.unified:
                 raise ValueError(
                     "speculative decoding needs the unified packed dispatch"
+                )
+            if model.cfg.family == "ssm":
+                # attention verify rows are free to reject (stale K/V past
+                # cur_len is masked); a recurrent state has no position
+                # axis, so rejected draft rows would need a state rollback
+                raise ValueError(
+                    f"family {model.family_tag!r} cannot speculate: "
+                    "rejected drafts would need recurrent-state rollback"
                 )
             if hasattr(speculate, "propose"):  # a pre-built Drafter
                 self.spec = SpeculateConfig(
@@ -717,9 +778,22 @@ class ServeEngine:
 
         def step(carry, _):
             tok, cl, cache = carry
-            logits, cache = self.model.decode_step(
+            logits, new_cache = self.model.decode_step(
                 params, cache, {"tokens": tok[:, None]}, cl
             )
+            if self.model.cfg.family == "ssm":
+                # recurrent state has no position axis: an inactive (mid-
+                # prefill or empty) slot must not fold the batch's rider
+                # token into its state — mask its update. Attention slots
+                # instead rely on the next pack overwriting the garbage
+                # row at cur_len.
+                new_cache = jax.tree.map(
+                    lambda n, c: jnp.where(
+                        active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, c
+                    ),
+                    new_cache, cache,
+                )
+            cache = new_cache
             new = fused_sample(
                 logits[:, 0], spf[0], spi[0], spf[1], spi[1], cl,
                 btok, bval, smode=smode,
@@ -810,7 +884,7 @@ class ServeEngine:
         pack_slots = meta[3 * b :]
         logits, cache = self.model.packed_step(
             params, cache, desc[0], desc[1], desc[2],
-            out_rows=sample_idx, pack_slots=pack_slots,
+            out_rows=sample_idx, pack_slots=pack_slots, max_len=self.max_len,
         )
         sampled = fused_sample(
             logits, spf[0], spi[0], spf[1], spi[1], new_len - 1,
@@ -1157,7 +1231,7 @@ class ServeEngine:
                 [
                     self.slot_len,
                     np.zeros(2 * self.B, np.int32),
-                    np.zeros(_PACK_WIDTH, np.int32),
+                    np.zeros(self._pack_width, np.int32),
                 ]
             )
             for sm in smodes:
@@ -1206,10 +1280,10 @@ class ServeEngine:
                 if kk >= self.spec_k:
                     break
                 kk *= 2
-        if self.paged or self.quant_kv:
-            # paged and quantized-KV admission route every request through
-            # the packed tier (one code path writes the cache/pool) — no
-            # fused-admission shapes exist to warm
+        if self.paged or self._chunk_only_admit:
+            # paged, quantized-KV and SSM admission route every request
+            # through the packed tier (one code path writes the cache /
+            # pool / state) — no fused-admission shapes exist to warm
             return
         # the EXACT prompt buckets _admit_unified can produce: every power
         # of two up to the fused-tier limit, plus the max_len-capped bucket
@@ -1423,12 +1497,13 @@ class ServeEngine:
                 if self.spec is not None:
                     self._spec_ewma[slot] = 1.0  # optimistic: probe deep first
                     self.drafter.reset_slot(slot)
-                if self.quant_kv or s > self.prefill_budget:
-                    # chunked ragged tier. A quantized-KV engine routes
-                    # EVERY admission here: the fused tier's model.prefill
-                    # builds a scale-less B=1 cache that cannot insert into
-                    # a scale-bearing one, and the packed scatter is the one
-                    # code path that quantizes rows at write time.
+                if self._chunk_only_admit or s > self.prefill_budget:
+                    # chunked ragged tier. Quantized-KV and SSM engines
+                    # route EVERY admission here: the fused tier's
+                    # model.prefill builds a scale-less B=1 cache that
+                    # cannot insert into a scale-bearing one (quant), and
+                    # an exact-length prefill would compile per prompt
+                    # length (ssm — the chunk scan reuses the T buckets).
                     self.slot_len[slot] = 0
                     self.slot_fed[slot] = 0
                     self._prefilling.append(slot)
@@ -1528,13 +1603,14 @@ class ServeEngine:
         entries: list[tuple[int, int, int]] = []  # (token, LOCAL slot, pos)
         sample_idx = np.zeros(self.B, np.int32)
         sample_mask = np.zeros(self.B, bool)
-        # the pack spans at most _PACK_WIDTH admitting slots: attention work
-        # (and the compile count — one variant) scales with the pack, not
-        # the slot pool; later admissions simply join the next tick's pack
-        pack_slots = np.zeros(_PACK_WIDTH, np.int32)
+        # the pack spans at most _pack_width admitting slots: attention
+        # work (and the compile count — one variant) scales with the pack,
+        # not the slot pool; later admissions simply join the next tick's
+        # pack. SSM packs are width 1 (one contiguous stream per chunk).
+        pack_slots = np.zeros(self._pack_width, np.int32)
         budget = self.prefill_budget
         completed: list[int] = []
-        for local, i in enumerate(self._prefilling[:_PACK_WIDTH]):
+        for local, i in enumerate(self._prefilling[: self._pack_width]):
             if budget <= 0:
                 break
             pack_slots[local] = i

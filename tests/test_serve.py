@@ -519,3 +519,156 @@ def test_speculate_streaming_handle_matches_manual_greedy(small_model):
     assert list(h) == expect
     assert h.done and h.finish_reason == "length"
     assert eng.stream_stats.spec_ticks > 0
+
+
+# ===================== multi-architecture serving (MLA + SSM) ==============
+# The unified packed engine serves three cache disciplines: positional GQA
+# KV (covered above), compressed MLA latents, and constant-size SSM
+# recurrent state. The pins below hold the MLA/SSM paths to the same bar as
+# the dense one: packed == legacy bit-identical greedy streams under
+# mid-stream admissions, chunking, and cancellation.
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = get_arch("minicpm3-4b").reduced()  # dense + MLA latents
+    m = LM(cfg)
+    p = m.init(jax.random.key(3))
+    return cfg, m, p
+
+
+@pytest.fixture(scope="module")
+def ssm_model():
+    cfg = get_arch("falcon-mamba-7b").reduced()  # pure mamba1
+    m = LM(cfg)
+    p = m.init(jax.random.key(4))
+    return cfg, m, p
+
+
+@pytest.mark.parametrize("which", ["mla_model", "ssm_model"])
+def test_multiarch_matches_manual_greedy(request, which):
+    """The packed engine's greedy stream equals manual full-forward argmax
+    decoding — correctness against the model itself, not just engine
+    self-consistency."""
+    cfg, m, p = request.getfixturevalue(which)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    expect = _manual_greedy(cfg, m, p, prompt, 5)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    assert eng.unified  # both families default onto the packed tier now
+    eng.submit(Request(rid=0, prompt=prompt, params=SamplingParams(max_new=5)))
+    eng.run()
+    assert eng.finished[0].generated == expect
+
+
+@pytest.mark.parametrize("which", ["mla_model", "ssm_model"])
+def test_multiarch_packed_bit_identical_to_legacy(request, which):
+    """Packed vs legacy prefill+insert, 8 ragged requests through 3 slots
+    (mid-stream admissions), plus decode chunk depths {1,2,4,8}: pure
+    scheduling choices, bit-identical greedy streams."""
+    cfg, m, p = request.getfixturevalue(which)
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (5, 23, 11, 31, 8, 17, 26, 3)
+    ]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)  # legacy-tier note
+        legacy, _ = _run_engine(m, p, prompts, slots=3, max_len=64,
+                                unified=False)
+    uni, _ = _run_engine(m, p, prompts, slots=3, max_len=64, unified=True)
+    assert legacy == uni
+    for mc in (1, 2, 4, 8):
+        alt, _ = _run_engine(m, p, prompts, slots=3, max_len=64,
+                             unified=True, max_chunk=mc)
+        assert alt == uni
+
+
+@pytest.mark.parametrize("which", ["mla_model", "ssm_model"])
+def test_multiarch_cancel_preserves_neighbours(request, which):
+    """Mid-stream cancellation on the MLA/SSM packed paths: neighbours'
+    greedy streams stay bit-identical to an uncancelled run (for SSM this
+    pins the inactive-slot state masking — a decode chunk must not touch a
+    cancelled or mid-prefill slot's recurrent state)."""
+    cfg, m, p = request.getfixturevalue(which)
+    rng = np.random.default_rng(17)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+        for s in (6, 10, 8)
+    ]
+    ref, _ = _run_engine(m, p, prompts, slots=2, max_len=48, max_new=12)
+    eng = ServeEngine(m, p, batch_slots=2, max_len=48)
+    handles = [
+        eng.submit(Request(rid=i, prompt=pr, params=SamplingParams(max_new=12)))
+        for i, pr in enumerate(prompts)
+    ]
+    it = handles[0].tokens()
+    first3 = [next(it) for _ in range(3)]
+    handles[1].cancel()  # rid=1 is mid-decode in the other slot
+    rest = list(it)
+    assert first3 + rest == ref[0]
+    assert handles[1].finish_reason == "cancelled"
+    assert handles[2].result() == ref[2]  # freed slot reused, stream intact
+    cut = handles[1].request.generated
+    assert cut == ref[1][: len(cut)]
+
+
+def test_ssm_serving_constant_memory_no_blocks(ssm_model):
+    """SSM serving is the capacity flex: no block pool, and the resident
+    state bytes are independent of max_len AND of how much has been
+    served — recurrent state has no length axis to grow along."""
+    cfg, m, p = ssm_model
+    eng = ServeEngine(m, p, batch_slots=2, max_len=32)
+    tall = ServeEngine(m, p, batch_slots=2, max_len=256)
+    assert eng.pool is None and tall.pool is None  # zero KV blocks
+    assert eng.kv_bytes_resident() == tall.kv_bytes_resident()
+    before = eng.kv_bytes_resident()
+    assert before > 0
+    rng = np.random.default_rng(23)
+    for i, s in enumerate((5, 19, 9, 14)):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=s).astype(np.int32),
+            params=SamplingParams(max_new=6),
+        ))
+    eng.run()
+    assert len(eng.finished) == 4
+    assert eng.kv_bytes_resident() == before  # constant through serving
+
+
+@pytest.mark.parametrize("which", ["mla_model", "ssm_model"])
+def test_multiarch_rejects_paged_and_quantized(request, which):
+    """MLA latents and SSM state have no positional KV rows to page or
+    row-quantize: both knobs raise typed errors naming the family."""
+    cfg, m, p = request.getfixturevalue(which)
+    with pytest.raises(ValueError, match="no positional KV"):
+        ServeEngine(m, p, batch_slots=2, max_len=32, kv_dtype="int8")
+    with pytest.raises(ValueError, match="no positional KV|no paged path"):
+        ServeEngine(m, p, batch_slots=2, max_len=32, kv_block_size=8)
+
+
+def test_ssm_speculate_rejected(ssm_model):
+    """Rejected draft tokens would need recurrent-state rollback, which
+    the constant-memory cache cannot do — typed error at engine init."""
+    cfg, m, p = ssm_model
+    with pytest.raises(ValueError, match="cannot speculate"):
+        ServeEngine(m, p, batch_slots=2, max_len=32, speculate="ngram")
+
+
+def test_hybrid_legacy_tier_warning_and_unified_rejection():
+    """A family with no packed path: unified=True is a typed error that
+    names the escape hatch, unified=False serves with a one-time
+    RuntimeWarning naming the cost (admissions block the decode slots)."""
+    import repro.serve.engine as engine_mod
+
+    cfg = get_arch("zamba2-2.7b").reduced()  # hybrid: attention + mamba2
+    m = LM(cfg)
+    p = m.init(jax.random.key(5))
+    with pytest.raises(ValueError, match="no packed path"):
+        ServeEngine(m, p, batch_slots=2, max_len=32, unified=True)
+    engine_mod._LEGACY_WARNED.discard("hybrid")
+    with pytest.warns(RuntimeWarning, match="legacy prefill"):
+        ServeEngine(m, p, batch_slots=2, max_len=32, unified=False)
+    with warnings.catch_warnings():  # once per family, not per engine
+        warnings.simplefilter("error", RuntimeWarning)
+        ServeEngine(m, p, batch_slots=2, max_len=32, unified=False)

@@ -632,3 +632,246 @@ def test_cluster_replica_death_rehomes_bit_identical(small_model):
         cl.submit(r)
     cl.run()
     assert all(r.finish_reason == "length" for r in late)
+
+
+# =============================== heterogeneous (multi-model) clusters ======
+# models={name: (model, params)} pins one model per split replica; the
+# router dispatches per-request/per-tenant by model name, and failure
+# recovery refuses to re-home a request onto a survivor running a
+# DIFFERENT model (that would silently answer from the wrong
+# distribution). Merge mode is structurally impossible: one fused engine
+# cannot hold two parameterizations.
+
+
+@pytest.fixture(scope="module")
+def hetero_models():
+    cfg_a = get_arch("minicpm3-4b").reduced()  # dense + MLA
+    cfg_b = get_arch("falcon-mamba-7b").reduced()  # pure SSM
+    m_a, m_b = LM(cfg_a), LM(cfg_b)
+    p_a = m_a.init(jax.random.key(6))
+    p_b = m_b.init(jax.random.key(7))
+    return (cfg_a, m_a, p_a), (cfg_b, m_b, p_b)
+
+
+def _hetero_cluster(hetero_models, **kw):
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+    d0 = jax.devices()[0]
+    kw.setdefault("devices", [d0, d0])  # 2 replicas on 1 device (CI lane)
+    return ServeCluster(
+        models={"mla": (m_a, p_a), "ssm": (m_b, p_b)},
+        batch_slots=2, max_len=48, **kw,
+    )
+
+
+def test_hetero_router_model_dispatch():
+    """Router-level model pinning: JSQ within the compatible replica set,
+    tenant affinity honoured only when model-compatible, and an empty
+    compatible set raises the typed NoModelReplica."""
+    from repro.serve import NoModelReplica
+
+    r = Router(3, replica_model=["a", "a", "b"])
+
+    def req(rid, model=None, tenant=None):
+        return Request(rid=rid, prompt=np.zeros(4, np.int32), model=model,
+                       tenant=tenant, params=SamplingParams(max_new=4))
+
+    assert r.route(req(0, "b")) == 2
+    assert r.route(req(1, "a")) in (0, 1)
+    assert r.route(req(2, "a")) in (0, 1)
+    assert {r.route(req(3, "a")), r.route(req(4, "a"))} <= {0, 1}
+    # tenant homed on an "a" replica: a "b" request from the same tenant
+    # must not follow the home, and the home survives for "a" traffic
+    home = r.route(req(5, "a", tenant="t1"))
+    assert r.route(req(6, "b", tenant="t1")) == 2
+    assert r.route(req(7, "a", tenant="t1")) == home
+    # all replicas of a model retired -> typed rejection
+    r.retire(2)
+    with pytest.raises(NoModelReplica) as e:
+        r.route(req(8, "b"))
+    assert e.value.reason == "infeasible" and e.value.model == "b"
+
+
+def test_plan_hetero_placement_cost_weighted():
+    """Every model gets >= 1 replica; spare devices go to the costlier
+    model (MLA streams KV rows per token, SSM state is cheap); too few
+    devices is a ValueError."""
+    from repro.serve import model_token_cost, plan_hetero_placement
+
+    cfg_a = get_arch("minicpm3-4b").reduced()
+    cfg_b = get_arch("falcon-mamba-7b").reduced()
+    assert model_token_cost(cfg_a) > model_token_cost(cfg_b)
+    plan = plan_hetero_placement({"mla": cfg_a, "ssm": cfg_b}, 5)
+    assert plan["mla"] >= plan["ssm"] >= 1
+    assert sum(plan.values()) == 5
+    assert plan_hetero_placement({"mla": cfg_a, "ssm": cfg_b}, 2) == {
+        "mla": 1, "ssm": 1,
+    }
+    with pytest.raises(ValueError, match="at least"):
+        plan_hetero_placement({"mla": cfg_a, "ssm": cfg_b}, 1)
+
+
+def test_hetero_cluster_routes_by_tenant_and_model(hetero_models):
+    """Per-tenant model pinning end to end: each request serves on its
+    model's replica, bit-identical to a single-engine run of that model;
+    unpinned requests default to the primary (first) model."""
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+    cl = _hetero_cluster(hetero_models,
+                         tenant_models={"alice": "mla", "bob": "ssm"})
+    assert cl.replica_plan() == {"mla": [0], "ssm": [1]}
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, 200, size=s).astype(np.int32)
+               for s in (5, 9, 7, 11)]
+    cl.submit(Request(rid=0, prompt=prompts[0], tenant="alice",
+                      params=SamplingParams(max_new=5)))
+    cl.submit(Request(rid=1, prompt=prompts[1], tenant="bob",
+                      params=SamplingParams(max_new=5)))
+    cl.submit(Request(rid=2, prompt=prompts[2], model="ssm",
+                      params=SamplingParams(max_new=5)))
+    cl.submit(Request(rid=3, prompt=prompts[3],
+                      params=SamplingParams(max_new=5)))
+    cl.run()
+    got = {r.rid: (r.model, r.generated) for r in cl.finished}
+    refs = {
+        0: (m_a, p_a), 1: (m_b, p_b), 2: (m_b, p_b), 3: (m_a, p_a),
+    }
+    assert got[3][0] == "mla"  # unpinned -> primary model
+    for rid, (m, p) in refs.items():
+        solo = _engine_reference(
+            m, p,
+            [Request(rid=rid, prompt=prompts[rid],
+                     params=SamplingParams(max_new=5))],
+            batch_slots=2, max_len=48,
+        )
+        assert got[rid][1] == solo[rid], rid
+
+
+def test_hetero_unknown_model_typed_rejection(hetero_models):
+    """A model name outside the placement is a typed NoModelReplica (an
+    AdmissionRejected, reason 'infeasible') at submit time — and merge
+    mode is refused at init and at reconfigure."""
+    from repro.serve import AdmissionRejected, NoModelReplica
+
+    cl = _hetero_cluster(hetero_models)
+    with pytest.raises(NoModelReplica) as e:
+        cl.submit(Request(rid=0, prompt=np.zeros(4, np.int32), model="nope",
+                          params=SamplingParams(max_new=3)))
+    assert isinstance(e.value, AdmissionRejected)
+    assert e.value.reason == "infeasible" and e.value.model == "nope"
+    with pytest.raises(ValueError, match="split-only"):
+        cl.reconfigure(Mode.MERGE)
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+    with pytest.raises(ValueError, match="split-only"):
+        ServeCluster(models={"a": (m_a, p_a), "b": (m_b, p_b)},
+                     mode=Mode.MERGE, batch_slots=2, max_len=48,
+                     devices=[jax.devices()[0]] * 2)
+
+
+def test_hetero_replica_death_refuses_cross_model_rehoming(hetero_models):
+    """Kill the only replica of one model: its requests close out with a
+    typed rejection instead of continuing on the other model's survivor,
+    while the surviving model keeps serving bit-identically — and later
+    submissions for the dead model are refused at the gate."""
+    from repro.serve import NoModelReplica
+
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+    cl = _hetero_cluster(hetero_models)
+    rng = np.random.default_rng(43)
+    pr_ssm = rng.integers(0, 200, size=7).astype(np.int32)
+    pr_mla = rng.integers(0, 200, size=9).astype(np.int32)
+    doomed = Request(rid=0, prompt=pr_ssm, model="ssm",
+                     params=SamplingParams(max_new=5))
+    alive = Request(rid=1, prompt=pr_mla, model="mla",
+                    params=SamplingParams(max_new=5))
+    cl.submit(doomed)
+    cl.submit(alive)
+    cl._rehome_dead(cl.replica_plan()["ssm"][0])  # waiting, not yet served
+    cl.run()
+    assert doomed.finish_reason == "rejected"
+    assert doomed.reject_reason == "infeasible"
+    solo = _engine_reference(
+        m_a, p_a,
+        [Request(rid=1, prompt=pr_mla, params=SamplingParams(max_new=5))],
+        batch_slots=2, max_len=48,
+    )
+    assert alive.finish_reason == "length" and alive.generated == solo[1]
+    with pytest.raises(NoModelReplica):
+        cl.submit(Request(rid=2, prompt=pr_ssm, model="ssm",
+                          params=SamplingParams(max_new=3)))
+    # arrival-stream requests for the dead model reject instead of crash
+    late_ssm = Request(rid=3, prompt=pr_ssm, model="ssm",
+                       params=SamplingParams(max_new=3))
+    late_mla = Request(rid=4, prompt=pr_mla, model="mla",
+                       params=SamplingParams(max_new=3))
+    cl.run(arrivals=[(0.0, late_ssm), (0.0, late_mla)])
+    assert late_ssm.finish_reason == "rejected"
+    assert late_ssm.reject_reason == "infeasible"
+    assert late_mla.finish_reason == "length"
+    assert late_mla.generated == solo[1][:3]
+
+
+def test_hetero_run_controlled_never_merges(hetero_models):
+    """A decider demanding MERGE is overruled: pinned models keep the
+    fabric split, streams complete, and no reconfigure is recorded."""
+    from repro.serve import SwitchDecision
+
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+
+    class MergeHappy:
+        interval_s = 0.03
+        switched = []
+
+        def observe(self, sample, *, warm_target=False):
+            return SwitchDecision(
+                mode=Mode.MERGE, predicted_win_s=1.0, switch_cost_s=0.0
+            )
+
+        def note_switched(self, t, report=None):
+            self.switched.append(t)
+
+    cl = _hetero_cluster(hetero_models)
+    rng = np.random.default_rng(47)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, 200, size=6).astype(np.int32),
+                model=name, params=SamplingParams(max_new=4))
+        for i, name in enumerate(("mla", "ssm", "mla", "ssm"))
+    ]
+    ctl = MergeHappy()
+    stats = cl.run_controlled(
+        [(i * 0.01, r) for i, r in enumerate(reqs)], controller=ctl
+    )
+    assert cl.mode is Mode.SPLIT
+    assert ctl.switched == [] and stats.reconfigures == []
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+def test_hetero_cluster_two_devices_real_split(hetero_models):
+    """The 2-device CI lane: a real heterogeneous split (one model per
+    physical device) routes per-model and matches single-engine refs."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (the 2-device CI cluster lane)")
+    (cfg_a, m_a, p_a), (cfg_b, m_b, p_b) = hetero_models
+    cl = ServeCluster(
+        models={"mla": (m_a, p_a), "ssm": (m_b, p_b)},
+        batch_slots=2, max_len=48, devices=jax.devices()[:2],
+    )
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(0, 200, size=s).astype(np.int32)
+               for s in (6, 8, 10, 5)]
+    reqs = [
+        Request(rid=i, prompt=prompts[i], model=("mla", "ssm")[i % 2],
+                params=SamplingParams(max_new=5))
+        for i in range(4)
+    ]
+    for r in reqs:
+        cl.submit(r)
+    cl.run()
+    assert cl.router.assigned[0] == 2 and cl.router.assigned[1] == 2
+    for i, r in enumerate(reqs):
+        m, p = (m_a, p_a) if r.model == "mla" else (m_b, p_b)
+        solo = _engine_reference(
+            m, p,
+            [Request(rid=r.rid, prompt=prompts[i],
+                     params=SamplingParams(max_new=5))],
+            batch_slots=2, max_len=48,
+        )
+        assert r.generated == solo[r.rid]
